@@ -1,0 +1,75 @@
+"""Solver ablations: what each ingredient of the annealed multi-restart
+optimizer buys (restarts, annealing, warm starts), plus sensitivity of the
+plan to mis-estimated α — the "what-if" capability the paper highlights.
+
+    PYTHONPATH=src python -m benchmarks.ablations
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.makespan import BARRIERS_ALL_GLOBAL, makespan
+from repro.core.optimize import optimize_plan
+from repro.core.plan import uniform_plan
+from repro.core.platform import planetlab_platform
+
+from .common import emit, timeit
+
+
+def restarts_ablation():
+    """Quality vs restart count: hard-max plateaus demand multi-restart."""
+    p = planetlab_platform(8, alpha=1.0, seed=0)
+    ref = optimize_plan(p, "e2e_multi", n_restarts=32, steps=600).makespan
+    out = {}
+    for r in [1, 2, 4, 8, 16]:
+        us, res = timeit(
+            lambda r=r: optimize_plan(p, "e2e_multi", n_restarts=r, steps=400),
+            repeats=1,
+        )
+        out[r] = res.makespan / ref
+        emit(f"ablation_restarts{r}", us, f"vs_best={out[r]:.3f}")
+    return out
+
+
+def steps_ablation():
+    p = planetlab_platform(8, alpha=1.0, seed=0)
+    ref = optimize_plan(p, "e2e_multi", n_restarts=16, steps=800).makespan
+    out = {}
+    for steps in [50, 100, 200, 400]:
+        res = optimize_plan(p, "e2e_multi", n_restarts=16, steps=steps)
+        out[steps] = res.makespan / ref
+        emit(f"ablation_steps{steps}", 0.0, f"vs_best={out[steps]:.3f}")
+    return out
+
+
+def alpha_misestimation():
+    """Plan with a wrong α, evaluate under the true α — how forgiving is
+    the optimization to profiling error?  (The paper determines α by
+    profiling; this quantifies the stakes.)"""
+    out = {}
+    for true_alpha in [0.1, 1.0, 10.0]:
+        p_true = planetlab_platform(8, alpha=true_alpha, seed=0)
+        uni = makespan(p_true, uniform_plan(p_true), BARRIERS_ALL_GLOBAL)
+        row = {}
+        for assumed in [0.1, 1.0, 10.0]:
+            p_assumed = planetlab_platform(8, alpha=assumed, seed=0)
+            plan = optimize_plan(p_assumed, "e2e_multi",
+                                 n_restarts=12, steps=300).plan
+            row[assumed] = makespan(p_true, plan, BARRIERS_ALL_GLOBAL) / uni
+        out[true_alpha] = row
+        emit(
+            f"ablation_alpha_true{true_alpha}", 0.0,
+            ";".join(f"assumed{a}={v:.3f}" for a, v in row.items()),
+        )
+    return out
+
+
+def main():
+    print("name,us_per_call,derived")
+    restarts_ablation()
+    steps_ablation()
+    alpha_misestimation()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Benchmark infrastructure: timing + CSV row emission.
+
+Every benchmark emits ``name,us_per_call,derived`` rows (derived = the
+figure's headline quantity, e.g. a reduction percentage or an R²).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def timeit(fn: Callable, repeats: int = 3) -> Tuple[float, object]:
+    """us/call of fn() (best of ``repeats``), plus the last result."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, out
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def flush_csv(path: str):
+    with open(path, "w") as f:
+        f.write("name,us_per_call,derived\n")
+        for n, u, d in ROWS:
+            f.write(f"{n},{u:.1f},{d}\n")

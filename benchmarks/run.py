@@ -1,0 +1,60 @@
+"""Benchmark driver — one benchmark per paper figure plus the roofline
+table.  Emits ``name,us_per_call,derived`` CSV rows (also saved to
+``reports/benchmarks.csv``) and a JSON dump of full results.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from . import paper_figures as F
+from .common import flush_csv
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-roofline", action="store_true",
+                    help="skip the dry-run-report-based roofline table")
+    ap.add_argument("--out", default="reports")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    results = {}
+    print("name,us_per_call,derived")
+    results["fig4"] = F.fig4_validation()
+    results["fig5"] = F.fig5_e2e_vs_myopic()
+    results["fig6"] = F.fig6_single_vs_multi()
+    results["fig7"] = F.fig7_barriers()
+    results["fig8"] = F.fig8_environments()
+    results["fig9"] = F.fig9_applications()
+    results["fig10"] = F.fig10_dynamics()
+    results["fig12"] = F.fig12_replication()
+
+    if not args.skip_roofline and os.path.isdir(
+        os.path.join(args.out, "dryrun")
+    ):
+        from . import roofline
+
+        rows = roofline.run(os.path.join(args.out, "dryrun"),
+                            os.path.join(args.out, "roofline.md"))
+        results["roofline"] = rows
+
+    flush_csv(os.path.join(args.out, "benchmarks.csv"))
+
+    def default(o):
+        import numpy as np
+
+        if isinstance(o, (np.floating, np.integer)):
+            return float(o)
+        return str(o)
+
+    with open(os.path.join(args.out, "benchmarks.json"), "w") as f:
+        json.dump(results, f, indent=1, default=default)
+    print(f"\n[done] results in {args.out}/benchmarks.{{csv,json}}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Apply the paper's planner to multi-pod LM training decisions:
+
+1. cross-pod gradient-reduction ownership under heterogeneous DCN,
+2. MoE dispatch capacity planning under heterogeneous expert shards,
+3. geo-planned corpus ingest vs myopic nearest-source pulls.
+
+    PYTHONPATH=src python examples/plan_multipod_training.py
+"""
+import numpy as np
+
+from repro.core.collective_plan import plan_cross_pod_reduction
+from repro.core.moe_plan import plan_moe_dispatch
+from repro.core.optimize import optimize_plan
+from repro.core.platform import tpu_pod_platform
+from repro.configs import get_config
+
+# --- 1. gradient reduction: pod 2's DCN is degraded to 25% --------------------
+cfg = get_config("llama4-scout-17b-a16e")
+grad_mb = cfg.n_params() * 4 / 1e6 / 256  # f32 grads, per-chip shard
+rp = plan_cross_pod_reduction(
+    grad_mb=grad_mb,
+    pod_dcn_bw_mbps=[6400, 6400, 1600, 6400],
+    n_elements=cfg.n_params() // 256,
+)
+print("[collective] planned pod ownership:", np.round(rp.fractions, 3))
+print(f"[collective] modeled reduction time {rp.est_time_s*1e3:.1f} ms "
+      f"vs uniform {rp.uniform_time_s*1e3:.1f} ms "
+      f"({rp.speedup_vs_uniform:.2f}x)")
+
+# --- 2. MoE dispatch: one expert pod is throttled ------------------------------
+mp = plan_moe_dispatch(
+    tokens_mb_per_shard=64.0,
+    n_token_shards=8,
+    group_pod=[0, 0, 0, 0, 1, 1, 1, 1],
+    shard_pod=[0, 0, 0, 0, 1, 1, 1, 1],
+    top_k=1,
+    expert_flops_rate_mbps=[25000] * 4 + [10000] * 4,
+)
+print("\n[moe] planned group fractions:", np.round(mp.group_fractions, 3))
+print(f"[moe] dispatch+compute {mp.est_time_s*1e3:.1f} ms vs uniform "
+      f"{mp.uniform_time_s*1e3:.1f} ms ({mp.speedup_vs_uniform:.2f}x)")
+print("[moe] router bias to load at init:", np.round(mp.router_bias, 2))
+
+# --- 3. corpus ingest ----------------------------------------------------------
+platform = tpu_pod_platform(n_pods=4, hosts_per_pod=4, compute_jitter=0.4, seed=1)
+e2e = optimize_plan(platform, "e2e_multi", n_restarts=8, steps=300)
+myo = optimize_plan(platform, "myopic_push", n_restarts=8, steps=300)
+print(f"\n[ingest] e2e-planned makespan {e2e.makespan:.1f}s "
+      f"vs myopic push {myo.makespan:.1f}s "
+      f"({1 - e2e.makespan/myo.makespan:.0%} faster)")

@@ -1,0 +1,15 @@
+"""Serve a small model with batched requests through the
+continuous-batching engine.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve as serve_launcher
+
+serve_launcher.main([
+    "--arch", "qwen3-1.7b",
+    "--reduced",
+    "--requests", "12",
+    "--slots", "4",
+    "--max-len", "128",
+    "--max-new", "16",
+])

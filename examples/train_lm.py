@@ -1,0 +1,34 @@
+"""End-to-end training driver: train a ~20M-param Qwen3-family model for a
+few hundred steps on CPU with geo-planned ingest, async checkpointing and
+resume-after-kill.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+This is a thin veneer over ``repro.launch.train`` (the production
+launcher); it also demonstrates the kill/resume cycle by checkpointing
+every 50 steps — re-running the same command continues from the newest
+committed checkpoint.
+"""
+import argparse
+import sys
+
+from repro.launch import train as train_launcher
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+args = ap.parse_args()
+
+train_launcher.main([
+    "--arch", "qwen3-1.7b",
+    "--reduced",
+    "--steps", str(args.steps),
+    "--batch", "8",
+    "--seq", "128",
+    "--lr", "1e-3",
+    "--ckpt-dir", args.ckpt_dir,
+    "--ckpt-every", "50",
+    "--resume", "auto",
+    "--geo-ingest",
+    "--log-every", "10",
+])

@@ -1,0 +1,56 @@
+"""GeoPlan core — the paper's contribution as a composable JAX library.
+
+* :mod:`repro.core.platform` — tripartite platform model (§2.1).
+* :mod:`repro.core.plan` — valid execution plans (§2.2, Eqs 1–3).
+* :mod:`repro.core.makespan` — differentiable makespan model (Eqs 4–14,
+  G/L/P barrier semantics).
+* :mod:`repro.core.optimize` — plan optimization (§2.3; MIP replaced by an
+  annealed smooth-max multi-restart gradient solver, validated by brute
+  force and by the paper's own linearization in :mod:`repro.core.milp`).
+* :mod:`repro.core.simulate` — chunk-granular discrete-event executor with
+  the paper's dynamic mechanisms (speculation, stealing) plus stragglers,
+  failures and replication.
+* :mod:`repro.core.collective_plan` — the technique applied to multi-pod
+  gradient aggregation.
+* :mod:`repro.core.moe_plan` — the technique applied to MoE dispatch.
+"""
+from .makespan import (
+    BARRIERS_ALL_GLOBAL,
+    BARRIERS_ALL_PIPELINED,
+    BARRIERS_GGL,
+    makespan,
+    makespan_model,
+    phase_breakdown,
+)
+from .optimize import MODES, PlanResult, brute_force_plan, optimize_plan
+from .plan import ExecutionPlan, local_push_plan, uniform_plan
+from .platform import (
+    Platform,
+    planetlab_platform,
+    tpu_pod_platform,
+    two_cluster_example,
+)
+from .simulate import SimConfig, SimResult, simulate
+
+__all__ = [
+    "BARRIERS_ALL_GLOBAL",
+    "BARRIERS_ALL_PIPELINED",
+    "BARRIERS_GGL",
+    "ExecutionPlan",
+    "MODES",
+    "Platform",
+    "PlanResult",
+    "SimConfig",
+    "SimResult",
+    "brute_force_plan",
+    "local_push_plan",
+    "makespan",
+    "makespan_model",
+    "optimize_plan",
+    "phase_breakdown",
+    "planetlab_platform",
+    "simulate",
+    "tpu_pod_platform",
+    "two_cluster_example",
+    "uniform_plan",
+]

@@ -1,0 +1,395 @@
+"""Model-driven execution-plan optimization (paper §2.3 and §4).
+
+The paper linearizes the makespan model into a Mixed Integer Program and
+solves it with Gurobi.  An MIP solver is neither available here nor
+JAX-idiomatic, so we keep the paper's *model* exactly (Equations 1–14) and
+replace the *solver*:
+
+* validity (Equations 1–3) holds **by construction** — plans are parametrized
+  by row-softmax logits for ``x`` and softmax logits for ``y``;
+* every ``max`` is annealed through ``tau·logsumexp(·/tau)`` with the
+  temperature ``tau`` geometrically decayed inside a single compiled
+  ``lax.scan`` loop (so gradients reach every branch early and the objective
+  converges to the exact piecewise model late);
+* we run many Adam restarts in parallel with ``vmap`` (random inits plus the
+  paper's heuristic plans as warm starts), then re-evaluate every candidate
+  under the **exact hard-max** model and keep the best.
+
+On small instances this is validated against brute-force grid search
+(``brute_force_plan``) and against the separable-programming linearization of
+the paper (:mod:`repro.core.milp`); on the paper's scenarios it reproduces
+the §1.3 worked example exactly and the headline §4.2/§4.3 reductions.
+
+Planner modes (mirroring the paper's §4 comparisons):
+
+* ``uniform``        — Equations 15/16, no optimization.
+* ``local_push``     — Hadoop-like locality push + uniform shuffle.
+* ``myopic_push``    — minimize *push duration* only (locally optimal).
+* ``myopic_multi``   — myopic push, then myopic shuffle given that push.
+* ``e2e_push``       — minimize end-to-end makespan controlling ``x`` only.
+* ``e2e_shuffle``    — minimize makespan controlling ``y`` only.
+* ``e2e_multi``      — the paper's proposed optimization: makespan over both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .makespan import (
+    BARRIERS_ALL_GLOBAL,
+    hard_ops,
+    makespan,
+    phase_breakdown,
+    phase_model,
+    smooth_ops,
+)
+from .plan import ExecutionPlan, local_push_plan, uniform_plan
+from .platform import Platform
+
+__all__ = ["PlanResult", "optimize_plan", "brute_force_plan", "MODES"]
+
+MODES = (
+    "uniform",
+    "local_push",
+    "myopic_push",
+    "myopic_multi",
+    "e2e_push",
+    "e2e_shuffle",
+    "e2e_multi",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanResult:
+    plan: ExecutionPlan
+    makespan: float
+    breakdown: Dict[str, float]
+    mode: str
+    barriers: Tuple[str, str, str]
+    objective: float  # value of the mode's own objective (== makespan for e2e)
+
+    def __repr__(self):
+        return (
+            f"PlanResult(mode={self.mode}, barriers={''.join(self.barriers)}, "
+            f"makespan={self.makespan:.1f}s)"
+        )
+
+
+# ---------------------------------------------------------------------------
+# objectives
+# ---------------------------------------------------------------------------
+
+def _push_duration(D, B_sm, x, mx):
+    return mx((D[:, None] * x) / B_sm)
+
+
+def _shuffle_duration(D, B_mr, alpha, x, y, mx):
+    map_in = x.T @ D
+    return mx(alpha * (map_in[:, None] * y[None, :]) / B_mr)
+
+
+def _objective_fn(mode: str, barriers) -> Callable:
+    """Return loss(arrays, x, y, mx, pmax) -> scalar for the given mode."""
+
+    def e2e(arrs, x, y, mx, pmax):
+        D, B_sm, B_mr, C_m, C_r, alpha = arrs
+        out = phase_model(D, B_sm, B_mr, C_m, C_r, alpha, x, y, barriers, mx, pmax)
+        return out["makespan"]
+
+    def push(arrs, x, y, mx, pmax):
+        D, B_sm, _, _, _, _ = arrs
+        return _push_duration(D, B_sm, x, mx)
+
+    def shuffle(arrs, x, y, mx, pmax):
+        D, _, B_mr, _, _, alpha = arrs
+        return _shuffle_duration(D, B_mr, alpha, x, y, mx)
+
+    return {"e2e": e2e, "push": push, "shuffle": shuffle}[mode]
+
+
+# ---------------------------------------------------------------------------
+# the annealed multi-restart solver
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("loss_kind", "barriers", "opt_x", "opt_y", "steps")
+)
+def _solve_batch(
+    arrs,
+    logits_x0,  # (R, nS, nM)
+    logits_y0,  # (R, nR)
+    x_fixed,  # (nS, nM) used when opt_x=False
+    y_fixed,  # (nR,)    used when opt_y=False
+    scale,  # scalar — typical makespan, sets the tau schedule units
+    loss_kind: str,
+    barriers: Tuple[str, str, str],
+    opt_x: bool,
+    opt_y: bool,
+    steps: int,
+    lr: float = 0.08,
+    tau0_frac: float = 0.3,
+    tau1_frac: float = 1e-3,
+):
+    """Run ``R`` Adam restarts of ``steps`` annealed iterations; return the
+    final (x, y) per restart plus their exact hard-model objective values."""
+    loss_core = _objective_fn(loss_kind, barriers)
+
+    def build(params):
+        x = jax.nn.softmax(params["x"], axis=-1) if opt_x else x_fixed
+        y = jax.nn.softmax(params["y"], axis=-1) if opt_y else y_fixed
+        return x, y
+
+    def loss(params, tau):
+        mx, pmax = smooth_ops(tau)
+        x, y = build(params)
+        return loss_core(arrs, x, y, mx, pmax) / scale
+
+    def one_restart(lx0, ly0):
+        params = {"x": lx0, "y": ly0}
+        m0 = jax.tree.map(jnp.zeros_like, params)
+        v0 = jax.tree.map(jnp.zeros_like, params)
+
+        def step(carry, t):
+            params, m, v = carry
+            frac = t / max(steps - 1, 1)
+            tau = scale * tau0_frac * (tau1_frac / tau0_frac) ** frac
+            g = jax.grad(loss)(params, tau)
+            b1, b2, eps = 0.9, 0.999, 1e-8
+            m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+            v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+            t1 = t + 1.0
+            mhat = jax.tree.map(lambda a: a / (1 - b1**t1), m)
+            vhat = jax.tree.map(lambda a: a / (1 - b2**t1), v)
+            params = jax.tree.map(
+                lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
+                params, mhat, vhat,
+            )
+            return (params, m, v), None
+
+        (params, _, _), _ = jax.lax.scan(
+            step, (params, m0, v0), jnp.arange(steps, dtype=jnp.float32)
+        )
+        x, y = build(params)
+        mx, pmax = hard_ops()
+        exact = loss_core(arrs, x, y, mx, pmax)
+        return x, y, exact
+
+    return jax.vmap(one_restart)(logits_x0, logits_y0)
+
+
+def _initial_logits(platform: Platform, n_restarts: int, seed: int):
+    """Random inits plus deterministic warm starts (uniform, local push,
+    bandwidth-greedy)."""
+    rng = np.random.default_rng(seed)
+    nS, nM, nR = platform.nS, platform.nM, platform.nR
+    eps = 1e-9
+
+    warm_x = [
+        np.zeros((nS, nM)),  # uniform
+        np.log(local_push_plan(platform).x + eps),  # locality
+        np.log(platform.B_sm / platform.B_sm.max() + eps),  # bandwidth-greedy
+    ]
+    warm_y = [
+        np.zeros(nR),  # uniform
+        np.log(platform.C_r / platform.C_r.max() + eps),  # compute-greedy
+        np.log(np.mean(platform.B_mr, axis=0) / platform.B_mr.max() + eps),
+    ]
+    lx = list(warm_x)
+    ly = list(warm_y)
+    while len(lx) < n_restarts:
+        sigma = rng.uniform(0.3, 3.0)
+        lx.append(rng.normal(0.0, sigma, size=(nS, nM)))
+        ly.append(rng.normal(0.0, sigma, size=(nR,)))
+    lx = np.stack(lx[:n_restarts]).astype(np.float32)
+    ly = np.stack(ly[:n_restarts]).astype(np.float32)
+    return jnp.asarray(lx), jnp.asarray(ly)
+
+
+def _run_solver(
+    platform: Platform,
+    loss_kind: str,
+    barriers,
+    opt_x: bool,
+    opt_y: bool,
+    x_fixed: Optional[np.ndarray],
+    y_fixed: Optional[np.ndarray],
+    n_restarts: int,
+    steps: int,
+    seed: int,
+) -> Tuple[np.ndarray, np.ndarray, float]:
+    arrs = tuple(
+        jnp.asarray(a, dtype=jnp.float32) if isinstance(a, np.ndarray) else float(a)
+        for a in platform.as_arrays()
+    )
+    if x_fixed is None:
+        x_fixed = uniform_plan(platform).x
+    if y_fixed is None:
+        y_fixed = uniform_plan(platform).y
+    scale = max(
+        makespan(platform, uniform_plan(platform), barriers=barriers), 1e-6
+    )
+    lx, ly = _initial_logits(platform, n_restarts, seed)
+    xs, ys, exact = _solve_batch(
+        arrs,
+        lx,
+        ly,
+        jnp.asarray(x_fixed, jnp.float32),
+        jnp.asarray(y_fixed, jnp.float32),
+        jnp.float32(scale),
+        loss_kind,
+        tuple(barriers),
+        opt_x,
+        opt_y,
+        steps,
+    )
+    best = int(jnp.argmin(exact))
+    x = np.asarray(xs[best], dtype=np.float64)
+    y = np.asarray(ys[best], dtype=np.float64)
+    # renormalize against float32 round-off so the plan validates exactly
+    x = np.clip(x, 0.0, None)
+    x /= x.sum(axis=1, keepdims=True)
+    y = np.clip(y, 0.0, None)
+    y /= y.sum()
+    return x, y, float(exact[best])
+
+
+# ---------------------------------------------------------------------------
+# public entry point
+# ---------------------------------------------------------------------------
+
+def optimize_plan(
+    platform: Platform,
+    mode: str = "e2e_multi",
+    barriers: Tuple[str, str, str] = BARRIERS_ALL_GLOBAL,
+    n_restarts: int = 24,
+    steps: int = 500,
+    seed: int = 0,
+    fixed_x: Optional[np.ndarray] = None,
+) -> PlanResult:
+    """Produce an execution plan for ``platform`` with the given planner
+    ``mode`` (see module docstring), evaluated under ``barriers``.
+
+    ``fixed_x`` pins the push matrix for the shuffle-only modes
+    (``e2e_shuffle``); defaults to the uniform push of Equation 15.  This is
+    how the collective/MoE planners express "the push side is dictated by
+    the system" (identity routing).
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    barriers = tuple(barriers)
+
+    if mode == "uniform":
+        plan = uniform_plan(platform)
+        obj = makespan(platform, plan, barriers)
+    elif mode == "local_push":
+        plan = local_push_plan(platform)
+        obj = makespan(platform, plan, barriers)
+    elif mode == "myopic_push":
+        x, _, obj = _run_solver(
+            platform, "push", barriers, True, False, None, None,
+            n_restarts, steps, seed,
+        )
+        plan = ExecutionPlan(x=x, y=uniform_plan(platform).y, meta=mode)
+    elif mode == "myopic_multi":
+        # locally-optimal push, then locally-optimal shuffle given that push
+        x, _, _ = _run_solver(
+            platform, "push", barriers, True, False, None, None,
+            n_restarts, steps, seed,
+        )
+        _, y, obj = _run_solver(
+            platform, "shuffle", barriers, False, True, x, None,
+            n_restarts, steps, seed + 1,
+        )
+        plan = ExecutionPlan(x=x, y=y, meta=mode)
+    elif mode == "e2e_push":
+        x, _, obj = _run_solver(
+            platform, "e2e", barriers, True, False, None, None,
+            n_restarts, steps, seed,
+        )
+        plan = ExecutionPlan(x=x, y=uniform_plan(platform).y, meta=mode)
+    elif mode == "e2e_shuffle":
+        _, y, obj = _run_solver(
+            platform, "e2e", barriers, False, True, fixed_x, None,
+            n_restarts, steps, seed,
+        )
+        x = uniform_plan(platform).x if fixed_x is None else np.asarray(fixed_x)
+        plan = ExecutionPlan(x=x, y=y, meta=mode)
+    else:  # e2e_multi
+        x, y, obj = _run_solver(
+            platform, "e2e", barriers, True, True, None, None,
+            n_restarts, steps, seed,
+        )
+        plan = ExecutionPlan(x=x, y=y, meta=mode)
+
+    return PlanResult(
+        plan=plan,
+        makespan=makespan(platform, plan, barriers),
+        breakdown=phase_breakdown(platform, plan, barriers),
+        mode=mode,
+        barriers=barriers,
+        objective=obj,
+    )
+
+
+# ---------------------------------------------------------------------------
+# brute force (validation on tiny instances)
+# ---------------------------------------------------------------------------
+
+def brute_force_plan(
+    platform: Platform,
+    barriers: Tuple[str, str, str] = BARRIERS_ALL_GLOBAL,
+    grid: int = 20,
+) -> PlanResult:
+    """Exhaustive grid search over plans; only feasible for tiny platforms
+    (it enumerates a simplex grid per source row and for ``y``)."""
+    nS, nM, nR = platform.nS, platform.nM, platform.nR
+    if nM > 3 or nR > 3 or nS > 3:
+        raise ValueError("brute force only supported for <=3 nodes per tier")
+
+    def simplex_grid(dim):
+        pts = []
+        for comb in itertools.product(range(grid + 1), repeat=dim - 1):
+            if sum(comb) <= grid:
+                last = grid - sum(comb)
+                pts.append(tuple(c / grid for c in comb) + (last / grid,))
+        return np.array(pts)
+
+    rows = simplex_grid(nM)  # candidate rows for each source
+    ys = simplex_grid(nR)
+
+    arrs = platform.as_arrays()
+    mx, pmax = hard_ops()
+    best = (np.inf, None, None)
+    # enumerate the cross product of row choices (vectorized over y)
+    ys_j = jnp.asarray(ys)
+
+    @jax.jit
+    def eval_ys(x):
+        def f(y):
+            out = phase_model(*[jnp.asarray(a) for a in arrs[:5]],
+                              arrs[5], x, y, tuple(barriers), mx, pmax)
+            return out["makespan"]
+        return jax.vmap(f)(ys_j)
+
+    for rows_choice in itertools.product(range(len(rows)), repeat=nS):
+        x = np.stack([rows[r] for r in rows_choice])
+        vals = np.asarray(eval_ys(jnp.asarray(x)))
+        k = int(vals.argmin())
+        if vals[k] < best[0]:
+            best = (float(vals[k]), x, ys[k])
+
+    plan = ExecutionPlan(x=best[1], y=best[2], meta="brute_force")
+    return PlanResult(
+        plan=plan,
+        makespan=best[0],
+        breakdown=phase_breakdown(platform, plan, barriers),
+        mode="brute_force",
+        barriers=tuple(barriers),
+        objective=best[0],
+    )

@@ -1,0 +1,343 @@
+"""Platform model for distributed MapReduce execution (paper §2.1).
+
+The distributed platform is a tripartite graph ``S ∪ M ∪ R`` (data sources,
+mappers, reducers).  Node ``i ∈ M ∪ R`` has a compute capacity ``C_i`` in
+bytes/second of *incoming* data processed; edge ``(i, j)`` has bandwidth
+``B_ij``; data ``D_i`` originates at source ``i``; the application is modeled
+by a single expansion factor ``alpha`` = (map output bytes) / (map input
+bytes).
+
+All quantities in this module use **MB** and **seconds** (so rates are MB/s),
+which keeps the numbers well-scaled for the gradient-based optimizer.
+
+Generators are provided for
+
+* the two-cluster worked example of paper §1.3,
+* the PlanetLab-derived environments of §4.1 (1 / 2 / 4 / 8 data centers,
+  Table 1 bandwidth ranges, 9–90 MB/s compute rates), and
+* a TPU-pod environment (ICI-connected pods over a slower DCN), which is the
+  geo-distributed platform the rest of this framework plans for.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Platform",
+    "two_cluster_example",
+    "planetlab_platform",
+    "tpu_pod_platform",
+    "PLANETLAB_SITES",
+    "TABLE1_BANDWIDTH_KBPS",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Platform:
+    """A tripartite MapReduce platform (paper Figure 3).
+
+    Attributes:
+      D:     (nS,) data originating at each source, MB.
+      B_sm:  (nS, nM) push-link bandwidth, MB/s.
+      B_mr:  (nM, nR) shuffle-link bandwidth, MB/s.
+      C_m:   (nM,) mapper compute rate, MB/s of input data.
+      C_r:   (nR,) reducer compute rate, MB/s of input data.
+      alpha: map output/input expansion factor.
+      cluster_s/m/r: integer cluster (site) id per node — used by "local"
+        heuristic plans and by the replication model; not used by the
+        optimizer itself.
+    """
+
+    D: np.ndarray
+    B_sm: np.ndarray
+    B_mr: np.ndarray
+    C_m: np.ndarray
+    C_r: np.ndarray
+    alpha: float
+    cluster_s: np.ndarray
+    cluster_m: np.ndarray
+    cluster_r: np.ndarray
+    name: str = "platform"
+
+    def __post_init__(self):
+        D = np.asarray(self.D, dtype=np.float64)
+        object.__setattr__(self, "D", D)
+        for field in ("B_sm", "B_mr", "C_m", "C_r"):
+            object.__setattr__(
+                self, field, np.asarray(getattr(self, field), dtype=np.float64)
+            )
+        nS, nM = self.B_sm.shape
+        nM2, nR = self.B_mr.shape
+        if nM != nM2:
+            raise ValueError(f"B_sm/B_mr mapper dims disagree: {nM} vs {nM2}")
+        if self.D.shape != (nS,):
+            raise ValueError(f"D shape {self.D.shape} != ({nS},)")
+        if self.C_m.shape != (nM,):
+            raise ValueError(f"C_m shape {self.C_m.shape} != ({nM},)")
+        if self.C_r.shape != (nR,):
+            raise ValueError(f"C_r shape {self.C_r.shape} != ({nR},)")
+        if np.any(self.D < 0):
+            raise ValueError("negative data size")
+        for field in ("B_sm", "B_mr", "C_m", "C_r"):
+            if np.any(getattr(self, field) <= 0):
+                raise ValueError(f"{field} must be strictly positive")
+        if self.alpha <= 0:
+            raise ValueError("alpha must be > 0")
+
+    # -- sizes ------------------------------------------------------------
+    @property
+    def nS(self) -> int:
+        return self.D.shape[0]
+
+    @property
+    def nM(self) -> int:
+        return self.B_sm.shape[1]
+
+    @property
+    def nR(self) -> int:
+        return self.B_mr.shape[1]
+
+    def with_alpha(self, alpha: float) -> "Platform":
+        return dataclasses.replace(self, alpha=float(alpha))
+
+    def as_arrays(self):
+        """Arrays in the order makespan() expects."""
+        return (self.D, self.B_sm, self.B_mr, self.C_m, self.C_r, self.alpha)
+
+    def total_data(self) -> float:
+        return float(self.D.sum())
+
+    def describe(self) -> str:
+        return (
+            f"Platform({self.name}: nS={self.nS} nM={self.nM} nR={self.nR} "
+            f"D_total={self.total_data():.0f}MB alpha={self.alpha})"
+        )
+
+
+# ---------------------------------------------------------------------------
+# §1.3 worked example
+# ---------------------------------------------------------------------------
+
+def two_cluster_example(
+    alpha: float = 1.0,
+    local_bw: float = 100.0,
+    nonlocal_bw: float = 100.0,
+    compute: float = 100.0,
+    d1: float = 150_000.0,
+    d2: float = 50_000.0,
+) -> Platform:
+    """The two-cluster example of paper §1.3.
+
+    Two clusters, each with one source, one mapper, one reducer.  D1=150 GB,
+    D2=50 GB (expressed in MB).  Local (intra-cluster) links run at
+    ``local_bw`` MB/s, non-local at ``nonlocal_bw`` MB/s; every compute node
+    processes ``compute`` MB/s.
+    """
+    local = np.array([[local_bw, nonlocal_bw], [nonlocal_bw, local_bw]])
+    return Platform(
+        D=np.array([d1, d2]),
+        B_sm=local.copy(),
+        B_mr=local.copy(),
+        C_m=np.array([compute, compute]),
+        C_r=np.array([compute, compute]),
+        alpha=alpha,
+        cluster_s=np.array([0, 1]),
+        cluster_m=np.array([0, 1]),
+        cluster_r=np.array([0, 1]),
+        name=f"two_cluster(alpha={alpha},nl={nonlocal_bw})",
+    )
+
+
+# ---------------------------------------------------------------------------
+# PlanetLab environments (paper §3.2/§4.1, Table 1)
+# ---------------------------------------------------------------------------
+
+#: The eight PlanetLab sites used in the paper (§4.1), with their continent.
+PLANETLAB_SITES: Tuple[Tuple[str, str], ...] = (
+    ("ucsb.edu", "US"),
+    ("tamu.edu", "US"),
+    ("hpl.hp.com", "US"),
+    ("uiuc.edu", "US"),
+    ("tkn.tu-berlin.de", "EU"),
+    ("essex.ac.uk", "EU"),
+    ("pnl.nitech.ac.jp", "Asia"),
+    ("wide.ad.jp", "Asia"),
+)
+
+#: Table 1 — measured slowest/fastest inter-cluster bandwidth in KB/s.
+TABLE1_BANDWIDTH_KBPS = {
+    ("US", "US"): (216.0, 9405.0),
+    ("US", "EU"): (110.0, 2267.0),
+    ("US", "Asia"): (61.0, 3305.0),
+    ("EU", "US"): (794.0, 2734.0),
+    ("EU", "EU"): (4475.0, 11053.0),
+    ("EU", "Asia"): (1502.0, 1593.0),
+    ("Asia", "US"): (401.0, 3610.0),
+    ("Asia", "EU"): (290.0, 1071.0),
+    ("Asia", "Asia"): (23762.0, 23875.0),
+}
+
+#: Gigabit-Ethernet LAN bandwidth for intra-site links (the paper's emulated
+#: testbed interconnect), MB/s.
+LAN_BW_MBPS = 117.0
+
+#: Unscaled compute-rate range measured on PlanetLab nodes (§3.2), MB/s.
+COMPUTE_RATE_RANGE = (9.0, 90.0)
+
+
+def _site_list(n_datacenters: int) -> Tuple[Tuple[str, str], ...]:
+    if n_datacenters == 1:
+        # Local data center: eight replica nodes at tamu.edu.
+        return tuple([("tamu.edu", "US")] * 8)
+    if n_datacenters == 2:
+        # Intra-continental: tamu.edu + ucsb.edu, 4 replicas each.
+        return tuple([("tamu.edu", "US")] * 4 + [("ucsb.edu", "US")] * 4)
+    if n_datacenters == 4:
+        # Global 4: ucsb, tamu, tu-berlin, nitech; 2 replicas each.
+        sites = [
+            ("ucsb.edu", "US"),
+            ("tamu.edu", "US"),
+            ("tkn.tu-berlin.de", "EU"),
+            ("pnl.nitech.ac.jp", "Asia"),
+        ]
+        return tuple(s for s in sites for _ in range(2))
+    if n_datacenters == 8:
+        return PLANETLAB_SITES
+    raise ValueError("n_datacenters must be one of {1, 2, 4, 8}")
+
+
+def planetlab_platform(
+    n_datacenters: int = 8,
+    alpha: float = 1.0,
+    data_per_source_mb: float = 256.0,
+    seed: int = 0,
+    compute_heterogeneity: bool = True,
+) -> Platform:
+    """Generate a PlanetLab-like environment per paper §4.1.
+
+    Eight nodes total regardless of ``n_datacenters`` (replicas fill in when
+    there are fewer real sites).  Each node hosts one source, one mapper and
+    one reducer.  Inter-site bandwidth is sampled log-uniformly within the
+    Table 1 (slowest, fastest) range for the continent pair; intra-site links
+    run at LAN speed.  Compute rates are sampled in the measured 9–90 MB/s
+    range (or fixed at the midpoint when ``compute_heterogeneity=False``).
+    """
+    rng = np.random.default_rng(seed)
+    sites = _site_list(n_datacenters)
+    n = len(sites)
+    site_ids = np.array(
+        [sorted({s for s, _ in sites}).index(s) for s, _ in sites], dtype=np.int64
+    )
+
+    # one measurement per unique site pair / per unique site: replica nodes
+    # share their original's characteristics (paper §4.1: "we added replica
+    # nodes ... with the measured node/link characteristics of the
+    # corresponding real nodes") — a single-DC environment is therefore
+    # genuinely homogeneous.
+    pair_bw: dict = {}
+
+    def site_pair_bw(si, ci, sj, cj) -> float:
+        key = (si, sj)
+        if key not in pair_bw:
+            lo, hi = TABLE1_BANDWIDTH_KBPS[(ci, cj)]
+            pair_bw[key] = float(
+                np.exp(rng.uniform(np.log(lo), np.log(hi)))
+            ) / 1024.0  # KB/s -> MB/s
+        return pair_bw[key]
+
+    bw = np.zeros((n, n))
+    for i, (si, ci) in enumerate(sites):
+        for j, (sj, cj) in enumerate(sites):
+            if si == sj:
+                bw[i, j] = LAN_BW_MBPS
+            else:
+                bw[i, j] = site_pair_bw(si, ci, sj, cj)
+
+    lo, hi = COMPUTE_RATE_RANGE
+    site_rate: dict = {}
+
+    def rate_for(site):
+        if site not in site_rate:
+            site_rate[site] = (
+                float(np.exp(rng.uniform(np.log(lo), np.log(hi)))),
+                float(np.exp(rng.uniform(np.log(lo), np.log(hi)))),
+            )
+        return site_rate[site]
+
+    if compute_heterogeneity:
+        C_m = np.array([rate_for(s)[0] for s, _ in sites])
+        C_r = np.array([rate_for(s)[1] for s, _ in sites])
+    else:
+        mid = float(np.mean(COMPUTE_RATE_RANGE))
+        C_m = np.full(n, mid)
+        C_r = np.full(n, mid)
+
+    return Platform(
+        D=np.full(n, data_per_source_mb),
+        B_sm=bw.copy(),
+        B_mr=bw.copy(),
+        C_m=C_m,
+        C_r=C_r,
+        alpha=alpha,
+        cluster_s=site_ids,
+        cluster_m=site_ids,
+        cluster_r=site_ids,
+        name=f"planetlab_{n_datacenters}dc",
+    )
+
+
+# ---------------------------------------------------------------------------
+# TPU pod environments — the paper's platform model applied to a TPU fleet
+# ---------------------------------------------------------------------------
+
+def tpu_pod_platform(
+    n_pods: int = 2,
+    hosts_per_pod: int = 4,
+    alpha: float = 1.0,
+    data_per_source_mb: float = 65536.0,
+    ici_bw_mbps: float = 50_000.0,
+    dcn_bw_mbps: float = 6_400.0,
+    ingest_bw_mbps: float = 3_200.0,
+    compute_rate_mbps: float = 25_000.0,
+    compute_jitter: float = 0.0,
+    seed: int = 0,
+) -> Platform:
+    """A TPU fleet as the paper's highly-distributed platform.
+
+    Sources are data-ingest hosts (one per host), mappers/reducers are pod
+    slices.  Intra-pod links use ICI bandwidth, inter-pod links use DCN, and
+    source→mapper links are bounded by host ingest NICs (min with the
+    network path).  ``compute_jitter`` > 0 models heterogeneous effective
+    throughput (multi-tenancy / thermal throttling), sampled log-normally.
+    """
+    rng = np.random.default_rng(seed)
+    n = n_pods * hosts_per_pod
+    pod = np.repeat(np.arange(n_pods), hosts_per_pod)
+
+    same_pod = pod[:, None] == pod[None, :]
+    net = np.where(same_pod, ici_bw_mbps, dcn_bw_mbps).astype(np.float64)
+    B_sm = np.minimum(net, ingest_bw_mbps)
+    B_mr = net.copy()
+
+    def rates():
+        if compute_jitter > 0:
+            return compute_rate_mbps * np.exp(
+                rng.normal(0.0, compute_jitter, size=n)
+            )
+        return np.full(n, compute_rate_mbps)
+
+    return Platform(
+        D=np.full(n, data_per_source_mb),
+        B_sm=B_sm,
+        B_mr=B_mr,
+        C_m=rates(),
+        C_r=rates(),
+        alpha=alpha,
+        cluster_s=pod.copy(),
+        cluster_m=pod.copy(),
+        cluster_r=pod.copy(),
+        name=f"tpu_{n_pods}pods",
+    )

@@ -1,0 +1,481 @@
+"""Discrete-event execution of a plan on a modeled platform.
+
+The paper validates its analytic model against a modified Hadoop running on
+an emulated (``tc``-shaped) testbed.  This container offers a single CPU, so
+we do the analogous thing in software: a **chunk-granular discrete-event
+executor** that runs an execution plan over the platform model, serializing
+chunks on links and compute nodes, honoring the barrier configuration, and —
+unlike the analytic model — supporting the *dynamic* mechanisms the paper
+compares against (§4.6.4) and the failure modes a production deployment must
+survive:
+
+* **speculative execution** — when a node goes idle, unstarted work queued at
+  a node whose expected remaining time exceeds ``spec_threshold ×`` the fleet
+  mean is *cloned* to the idle node (first copy to finish wins; an
+  already-started clone is wasted work, as in Hadoop);
+* **work stealing** — idle nodes *take* (rather than clone) unstarted chunks
+  from the most backlogged peer, re-fetching inputs from the source;
+* **stragglers** — per-node slowdown factors unknown to the planner;
+* **node failure** — a mapper dies at a given time; its unfinished work is
+  re-fetched from the data source (or nearest replica) and re-queued on the
+  best surviving node;
+* **replication** — push chunks are written ``replication×``, optionally
+  across clusters (paper §4.6.5), consuming link capacity and speeding up
+  recovery.
+
+The executor is used by the Fig-4 validation benchmark (model-vs-execution
+correlation), the Fig-10/11 dynamics study, and the fault-tolerance tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .makespan import BARRIERS_GGL
+from .plan import ExecutionPlan
+from .platform import Platform
+
+__all__ = ["SimConfig", "SimResult", "simulate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    chunk_mb: float = 64.0
+    barriers: Tuple[str, str, str] = BARRIERS_GGL
+    speculation: bool = False
+    stealing: bool = False
+    spec_threshold: float = 1.5
+    replication: int = 1
+    cross_cluster_replication: bool = False
+    #: per-node compute slowdown factors applied at runtime (unknown to the
+    #: planner): {("m"| "r", node_index): factor >= 1}
+    stragglers: Optional[Dict[Tuple[str, int], float]] = None
+    #: (mapper_index, fail_time_s) — the mapper dies; work is recovered.
+    fail_mapper: Optional[Tuple[int, float]] = None
+    #: lognormal sigma on per-chunk service times (0 = deterministic).
+    compute_noise: float = 0.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    push_end: float
+    map_end: float
+    shuffle_end: float
+    reduce_end: float
+    wasted_mb: float  # duplicated / re-executed work
+    recovered_chunks: int
+    total_map_chunks: int
+
+    def phases(self) -> Dict[str, float]:
+        return {
+            "push": self.push_end,
+            "map": max(self.map_end - self.push_end, 0.0),
+            "shuffle": max(self.shuffle_end - self.map_end, 0.0),
+            "reduce": max(self.reduce_end - self.shuffle_end, 0.0),
+            "makespan": self.makespan,
+        }
+
+
+class _Chunk:
+    __slots__ = ("cid", "size", "src", "done", "started_copies", "owner", "cloned")
+
+    def __init__(self, cid: int, size: float, src: int, owner: int = -1):
+        self.cid = cid
+        self.size = size
+        self.src = src  # source index for map chunks; mapper index for reduce
+        self.done = False
+        self.started_copies = 0
+        self.owner = owner  # mapper whose gate/progress counters hold it
+        self.cloned = False
+
+
+class _Sim:
+    """Event-driven executor.  Events are (time, seq, fn_name, args)."""
+
+    def __init__(self, platform: Platform, plan: ExecutionPlan, cfg: SimConfig):
+        self.p = platform
+        self.plan = plan
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, str, tuple]] = []
+        self._seq = itertools.count()
+        self._cid = itertools.count()
+
+        nS, nM, nR = platform.nS, platform.nM, platform.nR
+        self.push_link_free = np.zeros((nS, nM))
+        self.shuf_link_free = np.zeros((nM, nR))
+        self.map_free = np.zeros(nM)
+        self.red_free = np.zeros(nR)
+        self.map_alive = np.ones(nM, dtype=bool)
+
+        self.map_queue: List[List[_Chunk]] = [[] for _ in range(nM)]
+        self.red_queue: List[List[_Chunk]] = [[] for _ in range(nR)]
+        self.map_busy = np.zeros(nM, dtype=bool)
+        self.red_busy = np.zeros(nR, dtype=bool)
+
+        # outstanding counters for gates
+        self.push_inflight = np.zeros(nM, dtype=np.int64)
+        self.map_unfinished = np.zeros(nM, dtype=np.int64)
+        self.shuf_inflight = np.zeros(nR, dtype=np.int64)
+        self.total_push_inflight = 0
+        self.total_map_unfinished = 0
+        self.total_shuf_inflight = 0
+
+        self.push_end = 0.0
+        self.map_end = 0.0
+        self.shuffle_end = 0.0
+        self.reduce_end = 0.0
+        self.wasted_mb = 0.0
+        self.recovered = 0
+        self.total_map_chunks = 0
+
+        # chunks delivered to mapper j but gated (push/map barrier)
+        self.map_gated: List[List[_Chunk]] = [[] for _ in range(nM)]
+        # shuffle emissions gated at mapper j (map/shuffle barrier)
+        self.shuf_gated: List[List[Tuple[int, _Chunk]]] = [[] for _ in range(nM)]
+        # reduce chunks gated at reducer k (shuffle/reduce barrier)
+        self.red_gated: List[List[_Chunk]] = [[] for _ in range(nR)]
+
+    # -- infrastructure ----------------------------------------------------
+    def at(self, t: float, fn: str, *args):
+        heapq.heappush(self._heap, (t, next(self._seq), fn, args))
+
+    def run(self) -> SimResult:
+        self._seed_push()
+        if self.cfg.fail_mapper is not None:
+            j, tf = self.cfg.fail_mapper
+            self.at(tf, "fail_mapper", j)
+        while self._heap:
+            t, _, fn, args = heapq.heappop(self._heap)
+            self.now = max(self.now, t)
+            getattr(self, "_ev_" + fn)(*args)
+        return SimResult(
+            makespan=self.reduce_end,
+            push_end=self.push_end,
+            map_end=self.map_end,
+            shuffle_end=self.shuffle_end,
+            reduce_end=self.reduce_end,
+            wasted_mb=self.wasted_mb,
+            recovered_chunks=self.recovered,
+            total_map_chunks=self.total_map_chunks,
+        )
+
+    def _noise(self) -> float:
+        if self.cfg.compute_noise <= 0:
+            return 1.0
+        return float(np.exp(self.rng.normal(0.0, self.cfg.compute_noise)))
+
+    def _rate(self, tier: str, idx: int) -> float:
+        base = self.p.C_m[idx] if tier == "m" else self.p.C_r[idx]
+        slow = 1.0
+        if self.cfg.stragglers:
+            slow = self.cfg.stragglers.get((tier, idx), 1.0)
+        return base / slow
+
+    # -- push phase ----------------------------------------------------------
+    def _seed_push(self):
+        cfg, p = self.cfg, self.p
+        for i in range(p.nS):
+            remaining = p.D[i]
+            for j in range(p.nM):
+                amount = p.D[i] * self.plan.x[i, j]
+                if amount <= 1e-9:
+                    continue
+                n_chunks = max(int(np.ceil(amount / cfg.chunk_mb)), 1)
+                sizes = np.full(n_chunks, amount / n_chunks)
+                for s in sizes:
+                    c = _Chunk(next(self._cid), float(s), i, owner=j)
+                    self.total_map_chunks += 1
+                    self.push_inflight[j] += 1
+                    self.total_push_inflight += 1
+                    self.map_unfinished[j] += 1
+                    self.total_map_unfinished += 1
+                    self._send_push(i, j, c, replica=False)
+                    self._replicate(i, j, s)
+            del remaining
+
+    def _replicate(self, i: int, j: int, size: float):
+        """Write replication-1 extra copies of a push chunk (replica targets
+        never run map work; they only consume link capacity)."""
+        p, cfg = self.p, self.cfg
+        for r in range(cfg.replication - 1):
+            if cfg.cross_cluster_replication:
+                candidates = [
+                    m for m in range(p.nM) if p.cluster_m[m] != p.cluster_m[j]
+                ]
+            else:
+                candidates = [
+                    m
+                    for m in range(p.nM)
+                    if p.cluster_m[m] == p.cluster_m[j] and m != j
+                ]
+            if not candidates:
+                candidates = [m for m in range(p.nM) if m != j]
+            tgt = candidates[(j + r + 1) % len(candidates)]
+            start = max(self.now, self.push_link_free[i, tgt])
+            end = start + size / self.p.B_sm[i, tgt]
+            self.push_link_free[i, tgt] = end
+            self.wasted_mb += size
+            # the write pipeline is not durable (and the push phase not
+            # complete) until every replica is on disk: replica writes gate
+            # the ORIGIN mapper's input like any other push chunk.
+            self.push_inflight[j] += 1
+            self.total_push_inflight += 1
+            self.at(end, "replica_done", j)
+
+    def _ev_replica_done(self, j: int):
+        self.push_end = max(self.push_end, self.now)
+        self.push_inflight[j] -= 1
+        self.total_push_inflight -= 1
+        b = self.cfg.barriers[0]
+        if b == "L" and self.push_inflight[j] == 0:
+            self._open_map_gate(j)
+        elif b == "G" and self.total_push_inflight == 0:
+            for m in range(self.p.nM):
+                self._open_map_gate(m)
+
+    def _send_push(self, i: int, j: int, c: _Chunk, replica: bool):
+        start = max(self.now, self.push_link_free[i, j])
+        end = start + c.size / self.p.B_sm[i, j]
+        self.push_link_free[i, j] = end
+        self.at(end, "push_arrive", i, j, c)
+
+    def _ev_push_arrive(self, i: int, j: int, c: _Chunk):
+        self.push_end = max(self.push_end, self.now)
+        self.push_inflight[j] -= 1
+        self.total_push_inflight -= 1
+        if not self.map_alive[j]:
+            self._recover_chunk(j, c)
+            return
+        b = self.cfg.barriers[0]
+        if b == "P":
+            self.map_queue[j].append(c)
+            self._pump_map(j)
+        else:
+            self.map_gated[j].append(c)
+            if b == "L" and self.push_inflight[j] == 0:
+                self._open_map_gate(j)
+            elif b == "G" and self.total_push_inflight == 0:
+                for m in range(self.p.nM):
+                    self._open_map_gate(m)
+
+    def _open_map_gate(self, j: int):
+        if self.map_gated[j]:
+            self.map_queue[j].extend(self.map_gated[j])
+            self.map_gated[j].clear()
+        self._pump_map(j)
+
+    # -- map phase -------------------------------------------------------------
+    def _pump_map(self, j: int):
+        if self.map_busy[j] or not self.map_alive[j] or not self.map_queue[j]:
+            if (
+                not self.map_busy[j]
+                and not self.map_queue[j]
+                and self.map_alive[j]
+            ):
+                self._idle_mapper(j)
+            return
+        c = self.map_queue[j].pop(0)
+        if c.done:  # a speculative twin already finished this chunk
+            self._pump_map(j)
+            return
+        c.started_copies += 1
+        self.map_busy[j] = True
+        dur = c.size / self._rate("m", j) * self._noise()
+        self.at(self.now + dur, "map_done", j, c)
+
+    def _ev_map_done(self, j: int, c: _Chunk):
+        self.map_busy[j] = False
+        if c.done:
+            self.wasted_mb += c.size  # lost the speculation race
+            self._pump_map(j)
+            return
+        c.done = True
+        self.map_end = max(self.map_end, self.now)
+        owner = c.owner if c.owner >= 0 else j
+        self.map_unfinished[owner] -= 1
+        self.total_map_unfinished -= 1
+        self._emit_shuffle(j, c)
+        if owner != j and self.cfg.barriers[1] == "L" and self.map_unfinished[owner] == 0:
+            self._open_shuffle_gate(owner)
+        self._pump_map(j)
+
+    def _emit_shuffle(self, j: int, c: _Chunk):
+        b = self.cfg.barriers[1]
+        for k in range(self.p.nR):
+            amount = self.p.alpha * c.size * self.plan.y[k]
+            if amount <= 1e-9:
+                continue
+            sc = _Chunk(next(self._cid), float(amount), j)
+            self.shuf_inflight[k] += 1
+            self.total_shuf_inflight += 1
+            if b == "P":
+                self._send_shuffle(j, k, sc)
+            else:
+                self.shuf_gated[j].append((k, sc))
+        if b == "L" and self.map_unfinished[j] == 0:
+            self._open_shuffle_gate(j)
+        elif b == "G" and self.total_map_unfinished == 0:
+            for m in range(self.p.nM):
+                self._open_shuffle_gate(m)
+
+    def _open_shuffle_gate(self, j: int):
+        for k, sc in self.shuf_gated[j]:
+            self._send_shuffle(j, k, sc)
+        self.shuf_gated[j].clear()
+
+    def _send_shuffle(self, j: int, k: int, sc: _Chunk):
+        start = max(self.now, self.shuf_link_free[j, k])
+        end = start + sc.size / self.p.B_mr[j, k]
+        self.shuf_link_free[j, k] = end
+        self.at(end, "shuffle_arrive", j, k, sc)
+
+    def _ev_shuffle_arrive(self, j: int, k: int, sc: _Chunk):
+        self.shuffle_end = max(self.shuffle_end, self.now)
+        self.shuf_inflight[k] -= 1
+        self.total_shuf_inflight -= 1
+        b = self.cfg.barriers[2]
+        if b == "P":
+            self.red_queue[k].append(sc)
+            self._pump_reduce(k)
+        else:
+            self.red_gated[k].append(sc)
+            if b == "L" and self.shuf_inflight[k] == 0 and self._shuffle_final():
+                self._open_reduce_gate(k)
+            elif b == "G" and self.total_shuf_inflight == 0 and self._shuffle_final():
+                for r in range(self.p.nR):
+                    self._open_reduce_gate(r)
+
+    def _shuffle_final(self) -> bool:
+        """No more shuffle chunks can appear (all map work finished)."""
+        return self.total_map_unfinished == 0 and self.total_push_inflight == 0
+
+    def _open_reduce_gate(self, k: int):
+        if self.red_gated[k]:
+            self.red_queue[k].extend(self.red_gated[k])
+            self.red_gated[k].clear()
+        self._pump_reduce(k)
+
+    # -- reduce phase ------------------------------------------------------------
+    def _pump_reduce(self, k: int):
+        if self.red_busy[k] or not self.red_queue[k]:
+            return
+        sc = self.red_queue[k].pop(0)
+        if sc.done:
+            self._pump_reduce(k)
+            return
+        self.red_busy[k] = True
+        dur = sc.size / self._rate("r", k) * self._noise()
+        self.at(self.now + dur, "reduce_done", k, sc)
+
+    def _ev_reduce_done(self, k: int, sc: _Chunk):
+        self.red_busy[k] = False
+        if not sc.done:
+            sc.done = True
+            self.reduce_end = max(self.reduce_end, self.now)
+        else:
+            self.wasted_mb += sc.size
+        self._pump_reduce(k)
+
+    # -- dynamics: stealing / speculation ----------------------------------------
+    def _idle_mapper(self, j: int):
+        cfg = self.cfg
+        if not (cfg.stealing or cfg.speculation):
+            return
+        # expected remaining compute time per mapper
+        rem = np.array(
+            [
+                sum(c.size for c in self.map_queue[m] if not c.done)
+                / self._rate("m", m)
+                for m in range(self.p.nM)
+            ]
+        )
+        if rem.sum() <= 0:
+            return
+        # fleet-mean progress (zeros included): a node is a straggler when
+        # it lags the whole fleet, not merely other still-busy nodes
+        mean = rem.mean()
+        victim = int(rem.argmax())
+        if victim == j or rem[victim] < cfg.spec_threshold * max(mean, 1e-9):
+            return
+        pending = [c for c in self.map_queue[victim] if not c.done and not c.cloned]
+        if not pending:
+            return
+        c = pending[-1]
+        # progress-based sanity check (Hadoop estimates task progress before
+        # speculating): only act when the thief can plausibly win the race.
+        my_time = c.size / self.p.B_sm[c.src, j] + c.size / self._rate("m", j)
+        if my_time >= rem[victim]:
+            return
+        if cfg.stealing:
+            self.map_queue[victim].remove(c)
+            # ownership (and its gate counters) moves with the chunk
+            self.map_unfinished[victim] -= 1
+            self.map_unfinished[j] += 1
+            c.owner = j
+            if self.cfg.barriers[1] == "L" and self.map_unfinished[victim] == 0 \
+                    and not self.map_busy[victim]:
+                self._open_shuffle_gate(victim)
+            moved = c
+        else:  # speculation: clone, twin-completion resolved via c.done
+            c.cloned = True
+            moved = c
+        # re-fetch the input from the source over the push link
+        i = moved.src
+        start = max(self.now, self.push_link_free[i, j])
+        end = start + moved.size / self.p.B_sm[i, j]
+        self.push_link_free[i, j] = end
+        if not cfg.stealing:
+            self.wasted_mb += 0.0  # waste only counted if the race is lost
+        self.at(end, "stolen_arrive", j, moved)
+
+    def _ev_stolen_arrive(self, j: int, c: _Chunk):
+        if c.done or not self.map_alive[j]:
+            return
+        self.map_queue[j].append(c)
+        self._pump_map(j)
+
+    # -- dynamics: failure recovery ----------------------------------------------
+    def _ev_fail_mapper(self, j: int):
+        self.map_alive[j] = False
+        lost = [c for c in self.map_queue[j] if not c.done]
+        lost += [c for c in self.map_gated[j] if not c.done]
+        self.map_queue[j].clear()
+        self.map_gated[j].clear()
+        self.map_busy[j] = False
+        for c in lost:
+            self._recover_chunk(j, c)
+
+    def _recover_chunk(self, dead: int, c: _Chunk):
+        """Re-push a lost chunk from its source to the best surviving mapper."""
+        self.recovered += 1
+        alive = np.flatnonzero(self.map_alive)
+        if alive.size == 0:
+            raise RuntimeError("all mappers dead")
+        i = c.src
+        tgt = int(alive[np.argmax(self.p.B_sm[i, alive])])
+        if c.owner >= 0 and c.owner != tgt:
+            self.map_unfinished[c.owner] -= 1
+            self.map_unfinished[tgt] += 1
+            c.owner = tgt
+        self.wasted_mb += c.size
+        start = max(self.now, self.push_link_free[i, tgt])
+        end = start + c.size / self.p.B_sm[i, tgt]
+        self.push_link_free[i, tgt] = end
+        self.push_inflight[tgt] += 1
+        self.total_push_inflight += 1
+        self.at(end, "push_arrive", i, tgt, c)
+
+
+def simulate(
+    platform: Platform, plan: ExecutionPlan, cfg: Optional[SimConfig] = None
+) -> SimResult:
+    """Execute ``plan`` on ``platform`` under ``cfg`` and return timings."""
+    return _Sim(platform, plan, cfg or SimConfig()).run()

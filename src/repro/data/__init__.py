@@ -1,0 +1,4 @@
+from .pipeline import GeoDataPipeline, synthetic_lm_batch
+from .tokenizer import ByteTokenizer
+
+__all__ = ["GeoDataPipeline", "synthetic_lm_batch", "ByteTokenizer"]

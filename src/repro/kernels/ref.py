@@ -1,0 +1,174 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the semantics contracts: each kernel's test sweeps shapes/dtypes
+and asserts allclose against the function here.  They are also the
+implementations used on paths where the kernel is not warranted (tiny
+shapes, CPU smoke tests).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "attention_ref",
+    "mamba_scan_ref",
+    "rglru_scan_ref",
+    "segment_sum_ref",
+    "moe_dispatch_ref",
+    "moe_combine_ref",
+]
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, Hq, T, Dh)
+    k: jnp.ndarray,  # (B, Hkv, S, Dh)
+    v: jnp.ndarray,  # (B, Hkv, S, Dh)
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Multi-head attention with GQA, causal and sliding-window masking.
+
+    ``q_offset`` positions the queries inside the kv sequence (decode /
+    chunked prefill): query ``t`` attends to keys ``<= t + q_offset``.
+    ``window``: keys further than ``window-1`` behind the query are masked.
+    """
+    B, Hq, T, Dh = q.shape
+    _, Hkv, S, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    if scale is None:
+        scale = Dh**-0.5
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum(
+        "bhtd,bhsd->bhts", q.astype(jnp.float32), kr.astype(jnp.float32)
+    ) * scale
+    q_pos = jnp.arange(T)[:, None] + q_offset
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows produce NaN from softmax(-inf); zero them
+    probs = jnp.where(jnp.any(mask, axis=-1)[None, None, :, None], probs, 0.0)
+    out = jnp.einsum("bhts,bhsd->bhtd", probs, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def mamba_scan_ref(
+    x: jnp.ndarray,  # (B, T, Di)
+    delta: jnp.ndarray,  # (B, T, Di)
+    A: jnp.ndarray,  # (Di, Ds)    (negative-definite diagonal dynamics)
+    Bc: jnp.ndarray,  # (B, T, Ds)
+    Cc: jnp.ndarray,  # (B, T, Ds)
+    D: jnp.ndarray,  # (Di,)
+    h0: Optional[jnp.ndarray] = None,  # (B, Di, Ds)
+):
+    """Mamba-1 selective scan.
+
+      h_t = exp(Δ_t ⊙ A) ⊙ h_{t-1} + (Δ_t ⊙ x_t) ⊗ B_t
+      y_t = (h_t · C_t) + D ⊙ x_t
+
+    Returns ``(y, h_T)`` with y: (B, T, Di), h_T: (B, Di, Ds).
+    """
+    Bn, T, Di = x.shape
+    Ds = A.shape[1]
+    xf = x.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bn, Di, Ds), jnp.float32)
+
+    def step(h, t):
+        decay = jnp.exp(df[:, t][:, :, None] * Af[None])  # (B, Di, Ds)
+        inject = (df[:, t] * xf[:, t])[:, :, None] * Bf[:, t][:, None, :]
+        h = decay * h + inject
+        y = jnp.einsum("bds,bs->bd", h, Cf[:, t])
+        return h, y
+
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(T))
+    y = jnp.moveaxis(ys, 0, 1) + D.astype(jnp.float32)[None, None] * xf
+    return y.astype(x.dtype), hT
+
+
+def rglru_scan_ref(
+    x: jnp.ndarray,  # (B, T, D) gated input
+    a: jnp.ndarray,  # (B, T, D) recurrence gate in (0, 1)
+    h0: Optional[jnp.ndarray] = None,  # (B, D)
+):
+    """RG-LRU diagonal linear recurrence (RecurrentGemma):
+
+      h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ x_t
+
+    Returns ``(h_all, h_T)``: the full hidden sequence and the final state.
+    """
+    Bn, T, Dd = x.shape
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bn, Dd), jnp.float32)
+
+    def step(h, t):
+        h = af[:, t] * h + jnp.sqrt(jnp.maximum(1.0 - af[:, t] ** 2, 0.0)) * xf[:, t]
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(T))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), hT
+
+
+def segment_sum_ref(
+    values: jnp.ndarray,  # (N, D)
+    segment_ids: jnp.ndarray,  # (N,) int32, sorted ascending
+    num_segments: int,
+) -> jnp.ndarray:
+    """Sorted-segment sum — the MapReduce combiner/reducer primitive."""
+    return jax.ops.segment_sum(
+        values.astype(jnp.float32), segment_ids, num_segments
+    ).astype(values.dtype)
+
+
+def moe_dispatch_ref(
+    tokens: jnp.ndarray,  # (T, D)
+    expert_ids: jnp.ndarray,  # (T,) int32
+    slot_ids: jnp.ndarray,  # (T,) int32 position within the expert buffer
+    num_experts: int,
+    capacity: int,
+) -> jnp.ndarray:
+    """Scatter tokens into per-expert capacity buffers: out (E, C, D).
+
+    Tokens with ``slot_ids >= capacity`` are dropped (capacity overflow),
+    matching production MoE semantics.
+    """
+    T, D = tokens.shape
+    out = jnp.zeros((num_experts, capacity, D), jnp.float32)
+    keep = slot_ids < capacity
+    out = out.at[
+        jnp.where(keep, expert_ids, 0), jnp.where(keep, slot_ids, 0)
+    ].add(jnp.where(keep[:, None], tokens.astype(jnp.float32), 0.0))
+    return out.astype(tokens.dtype)
+
+
+def moe_combine_ref(
+    expert_out: jnp.ndarray,  # (E, C, D)
+    expert_ids: jnp.ndarray,  # (T,)
+    slot_ids: jnp.ndarray,  # (T,)
+    gates: jnp.ndarray,  # (T,)
+    capacity: int,
+) -> jnp.ndarray:
+    """Gather per-expert outputs back to token order, weighted by gate."""
+    keep = slot_ids < capacity
+    gathered = expert_out[
+        jnp.where(keep, expert_ids, 0), jnp.where(keep, slot_ids, 0)
+    ]
+    out = gathered.astype(jnp.float32) * jnp.where(keep, gates, 0.0)[:, None]
+    return out.astype(expert_out.dtype)

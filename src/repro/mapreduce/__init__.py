@@ -1,0 +1,5 @@
+from .engine import GeoMapReduce, PhaseStats
+from .partition import bucket_owners, hash_keys
+from . import apps
+
+__all__ = ["GeoMapReduce", "PhaseStats", "bucket_owners", "hash_keys", "apps"]

@@ -1,0 +1,5 @@
+"""LM substrate: configs, layers, models, sharding."""
+from .config import ArchConfig, Block
+from . import layers, model, sharding
+
+__all__ = ["ArchConfig", "Block", "layers", "model", "sharding"]

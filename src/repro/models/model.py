@@ -1,0 +1,454 @@
+"""Decoder LM assembled from the layer zoo, with scan-over-layer-groups.
+
+The repeating unit is the config's block *pattern* (e.g. RecurrentGemma's
+(rglru, rglru, local-attn), Llama-4's (3×local-RoPE, 1×global-NoPE));
+parameters for all ``n_groups`` repetitions are stacked on a leading axis
+and the stack is traversed with ``lax.scan`` — compile time and HLO size
+are independent of depth, which is what makes the 512-device dry-runs of
+48-layer models tractable.
+
+Public entry points (all pure functions):
+
+* ``init(cfg, key, tp)``                          → params
+* ``forward(cfg, params, batch, ...)``            → logits, aux
+* ``loss_fn(cfg, params, batch, ...)``            → scalar, metrics
+* ``init_cache(cfg, params, batch, max_len)``     → cache
+* ``prefill(cfg, params, batch, max_len, ...)``   → logits, cache
+* ``decode_step(cfg, params, tokens, cache, ...)``→ logits, cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .config import ArchConfig, Block
+from .sharding import shard
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ArchConfig, blk: Block, key, tp: int) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": L.init_norm(cfg, ks[0])}
+    if blk.mixer == "attn":
+        p["mixer"] = L.init_attention(cfg, ks[1])
+    elif blk.mixer == "ssm":
+        p["mixer"] = L.init_mamba(cfg, ks[1])
+    elif blk.mixer == "rglru":
+        p["mixer"] = L.init_rglru(cfg, ks[1])
+    else:
+        raise ValueError(blk.mixer)
+    if blk.ffn != "none":
+        p["norm2"] = L.init_norm(cfg, ks[2])
+        if blk.ffn == "dense":
+            p["ffn"] = L.init_mlp(cfg, ks[3])
+        elif blk.ffn == "moe":
+            p["ffn"] = L.init_moe(cfg, ks[3], tp=tp)
+        else:
+            raise ValueError(blk.ffn)
+    return p
+
+
+def init(cfg: ArchConfig, key, tp: int = 1) -> Params:
+    """Initialize parameters.  ``tp`` — tensor-parallel degree used for
+    expert-count padding (head padding is a config-load concern)."""
+    k_embed, k_groups, k_out, k_norm = jax.random.split(key, 4)
+
+    def init_group(gkey):
+        bkeys = jax.random.split(gkey, len(cfg.pattern))
+        return {
+            f"blk{i}": _init_block(cfg, blk, bkeys[i], tp)
+            for i, blk in enumerate(cfg.pattern)
+        }
+
+    params: Params = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab, cfg.d_model)) * 0.02),
+        "groups": jax.vmap(init_group)(jax.random.split(k_groups, cfg.n_groups)),
+        "final_norm": L.init_norm(cfg, k_norm),
+    }
+    if cfg.tail:
+        tkeys = jax.random.split(jax.random.fold_in(key, 99), len(cfg.tail))
+        params["tail"] = {
+            f"blk{i}": _init_block(cfg, blk, tkeys[i], tp)
+            for i, blk in enumerate(cfg.tail)
+        }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (
+            jax.random.normal(k_out, (cfg.vocab, cfg.d_model))
+            / np.sqrt(cfg.d_model)
+        )
+    return params
+
+
+#: leaf-name → logical axes for the value *without* the group-stack axis.
+#: Group-stacked leaves (everything under ``groups/``) get a leading None.
+_PARAM_RULES = {
+    "embed": ("vocab", "embed"),
+    "unembed": ("vocab", "embed"),
+    "wq": ("qkv_fsdp", "heads", None),
+    "wk": ("qkv_fsdp", "kv_heads", None),
+    "wv": ("qkv_fsdp", "kv_heads", None),
+    "wo": ("heads", None, "qkv_fsdp"),
+    "router": (None, None),
+    "plan_bias": (None,),
+    "plan_capacity": ("experts",),
+    "in_proj": ("ssm_fsdp", "ssm_inner"),
+    "conv": (None, "ssm_inner"),
+    "x_proj": ("ssm_inner", None),
+    "dt_proj": (None, "ssm_inner"),
+    "dt_bias": ("ssm_inner",),
+    "A_log": ("ssm_inner", None),
+    "D": ("ssm_inner",),
+    "out_proj": ("ssm_inner", "ssm_fsdp"),
+    "in_x": ("ssm_fsdp", "ssm_inner"),
+    "in_gate": ("ssm_fsdp", "ssm_inner"),
+    "a_gate_w": ("ssm_inner",),
+    "a_gate_b": ("ssm_inner",),
+    "x_gate_w": ("ssm_inner",),
+}
+
+
+def param_shardings(cfg: ArchConfig, params_shape: Params):
+    """Logical PartitionSpec pytree for the parameter tree (FSDP over
+    'data', TP/EP over 'model', experts over 'model')."""
+    from .sharding import spec_for
+
+    def path_str(kp):
+        return "/".join(
+            str(getattr(k, "key", getattr(k, "idx", "?"))) for k in kp
+        )
+
+    def spec(kp, leaf):
+        path = path_str(kp)
+        name = path.split("/")[-1]
+        stacked = path.startswith("groups")
+        nd = leaf.ndim - (1 if stacked else 0)
+        if name in ("w_gate", "w_up", "w_down"):
+            if nd == 3:  # MoE experts: (E, d, f)
+                names = ("experts", "expert_in", "expert_out")
+            elif name == "w_down":
+                names = ("ffn", "ffn_fsdp")
+            else:
+                names = ("ffn_fsdp", "ffn")
+        elif name in _PARAM_RULES:
+            names = _PARAM_RULES[name]
+        else:  # norm scales/biases etc.
+            names = (None,) * nd
+        if len(names) != nd:  # defensive: replicate anything unexpected
+            names = (None,) * nd
+        if stacked:
+            names = (None,) + tuple(names)
+        return spec_for(*names)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block_fwd(
+    cfg, blk: Block, p: Params, x, positions, cache, mode,
+    mesh, use_kernels, max_cache_len,
+):
+    h = L.apply_norm(cfg, p["norm1"], x)
+    aux = jnp.float32(0.0)
+    if blk.mixer == "attn":
+        y, new_cache = L.attention_fwd(
+            cfg, blk, p["mixer"], h, positions, cache=cache,
+            use_kernel=use_kernels, mode=mode, max_cache_len=max_cache_len,
+        )
+    elif blk.mixer == "ssm":
+        if mode == "prefill" and cache is None:
+            B = x.shape[0]
+            cache = _ssm_zero_state(cfg, B, x.dtype)
+        y, new_cache = L.mamba_fwd(
+            cfg, p["mixer"], h, state=cache if mode != "train" else None,
+            use_kernel=use_kernels,
+        )
+    elif blk.mixer == "rglru":
+        if mode == "prefill" and cache is None:
+            B = x.shape[0]
+            cache = _rglru_zero_state(cfg, B, x.dtype)
+        y, new_cache = L.rglru_fwd(
+            cfg, p["mixer"], h, state=cache if mode != "train" else None,
+            use_kernel=use_kernels,
+        )
+    else:
+        raise ValueError(blk.mixer)
+    x = x + y
+    if blk.ffn != "none":
+        h = L.apply_norm(cfg, p["norm2"], x)
+        if blk.ffn == "dense":
+            y = L.mlp_fwd(cfg, p["ffn"], h)
+        else:
+            y, aux = L.moe_fwd(cfg, p["ffn"], h, mesh=mesh)
+        x = x + y
+    return x, new_cache, aux
+
+
+def _ssm_zero_state(cfg, B, dtype):
+    return {
+        "h": jnp.zeros((B, cfg.ssm_d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((B, cfg.ssm_conv - 1, cfg.ssm_d_inner), dtype),
+    }
+
+
+def _rglru_zero_state(cfg, B, dtype):
+    return {
+        "h": jnp.zeros((B, cfg.rglru_width), jnp.float32),
+        "conv": jnp.zeros((B, 3, cfg.rglru_width), dtype),
+    }
+
+
+def _attn_zero_cache(cfg, B, max_len, dtype):
+    if dtype == jnp.int8:  # quantized cache (§Perf): int8 values + scales
+        return {
+            "k": jnp.zeros((B, cfg.n_kv_heads, max_len, cfg.head_dim_), jnp.int8),
+            "v": jnp.zeros((B, cfg.n_kv_heads, max_len, cfg.head_dim_), jnp.int8),
+            "k_scale": jnp.zeros((B, cfg.n_kv_heads, max_len, 1), jnp.float32),
+            "v_scale": jnp.zeros((B, cfg.n_kv_heads, max_len, 1), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((B, cfg.n_kv_heads, max_len, cfg.head_dim_), dtype),
+        "v": jnp.zeros((B, cfg.n_kv_heads, max_len, cfg.head_dim_), dtype),
+    }
+
+
+def init_cache(cfg: ArchConfig, B: int, max_len: int, dtype=jnp.bfloat16,
+               kv_int8: bool = False):
+    """Zeroed decode cache for the whole stack (stacked over groups).
+
+    Windowed-attention blocks still allocate ``max_len`` (correct, not
+    minimal: a ring buffer of ``window`` is the memory-optimal layout and is
+    tracked as a §Perf lever)."""
+    out = {}
+    kv_dtype = jnp.int8 if kv_int8 else dtype
+    for i, blk in enumerate(cfg.pattern):
+        if blk.mixer == "attn":
+            one = _attn_zero_cache(cfg, B, max_len, kv_dtype)
+        elif blk.mixer == "ssm":
+            one = _ssm_zero_state(cfg, B, dtype)
+        else:
+            one = _rglru_zero_state(cfg, B, dtype)
+        out[f"blk{i}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_groups,) + x.shape), one
+        )
+    if cfg.tail:
+        tail = {}
+        for i, blk in enumerate(cfg.tail):
+            if blk.mixer == "attn":
+                tail[f"blk{i}"] = _attn_zero_cache(cfg, B, max_len, kv_dtype)
+            elif blk.mixer == "ssm":
+                tail[f"blk{i}"] = _ssm_zero_state(cfg, B, dtype)
+            else:
+                tail[f"blk{i}"] = _rglru_zero_state(cfg, B, dtype)
+        out["tail"] = tail
+    return out
+
+
+def forward(
+    cfg: ArchConfig,
+    params: Params,
+    batch: Dict[str, jnp.ndarray],
+    mode: str = "train",
+    cache=None,
+    mesh=None,
+    use_kernels: bool = False,
+    compute_dtype=jnp.float32,
+    remat: bool = False,
+    max_cache_len: Optional[int] = None,
+    logits_dtype=jnp.float32,
+    unroll_groups: bool = False,
+    last_only: bool = False,
+):
+    """Run the stack.  ``batch`` carries ``tokens`` (B, T) int32 or — for
+    stub-frontend archs — ``embeds`` (B, T, d).  Returns (logits, cache,
+    aux_loss).
+
+    ``unroll_groups`` unrolls the layer-group scan — used by the dry-run's
+    *analysis build* so ``cost_analysis()``/collective parsing see every
+    layer (XLA counts while-loop bodies once; see EXPERIMENTS.md §Dry-run).
+    """
+    if cfg.frontend == "embed" and "embeds" in batch:
+        x = batch["embeds"].astype(compute_dtype)
+    else:
+        tokens = batch["tokens"]
+        x = params["embed"].astype(compute_dtype)[tokens]
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+    B, T = x.shape[:2]
+
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.arange(T)[None, :]
+    positions = jnp.broadcast_to(positions, (B, T))
+
+    cast_params = jax.tree.map(lambda a: a.astype(compute_dtype)
+                               if a.dtype == jnp.float32 else a, params["groups"])
+
+    def group_fwd(x, gp, gcache):
+        new_caches = {}
+        aux_total = jnp.float32(0.0)
+        for i, blk in enumerate(cfg.pattern):
+            c = None if gcache is None else gcache.get(f"blk{i}")
+            x, nc, aux = _block_fwd(
+                cfg, blk, gp[f"blk{i}"], x, positions, c, mode,
+                mesh, use_kernels, max_cache_len,
+            )
+            if nc is not None:
+                new_caches[f"blk{i}"] = nc
+            aux_total = aux_total + aux
+        return x, new_caches, aux_total
+
+    if remat:
+        # nothing_saveable: the scan saves only the per-group carry (the
+        # bf16 residual stream); each group's internals — including the
+        # O(T·S) attention logits of the chunked double-scan — are
+        # recomputed in the backward pass.  (dots_*_saveable policies would
+        # stack those logits across scan steps: ~30 GiB/device at 4k×256.)
+        group_fwd = jax.checkpoint(
+            group_fwd, policy=jax.checkpoint_policies.nothing_saveable
+        )
+
+    if mode == "train":
+        def body(carry, gp):
+            x, aux = carry
+            x, _, aux_g = group_fwd(x, gp, None)
+            return (x, aux + aux_g), None
+
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.float32(0.0)), cast_params, unroll=unroll_groups
+        )
+        new_cache = None
+    elif mode == "prefill":
+        def body(carry, gp):
+            x, aux = carry
+            x, ncache, aux_g = group_fwd(x, gp, None)
+            return (x, aux + aux_g), ncache
+
+        (x, aux), new_cache = jax.lax.scan(
+            body, (x, jnp.float32(0.0)), cast_params, unroll=unroll_groups
+        )
+    else:  # decode
+        def body(carry, xs):
+            x, aux = carry
+            gp, gcache = xs
+            x, ncache, aux_g = group_fwd(x, gp, gcache)
+            return (x, aux + aux_g), ncache
+
+        scan_cache = {k: v for k, v in cache.items() if k != "tail"}
+        (x, aux), new_cache = jax.lax.scan(
+            body, (x, jnp.float32(0.0)), (cast_params, scan_cache),
+            unroll=unroll_groups,
+        )
+
+    if cfg.tail:
+        tail_params = jax.tree.map(
+            lambda a: a.astype(compute_dtype) if a.dtype == jnp.float32 else a,
+            params["tail"],
+        )
+        tail_new = {}
+        for i, blk in enumerate(cfg.tail):
+            c = None
+            if mode == "decode" and cache is not None:
+                c = cache.get("tail", {}).get(f"blk{i}")
+            x, nc, aux_t = _block_fwd(
+                cfg, blk, tail_params[f"blk{i}"], x, positions, c, mode,
+                mesh, use_kernels, max_cache_len,
+            )
+            if nc is not None:
+                tail_new[f"blk{i}"] = nc
+            aux = aux + aux_t
+        if new_cache is not None and tail_new:
+            new_cache = dict(new_cache, tail=tail_new)
+
+    if last_only:
+        # serving prefill: only the last position's logits are consumed —
+        # skipping the (B, T, V) unembed removes ~2·B·T·d·V FLOPs and the
+        # associated cross-shard reduction (§Perf hillclimb B).
+        x = x[:, -1:]
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    w_out = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum(
+        "btd,vd->btv", x.astype(compute_dtype), w_out.astype(compute_dtype)
+    ).astype(logits_dtype)
+    if cfg.vocab_real is not None and cfg.vocab_real < cfg.vocab:
+        # TP-padded vocab rows must never win a softmax (exact semantics)
+        vpos = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        logits = jnp.where(vpos < cfg.vocab_real, logits, -1e9)
+    logits = shard(logits, "act_batch", "act_seq", "act_vocab")
+    return logits, new_cache, aux
+
+
+def loss_fn(
+    cfg: ArchConfig,
+    params: Params,
+    batch: Dict[str, jnp.ndarray],
+    mesh=None,
+    use_kernels: bool = False,
+    compute_dtype=jnp.float32,
+    remat: bool = False,
+    z_loss: float = 1e-4,
+    unroll_groups: bool = False,
+):
+    """Next-token cross entropy (+ router aux loss + z-loss).  Labels come
+    from ``batch['labels']``; positions where ``labels < 0`` are masked."""
+    logits, _, aux = forward(
+        cfg, params, batch, mode="train", mesh=mesh,
+        use_kernels=use_kernels, compute_dtype=compute_dtype, remat=remat,
+        unroll_groups=unroll_groups,
+    )
+    labels = batch["labels"]
+    valid = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # vocab-parallel label pick: a take_along_axis over the vocab-sharded
+    # logits would force an all-gathered (B, T, V) buffer per device; the
+    # masked sum partitions as a local reduce + cross-shard add instead.
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    ll = jnp.sum(
+        jnp.where(vocab_iota == labels_safe[..., None], logits, 0.0), axis=-1
+    )
+    nll = (logz - ll) * valid
+    denom = jnp.maximum(valid.sum(), 1.0)
+    ce = nll.sum() / denom
+    zl = z_loss * ((logz * valid) ** 2).sum() / denom
+    total = ce + zl + cfg.router_aux_weight * aux
+    return total, {"ce": ce, "z_loss": zl, "aux": aux, "tokens": denom}
+
+
+def prefill(
+    cfg: ArchConfig, params: Params, batch, max_cache_len: int,
+    mesh=None, use_kernels: bool = False, compute_dtype=jnp.float32,
+    unroll_groups: bool = False, last_only: bool = False,
+):
+    return forward(
+        cfg, params, batch, mode="prefill", mesh=mesh,
+        use_kernels=use_kernels, compute_dtype=compute_dtype,
+        max_cache_len=max_cache_len, unroll_groups=unroll_groups,
+        last_only=last_only,
+    )
+
+
+def decode_step(
+    cfg: ArchConfig, params: Params, batch, cache,
+    mesh=None, use_kernels: bool = False, compute_dtype=jnp.float32,
+    unroll_groups: bool = False,
+):
+    """One decode step: batch['tokens'] (B, 1) (or (B, k) for speculative
+    chunks), batch['positions'] (B, k) absolute positions."""
+    return forward(
+        cfg, params, batch, mode="decode", cache=cache, mesh=mesh,
+        use_kernels=use_kernels, compute_dtype=compute_dtype,
+        unroll_groups=unroll_groups,
+    )

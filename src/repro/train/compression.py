@@ -1,0 +1,75 @@
+"""Error-feedback gradient compression for the cross-pod (DCN) hop.
+
+At 1000+-node scale the pod-axis gradient reduction rides the slowest
+fabric.  Standard mitigation: compress only the *cross-pod* summand and keep
+full precision inside the pod, with **error feedback** (the compression
+residual is added back into the next step's gradient) so convergence is
+preserved.
+
+``compress``/``decompress`` implement stochastic-rounding int8 with a
+per-block scale (block = last axis), and bf16 truncation.  They are pure
+functions usable inside the jitted train step; the residual buffer is part
+of the train state.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_int8", "decompress_int8", "ef_compress_tree", "ef_ratio"]
+
+
+def compress_int8(x: jnp.ndarray, key) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise (per-row) int8 quantization with stochastic rounding.
+    Returns (q int8, scale f32)."""
+    xf = x.astype(jnp.float32)
+    flat = xf.reshape(-1, x.shape[-1]) if x.ndim > 1 else xf.reshape(1, -1)
+    scale = jnp.max(jnp.abs(flat), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    y = flat / scale
+    noise = jax.random.uniform(key, y.shape) - 0.5
+    q = jnp.clip(jnp.round(y + noise), -127, 127).astype(jnp.int8)
+    return q.reshape(x.shape), scale.reshape(
+        x.shape[:-1] + (1,) if x.ndim > 1 else (1, 1)
+    )
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, residual, key, kind: str = "int8"):
+    """Error-feedback compression over a gradient pytree.
+
+    Returns (compressed_then_decompressed_grads, new_residual).  The
+    returned grads are what the *cross-pod* reduction transports (already
+    reconstructed, so the caller's collective code stays dtype-agnostic in
+    this reference implementation; a deployment would move the int8 payload
+    itself).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    res_leaves = jax.tree_util.tree_leaves(residual)
+    keys = jax.random.split(key, len(leaves))
+    out, new_res = [], []
+    for g, r, k in zip(leaves, res_leaves, keys):
+        gf = g.astype(jnp.float32) + r
+        if kind == "int8":
+            q, s = compress_int8(gf, k)
+            rec = decompress_int8(q, s)
+        elif kind == "bf16":
+            rec = gf.astype(jnp.bfloat16).astype(jnp.float32)
+        else:
+            raise ValueError(kind)
+        out.append(rec.astype(g.dtype))
+        new_res.append(gf - rec)
+    return (
+        jax.tree_util.tree_unflatten(treedef, out),
+        jax.tree_util.tree_unflatten(treedef, new_res),
+    )
+
+
+def ef_ratio(kind: str) -> float:
+    """Bytes-on-the-wire ratio vs f32 (for the roofline's collective term)."""
+    return {"int8": 0.25, "bf16": 0.5, "none": 1.0}[kind]

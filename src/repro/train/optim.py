@@ -1,0 +1,103 @@
+"""AdamW from scratch (pytree-native), with global-norm clipping and a
+linear-warmup cosine schedule.  Optimizer state shards exactly like the
+parameters (the ``m``/``v`` trees inherit the param PartitionSpecs), which
+is what makes the FSDP-over-'data' layout hold end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update", "cosine_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    #: parameters whose path contains any of these substrings are excluded
+    #: from weight decay (norms, biases, router plan tensors).
+    no_decay: tuple = ("norm", "bias", "scale", "plan_", "A_log", "dt_bias")
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros(), v=zeros())
+
+
+def cosine_schedule(
+    base_lr: float, warmup_steps: int, total_steps: int, min_frac: float = 0.1
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        prog = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+            0.0, 1.0,
+        )
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr
+
+
+def _decay_mask(params, no_decay) -> Any:
+    def mask(kp, _):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", ""))) for k in kp)
+        return not any(s in path for s in no_decay)
+
+    return jax.tree_util.tree_map_with_path(mask, params)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(
+        jnp.sum(jnp.square(a.astype(jnp.float32)))
+        for a in jax.tree_util.tree_leaves(tree)
+    )
+    return jnp.sqrt(sq)
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    params,
+    grads,
+    state: AdamWState,
+    lr_fn: Optional[Callable] = None,
+) -> tuple:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: (g * scale).astype(jnp.float32), grads)
+
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    m = jax.tree.map(lambda a, g: cfg.b1 * a + (1 - cfg.b1) * g, state.m, grads)
+    v = jax.tree.map(lambda a, g: cfg.b2 * a + (1 - cfg.b2) * g * g, state.v, grads)
+    bc1 = 1 - cfg.b1**t
+    bc2 = 1 - cfg.b2**t
+    lr = (lr_fn(state.step) if lr_fn is not None else cfg.lr)
+    decay = _decay_mask(params, cfg.no_decay)
+
+    def upd(p, mi, vi, dec):
+        u = (mi / bc1) / (jnp.sqrt(vi / bc2) + cfg.eps)
+        if dec:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v, decay)
+    return new_params, AdamWState(step=step, m=m, v=v), {
+        "grad_norm": gnorm, "lr": lr,
+    }

@@ -1,0 +1,156 @@
+"""The jitted training step: microbatched grad accumulation, AdamW,
+optional cross-pod error-feedback gradient compression.
+
+``make_train_step`` returns (step_fn, state_shardings); the launcher jits
+it with the parameter/optimizer shardings from ``model.param_shardings``
+(FSDP over 'data', TP/EP over 'model', DP over 'pod'×'data').  Gradient
+reductions across the data/pod axes are inserted by XLA SPMD; the
+*planned* hierarchical cross-pod schedule is available separately in
+:mod:`repro.train.collective_schedule` (shard_map implementation driven by
+:mod:`repro.core.collective_plan`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from ..models.config import ArchConfig
+from .compression import ef_compress_tree
+from .optim import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+__all__ = ["TrainState", "TrainConfig", "make_train_step", "init_state"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    residual: Any  # error-feedback residual (zeros when compression off)
+    rng: jnp.ndarray
+    step: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+    remat: bool = True
+    compute_dtype: Any = jnp.bfloat16
+    compression: str = "none"  # none | bf16 | int8
+    use_kernels: bool = False
+    z_loss: float = 1e-4
+    unroll_groups: bool = False  # analysis builds (see launch.dryrun)
+
+
+def init_state(cfg: ArchConfig, params, seed: int = 0,
+               compression: str = "none") -> TrainState:
+    residual = (
+        jax.tree.map(lambda a: jnp.zeros_like(a, jnp.float32), params)
+        if compression != "none"
+        else jax.tree.map(lambda a: jnp.zeros((), jnp.float32), params)
+    )
+    return TrainState(
+        params=params,
+        opt=adamw_init(params),
+        residual=residual,
+        rng=jax.random.PRNGKey(seed),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    tcfg: TrainConfig,
+    mesh=None,
+    lr_fn: Optional[Callable] = None,
+) -> Callable:
+    """Build the pure train-step function (jit/lower it at the call site)."""
+
+    def loss_for(params, batch):
+        return M.loss_fn(
+            cfg, params, batch, mesh=mesh,
+            use_kernels=tcfg.use_kernels,
+            compute_dtype=tcfg.compute_dtype,
+            remat=tcfg.remat, z_loss=tcfg.z_loss,
+            unroll_groups=tcfg.unroll_groups,
+        )
+
+    grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        if tcfg.microbatches > 1:
+            k = tcfg.microbatches
+
+            def mb(batch_part):
+                return jax.tree.map(
+                    lambda a: a.reshape((k, a.shape[0] // k) + a.shape[1:]),
+                    batch_part,
+                )
+
+            batches = mb(batch)
+
+            def acc(carry, mb_batch):
+                g_acc, l_acc = carry
+                (l, metrics), g = grad_fn(state.params, mb_batch)
+                g_acc = jax.tree.map(lambda a, b: a + b, g_acc, g)
+                return (g_acc, l_acc + l), metrics
+
+            g0 = jax.tree.map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), state.params
+            )
+            (g_sum, l_sum), metrics_stack = jax.lax.scan(
+                acc, (g0, jnp.float32(0.0)), batches
+            )
+            grads = jax.tree.map(lambda a: a / k, g_sum)
+            loss = l_sum / k
+            metrics = jax.tree.map(lambda a: a[-1], metrics_stack)
+        else:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+
+        rng, sub = jax.random.split(state.rng)
+        residual = state.residual
+        if tcfg.compression != "none":
+            grads, residual = ef_compress_tree(
+                grads, residual, sub, kind=tcfg.compression
+            )
+
+        params, opt, opt_metrics = adamw_update(
+            tcfg.adamw, state.params, grads, state.opt, lr_fn
+        )
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return (
+            TrainState(params=params, opt=opt, residual=residual,
+                       rng=rng, step=state.step + 1),
+            metrics,
+        )
+
+    return train_step
+
+
+def state_shardings(cfg: ArchConfig, state_shape: TrainState, mesh):
+    """NamedSharding pytree for the train state: optimizer moments and
+    residuals shard exactly like their parameters; scalars replicate."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    pspecs = M.param_shardings(cfg, state_shape.params)
+    as_named = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    rep = NamedSharding(mesh, P())
+
+    def like_params(tree):
+        # moments/residual trees mirror params; scalar placeholders replicate
+        return jax.tree.map(
+            lambda leaf, sh: rep if leaf.ndim == 0 else sh, tree, as_named
+        )
+
+    return TrainState(
+        params=as_named,
+        opt=AdamWState(step=rep, m=like_params(state_shape.opt.m),
+                       v=like_params(state_shape.opt.v)),
+        residual=like_params(state_shape.residual),
+        rng=rep,
+        step=rep,
+    )

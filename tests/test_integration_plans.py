@@ -1,0 +1,76 @@
+"""Tests for the TPU-side integrations of the paper's planner:
+cross-pod gradient aggregation and MoE dispatch planning."""
+import numpy as np
+import pytest
+
+from repro.core.collective_plan import plan_cross_pod_reduction
+from repro.core.moe_plan import plan_moe_dispatch
+
+
+class TestCrossPodReduction:
+    def test_homogeneous_dcn_is_uniform(self):
+        rp = plan_cross_pod_reduction(
+            grad_mb=4000.0, pod_dcn_bw_mbps=[6400] * 4, n_elements=1 << 20
+        )
+        assert np.allclose(rp.fractions, 0.25, atol=0.02)
+        assert rp.speedup_vs_uniform == pytest.approx(1.0, abs=1e-3)
+
+    def test_slow_pod_owns_less(self):
+        rp = plan_cross_pod_reduction(
+            grad_mb=4000.0,
+            pod_dcn_bw_mbps=[6400, 6400, 1600, 6400],
+            n_elements=1 << 20,
+        )
+        assert rp.fractions[2] < 0.15  # the 4x-slower pod owns much less
+        assert rp.speedup_vs_uniform > 1.05
+        # never worse than uniform, by construction
+        assert rp.est_time_s <= rp.uniform_time_s + 1e-9
+
+    def test_segments_partition_exactly(self):
+        n = 1_000_003  # deliberately non-aligned
+        rp = plan_cross_pod_reduction(
+            grad_mb=1000.0, pod_dcn_bw_mbps=[6400, 3200], n_elements=n
+        )
+        assert int(rp.segment_sizes.sum()) == n
+        assert (rp.segment_sizes >= 0).all()
+        offs = rp.segment_offsets()
+        assert offs[0] == 0 and offs[-1] == n
+
+
+class TestMoEDispatch:
+    def test_homogeneous_is_uniform(self):
+        mp = plan_moe_dispatch(
+            tokens_mb_per_shard=64.0,
+            n_token_shards=4,
+            group_pod=[0, 0, 1, 1],
+            shard_pod=[0, 0, 1, 1],
+            top_k=1,
+        )
+        assert np.allclose(mp.group_fractions, 0.25, atol=0.02)
+
+    def test_slow_experts_get_fewer_tokens(self):
+        mp = plan_moe_dispatch(
+            tokens_mb_per_shard=64.0,
+            n_token_shards=4,
+            group_pod=[0, 0, 1, 1],
+            shard_pod=[0, 0, 1, 1],
+            top_k=1,
+            expert_flops_rate_mbps=[25000, 25000, 8000, 8000],
+        )
+        assert mp.group_fractions[:2].sum() > mp.group_fractions[2:].sum()
+        assert mp.speedup_vs_uniform > 1.1
+        # the bias implements the fractions in log space
+        assert np.all(mp.router_bias[:2] > mp.router_bias[2:].max())
+
+    def test_capacity_cap_respected(self):
+        mp = plan_moe_dispatch(
+            tokens_mb_per_shard=64.0,
+            n_token_shards=2,
+            group_pod=[0, 1, 1, 1],
+            shard_pod=[0, 1],
+            top_k=2,
+            expert_flops_rate_mbps=[50000, 1000, 1000, 1000],
+            max_capacity_factor=2.0,
+        )
+        assert mp.group_fractions.max() <= 2.0 / 4 + 1e-9
+        assert mp.capacity_factor.max() <= 2.0 + 1e-9

@@ -1,0 +1,141 @@
+"""Tests for the makespan model — including the paper's §1.3 worked example."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.makespan import (
+    BARRIERS_ALL_GLOBAL,
+    BARRIERS_ALL_PIPELINED,
+    makespan,
+    phase_breakdown,
+)
+from repro.core.plan import ExecutionPlan, local_push_plan, uniform_plan
+from repro.core.platform import (
+    Platform,
+    planetlab_platform,
+    two_cluster_example,
+)
+
+GB = 1000.0  # MB
+
+
+class TestPaperWorkedExample:
+    """§1.3: the two-cluster example, closed-form numbers from the text."""
+
+    def test_homogeneous_uniform_push(self):
+        # alpha=1, all links 100 MB/s, compute 100 MB/s: uniform placement.
+        p = two_cluster_example(alpha=1.0, nonlocal_bw=100.0)
+        up = uniform_plan(p)
+        # push_end per mapper = max(75GB, 25GB)/100MBps = 750 s
+        assert phase_breakdown(p, up)["push"] == pytest.approx(750.0)
+
+    def test_slow_nonlocal_links_favor_local_push(self):
+        p = two_cluster_example(alpha=1.0, nonlocal_bw=10.0)
+        lp = local_push_plan(p)
+        up = uniform_plan(p)
+        # paper: local push = 150 GB / 100 MBps = 1500 s
+        assert phase_breakdown(p, lp)["push"] == pytest.approx(1500.0)
+        # paper: uniform push = 75 GB / 10 MBps = 7500 s
+        assert phase_breakdown(p, up)["push"] == pytest.approx(7500.0)
+        # map phase for uniform is smaller by 50GB/100MBps = 500 s
+        map_local = phase_breakdown(p, lp)["map"]
+        map_uniform = phase_breakdown(p, up)["map"]
+        assert map_local - map_uniform == pytest.approx(500.0)
+        # ... but local push still wins end-to-end
+        assert makespan(p, lp) < makespan(p, up)
+
+    def test_large_alpha_prefers_consolidation(self):
+        # alpha=10: pushing D2 to M1 and reducing all in cluster 1 avoids
+        # non-local traffic in the communication-heavy shuffle.
+        p = two_cluster_example(alpha=10.0, nonlocal_bw=10.0)
+        consolidated = ExecutionPlan(
+            x=np.array([[1.0, 0.0], [1.0, 0.0]]), y=np.array([1.0, 0.0])
+        )
+        lp = local_push_plan(p)
+        assert makespan(p, consolidated) < makespan(p, lp)
+        # and the local push *is* push-myopically optimal despite losing e2e
+        assert phase_breakdown(p, lp)["push"] <= phase_breakdown(p, consolidated)["push"]
+
+
+class TestBarrierSemantics:
+    @pytest.mark.parametrize("alpha", [0.1, 1.0, 10.0])
+    def test_relaxation_never_hurts(self, alpha):
+        """P ≤ L ≤ G at every boundary, for any fixed plan (more overlap can
+        only shrink the modeled makespan)."""
+        p = planetlab_platform(8, alpha=alpha, seed=3)
+        plan = uniform_plan(p)
+        order = {"G": 2, "L": 1, "P": 0}
+        import itertools
+
+        for b1 in itertools.product("GLP", repeat=3):
+            for b2 in itertools.product("GLP", repeat=3):
+                if all(order[a] >= order[b] for a, b in zip(b1, b2)):
+                    assert makespan(p, plan, b1) >= makespan(p, plan, b2) - 1e-6
+
+    def test_global_barrier_decomposes_sequentially(self):
+        p = planetlab_platform(8, alpha=1.0, seed=0)
+        plan = uniform_plan(p)
+        bd = phase_breakdown(p, plan, BARRIERS_ALL_GLOBAL)
+        assert bd["push"] + bd["map"] + bd["shuffle"] + bd["reduce"] == pytest.approx(
+            bd["makespan"], rel=1e-6
+        )
+
+    def test_smooth_is_upper_bound(self):
+        p = planetlab_platform(8, alpha=1.0, seed=1)
+        plan = uniform_plan(p)
+        hard = makespan(p, plan, BARRIERS_ALL_GLOBAL)
+        for tau in [1.0, 10.0, 100.0]:
+            smooth = makespan(p, plan, BARRIERS_ALL_GLOBAL, tau=tau)
+            assert smooth >= hard - 1e-4
+        # and converges as tau -> 0
+        assert makespan(p, plan, BARRIERS_ALL_GLOBAL, tau=1e-3) == pytest.approx(
+            hard, rel=1e-4
+        )
+
+
+class TestModelProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        alpha=st.floats(0.05, 12.0),
+        scale=st.floats(1.1, 4.0),
+    )
+    def test_more_bandwidth_never_slower(self, seed, alpha, scale):
+        p = planetlab_platform(8, alpha=alpha, seed=seed % 17)
+        plan = uniform_plan(p)
+        import dataclasses
+
+        faster = dataclasses.replace(
+            p, B_sm=p.B_sm * scale, B_mr=p.B_mr * scale
+        )
+        for barriers in [BARRIERS_ALL_GLOBAL, BARRIERS_ALL_PIPELINED]:
+            assert makespan(faster, plan, barriers) <= makespan(p, plan, barriers) + 1e-6
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000), scale=st.floats(1.1, 4.0))
+    def test_more_compute_never_slower(self, seed, scale):
+        p = planetlab_platform(8, alpha=1.0, seed=seed % 17)
+        plan = uniform_plan(p)
+        import dataclasses
+
+        faster = dataclasses.replace(p, C_m=p.C_m * scale, C_r=p.C_r * scale)
+        assert makespan(faster, plan) <= makespan(p, plan) + 1e-6
+
+    @settings(max_examples=25, deadline=None)
+    @given(a1=st.floats(0.1, 5.0), a2=st.floats(0.1, 5.0))
+    def test_monotone_in_alpha(self, a1, a2):
+        """More intermediate data can never make a fixed plan faster."""
+        lo, hi = sorted([a1, a2])
+        p = planetlab_platform(8, alpha=lo, seed=5)
+        plan = uniform_plan(p)
+        assert makespan(p.with_alpha(hi), plan) >= makespan(p, plan) - 1e-6
+
+    def test_scale_invariance(self):
+        """Scaling all data sizes by c scales the makespan by c."""
+        import dataclasses
+
+        p = planetlab_platform(8, alpha=1.0, seed=2)
+        plan = uniform_plan(p)
+        p2 = dataclasses.replace(p, D=p.D * 3.0)
+        assert makespan(p2, plan) == pytest.approx(3.0 * makespan(p, plan), rel=1e-6)

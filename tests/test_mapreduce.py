@@ -1,0 +1,148 @@
+"""MapReduce engine tests: correctness of the three applications against
+plain-python references, plan enforcement, byte accounting, and the
+plan-quality ordering on the emulated PlanetLab platform."""
+import numpy as np
+import pytest
+
+from repro.core.optimize import optimize_plan
+from repro.core.plan import local_push_plan, uniform_plan
+from repro.core.platform import planetlab_platform
+from repro.mapreduce.apps import (
+    generate_documents,
+    generate_logs,
+    inverted_index,
+    sessionization,
+    synthetic_alpha_job,
+    word_count,
+)
+from repro.mapreduce.engine import GeoMapReduce
+from repro.mapreduce.partition import bucket_owners, hash_keys
+
+
+@pytest.fixture(scope="module")
+def platform():
+    return planetlab_platform(8, alpha=1.0, seed=0)
+
+
+def _split_sources(keys, values, n):
+    ks = np.array_split(keys, n)
+    vs = np.array_split(values, n)
+    return list(zip(ks, vs))
+
+
+class TestPartition:
+    def test_bucket_owners_proportional(self):
+        y = np.array([0.5, 0.25, 0.25])
+        owners = bucket_owners(y, 400)
+        counts = np.bincount(owners, minlength=3)
+        assert counts.tolist() == [200, 100, 100]
+
+    def test_hash_deterministic_and_spread(self):
+        keys = np.arange(10_000, dtype=np.int64)
+        b1 = hash_keys(keys, 64)
+        b2 = hash_keys(keys, 64)
+        np.testing.assert_array_equal(b1, b2)
+        counts = np.bincount(b1, minlength=64)
+        assert counts.min() > 0.5 * counts.mean()
+
+
+class TestWordCount:
+    def test_counts_exact(self, platform):
+        keys, vals = generate_documents(200, 50, seed=1)
+        app = word_count()
+        eng = GeoMapReduce(platform, uniform_plan(platform), app)
+        outs, stats = eng.run(_split_sources(keys, vals, platform.nS))
+        got = {}
+        for k, v in outs:
+            for kk, vv in zip(k, v):
+                got[int(kk)] = got.get(int(kk), 0) + int(vv)
+        words = (vals & ((1 << 20) - 1)).astype(np.int64)
+        expect = {int(w): int(c) for w, c in zip(*np.unique(words, return_counts=True))}
+        assert got == expect
+
+    def test_word_count_aggregates(self, platform):
+        keys, vals = generate_documents(200, 50, seed=1)
+        app = word_count()
+        eng = GeoMapReduce(platform, uniform_plan(platform), app)
+        _, stats = eng.run(_split_sources(keys, vals, platform.nS))
+        # heavy aggregation: far fewer intermediate records than inputs
+        assert stats.alpha_measured < 0.7
+
+    def test_one_reducer_per_key(self, platform):
+        """No word may appear in two reducers' outputs (Equation 3)."""
+        keys, vals = generate_documents(100, 40, seed=2)
+        eng = GeoMapReduce(platform, uniform_plan(platform), word_count())
+        outs, _ = eng.run(_split_sources(keys, vals, platform.nS))
+        seen = {}
+        for r, (k, _) in enumerate(outs):
+            for kk in np.unique(k):
+                assert kk not in seen, (kk, seen.get(kk), r)
+                seen[int(kk)] = r
+
+
+class TestSessionization:
+    def test_sessions_match_reference(self, platform):
+        users, vals = generate_logs(5000, n_users=50, seed=3)
+        eng = GeoMapReduce(platform, uniform_plan(platform), sessionization(gap=1000))
+        outs, stats = eng.run(_split_sources(users, vals, platform.nS))
+        assert stats.alpha_measured == pytest.approx(1.0)
+        # reference: per-user sorted timestamps, session cut at gap>1000
+        ts_all = (vals & ((1 << 32) - 1)).astype(np.int64)
+        for k, v in outs:
+            for u in np.unique(k):
+                got_ts = np.sort((v[k == u] & ((1 << 32) - 1)).astype(np.int64))
+                ref_ts = np.sort(ts_all[users == u])
+                np.testing.assert_array_equal(got_ts, ref_ts)
+                got_sess = (v[k == u] >> 32)
+                n_sessions = len(np.unique(got_sess))
+                gaps = np.diff(ref_ts)
+                assert n_sessions == 1 + int((gaps > 1000).sum())
+
+
+class TestInvertedIndex:
+    def test_index_complete_and_expanding(self, platform):
+        keys, vals = generate_documents(100, 30, seed=4)
+        eng = GeoMapReduce(platform, uniform_plan(platform), inverted_index())
+        outs, stats = eng.run(_split_sources(keys, vals, platform.nS))
+        assert stats.alpha_measured > 1.0  # full index expands the data
+        total_postings = sum(len(k) for k, _ in outs)
+        assert total_postings == len(vals)  # every (doc,pos,word) indexed
+
+
+class TestSyntheticAlpha:
+    @pytest.mark.parametrize("alpha", [0.5, 1.0, 2.0])
+    def test_alpha_control(self, platform, alpha):
+        keys = np.arange(4000, dtype=np.int64)
+        vals = keys.copy()
+        eng = GeoMapReduce(platform, uniform_plan(platform), synthetic_alpha_job(alpha))
+        _, stats = eng.run(_split_sources(keys, vals, platform.nS))
+        assert stats.alpha_measured == pytest.approx(alpha, rel=0.02)
+
+
+class TestPlanEnforcement:
+    def test_push_bytes_follow_plan(self, platform):
+        keys = np.arange(80_000, dtype=np.int64)
+        vals = keys.copy()
+        plan = optimize_plan(platform, "e2e_multi", n_restarts=6, steps=250).plan
+        eng = GeoMapReduce(platform, plan, synthetic_alpha_job(1.0))
+        _, stats = eng.run(_split_sources(keys, vals, platform.nS))
+        frac = stats.push_bytes / stats.push_bytes.sum(axis=1, keepdims=True)
+        np.testing.assert_allclose(frac, plan.x, atol=2e-3)
+
+    def test_optimized_beats_uniform_and_local(self, platform):
+        """Fig 9 in miniature: measured-bytes makespan ordering on the
+        emulated PlanetLab platform."""
+        keys, vals = generate_documents(400, 60, seed=5)
+        srcs = _split_sources(keys, vals, platform.nS)
+        app = word_count()
+        results = {}
+        for name, plan in [
+            ("uniform", uniform_plan(platform)),
+            ("hadoop_local", local_push_plan(platform)),
+            ("optimized", optimize_plan(platform, "e2e_multi",
+                                        n_restarts=8, steps=300).plan),
+        ]:
+            _, stats = GeoMapReduce(platform, plan, app).run(srcs)
+            results[name] = stats.makespan(platform)["makespan"]
+        assert results["optimized"] < results["hadoop_local"]
+        assert results["optimized"] < results["uniform"]

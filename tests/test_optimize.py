@@ -1,0 +1,136 @@
+"""Tests for the plan optimizer (paper §2.3/§4) and its validation against
+brute force and the paper's linearization."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.makespan import BARRIERS_ALL_GLOBAL, makespan, phase_breakdown
+from repro.core.milp import (
+    linearization_gap,
+    separable_product,
+    worst_case_pwl_deviation,
+)
+from repro.core.optimize import brute_force_plan, optimize_plan
+from repro.core.plan import uniform_plan, validate_plan
+from repro.core.platform import planetlab_platform, two_cluster_example
+
+
+class TestOptimizer:
+    def test_beats_brute_force_grid(self):
+        """e2e_multi must match or beat a grid-20 brute force on the tiny
+        two-cluster instance (the brute force is itself only grid-exact)."""
+        for alpha in [0.1, 1.0, 10.0]:
+            p = two_cluster_example(alpha=alpha, nonlocal_bw=10.0)
+            opt = optimize_plan(p, "e2e_multi", n_restarts=12, steps=400)
+            bf = brute_force_plan(p, grid=20)
+            assert opt.makespan <= bf.makespan * 1.02
+
+    def test_e2e_multi_dominates_other_modes(self):
+        p = planetlab_platform(8, alpha=1.0, seed=0)
+        multi = optimize_plan(p, "e2e_multi", n_restarts=16, steps=400)
+        for mode in ["uniform", "local_push", "myopic_multi", "e2e_push", "e2e_shuffle"]:
+            other = optimize_plan(p, mode, n_restarts=8, steps=300)
+            assert multi.makespan <= other.makespan * 1.01, mode
+
+    def test_myopic_push_minimizes_push_duration(self):
+        p = planetlab_platform(8, alpha=1.0, seed=1)
+        myopic = optimize_plan(p, "myopic_push", n_restarts=12, steps=400)
+        e2e = optimize_plan(p, "e2e_multi", n_restarts=12, steps=400)
+        # myopically optimal push is at least as fast *in the push phase* ...
+        assert (
+            phase_breakdown(p, myopic.plan)["push"]
+            <= phase_breakdown(p, e2e.plan)["push"] * 1.05
+        )
+        # ... but loses (or at best ties) end-to-end
+        assert e2e.makespan <= myopic.makespan * 1.01
+
+    def test_homogeneous_platform_optimizer_matches_uniform(self):
+        """§4.5: in a single homogeneous data center the uniform schedule is
+        near-optimal; the optimizer should not do better by more than a hair
+        and must not do worse."""
+        p = planetlab_platform(1, alpha=1.0, seed=0, compute_heterogeneity=False)
+        opt = optimize_plan(p, "e2e_multi", n_restarts=8, steps=300)
+        uni = makespan(p, uniform_plan(p))
+        assert opt.makespan <= uni * 1.001
+        assert opt.makespan >= uni * 0.95
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 1000), alpha=st.sampled_from([0.1, 1.0, 10.0]))
+    def test_plans_always_valid_and_never_worse_than_uniform(self, seed, alpha):
+        p = planetlab_platform(4, alpha=alpha, seed=seed % 13)
+        r = optimize_plan(p, "e2e_multi", n_restarts=6, steps=250, seed=seed)
+        validate_plan(r.plan.x, r.plan.y)
+        assert np.isfinite(r.makespan)
+        assert r.makespan <= makespan(p, uniform_plan(p)) + 1e-6
+
+
+class TestPaperHeadlines:
+    """§4.2/§4.3 headline numbers, on the globally-distributed 8-DC setup."""
+
+    @pytest.fixture(scope="class")
+    def results(self):
+        out = {}
+        for alpha in [0.1, 1.0, 10.0]:
+            p = planetlab_platform(8, alpha=alpha, seed=0)
+            out[alpha] = {
+                mode: optimize_plan(p, mode, n_restarts=16, steps=400)
+                for mode in [
+                    "uniform",
+                    "myopic_multi",
+                    "e2e_push",
+                    "e2e_shuffle",
+                    "e2e_multi",
+                ]
+            }
+        return out
+
+    def test_e2e_multi_strongly_beats_uniform(self, results):
+        # paper: 82-87% reduction over uniform across alpha
+        for alpha, r in results.items():
+            red = 1 - r["e2e_multi"].makespan / r["uniform"].makespan
+            assert red > 0.60, (alpha, red)
+
+    def test_e2e_multi_beats_myopic(self, results):
+        # paper: 65-82% reduction over myopic multi-phase.  On our sampled
+        # Table-1 platform the myopic gap grows with alpha (when push
+        # dominates at alpha=0.1, a myopically optimal push is close to
+        # end-to-end optimal); at alpha=10 we reproduce the paper's ~66%.
+        floors = {0.1: 0.05, 1.0: 0.18, 10.0: 0.50}
+        for alpha, r in results.items():
+            red = 1 - r["e2e_multi"].makespan / r["myopic_multi"].makespan
+            assert red > floors[alpha], (alpha, red)
+
+    def test_multi_phase_beats_best_single_phase(self, results):
+        # paper: 37-64% over the best single-phase optimization
+        for alpha, r in results.items():
+            best_single = min(r["e2e_push"].makespan, r["e2e_shuffle"].makespan)
+            red = 1 - r["e2e_multi"].makespan / best_single
+            assert red > 0.15, (alpha, red)
+
+
+class TestLinearization:
+    def test_pwl_square_deviation_small(self):
+        # chord error of w^2 over 9 segments: (1/9)^2 / 4 ≈ 0.0031
+        assert worst_case_pwl_deviation(9) < 0.0062
+
+    def test_separable_identity(self):
+        rng = np.random.default_rng(0)
+        x = rng.uniform(0, 1, size=100)
+        y = rng.uniform(0, 1, size=100)
+        # with many segments the separable form converges to the product
+        assert np.allclose(separable_product(x, y, segments=400), x * y, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 100), alpha=st.sampled_from([0.1, 1.0, 2.0]))
+    def test_linearized_model_tracks_exact(self, seed, alpha):
+        """The paper's MIP objective (9-segment PWL) stays within ~10% of the
+        exact model — i.e. the linearization it solves is faithful."""
+        p = planetlab_platform(8, alpha=alpha, seed=seed % 7)
+        rng = np.random.default_rng(seed)
+        x = rng.dirichlet(np.ones(p.nM), size=p.nS)
+        y = rng.dirichlet(np.ones(p.nR))
+        from repro.core.plan import ExecutionPlan
+
+        plan = ExecutionPlan(x=x, y=y)
+        assert linearization_gap(p, plan) < 0.10

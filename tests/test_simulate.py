@@ -1,0 +1,150 @@
+"""Tests for the discrete-event executor: model agreement, barrier
+semantics, fault tolerance, and the paper's dynamic mechanisms."""
+import numpy as np
+import pytest
+
+from repro.core.makespan import BARRIERS_ALL_GLOBAL, BARRIERS_GGL, makespan
+from repro.core.optimize import optimize_plan
+from repro.core.plan import uniform_plan
+from repro.core.platform import planetlab_platform
+from repro.core.simulate import SimConfig, simulate
+
+
+@pytest.fixture(scope="module")
+def platform():
+    return planetlab_platform(8, alpha=1.0, seed=0)
+
+
+class TestModelAgreement:
+    def test_global_barriers_exact(self, platform):
+        """With global barriers, chunk serialization changes nothing: the
+        executor reproduces the analytic model exactly."""
+        plan = uniform_plan(platform)
+        for barriers in [("G", "G", "G"), ("G", "G", "L")]:
+            model = makespan(platform, plan, barriers)
+            sim = simulate(
+                platform, plan, SimConfig(chunk_mb=32.0, barriers=barriers)
+            ).makespan
+            assert sim == pytest.approx(model, rel=1e-6)
+
+    def test_pipelined_close_to_model(self, platform):
+        """Fully pipelined execution serializes chunks, so it can only be
+        slower than the (optimistic, fully-overlapped) model — but not by
+        much at small chunk sizes."""
+        plan = uniform_plan(platform)
+        model = makespan(platform, plan, ("P", "P", "P"))
+        sim = simulate(
+            platform, plan, SimConfig(chunk_mb=16.0, barriers=("P", "P", "P"))
+        ).makespan
+        assert model <= sim <= model * 1.25
+
+    def test_smaller_chunks_approach_model(self, platform):
+        plan = uniform_plan(platform)
+        model = makespan(platform, plan, ("P", "P", "P"))
+        gaps = []
+        for chunk in [128.0, 32.0, 8.0]:
+            sim = simulate(
+                platform, plan, SimConfig(chunk_mb=chunk, barriers=("P", "P", "P"))
+            ).makespan
+            gaps.append(sim / model - 1.0)
+        assert gaps[0] >= gaps[-1] - 1e-9  # finer chunks, closer to model
+
+
+class TestFaultTolerance:
+    def test_mapper_failure_recovers_all_work(self, platform):
+        plan = optimize_plan(platform, "e2e_multi", n_restarts=6, steps=250).plan
+        healthy = simulate(platform, plan, SimConfig(barriers=BARRIERS_GGL))
+        # kill the busiest mapper early in the run
+        victim = int(np.argmax(plan.x.sum(axis=0)))
+        failed = simulate(
+            platform,
+            plan,
+            SimConfig(barriers=BARRIERS_GGL, fail_mapper=(victim, 1.0)),
+        )
+        assert failed.recovered_chunks > 0
+        assert failed.makespan >= healthy.makespan  # recovery is not free
+        assert np.isfinite(failed.makespan)  # ... but the job completes
+
+    def test_failure_with_zero_assigned_work_is_noop(self, platform):
+        plan = uniform_plan(platform)
+        # failing after completion changes nothing
+        done = simulate(platform, plan, SimConfig(barriers=BARRIERS_GGL)).makespan
+        failed = simulate(
+            platform,
+            plan,
+            SimConfig(barriers=BARRIERS_GGL, fail_mapper=(0, done * 10)),
+        )
+        assert failed.makespan == pytest.approx(done, rel=1e-9)
+        assert failed.recovered_chunks == 0
+
+
+class TestDynamics:
+    def test_speculation_mitigates_straggler_on_lan(self):
+        """An 8x compute straggler in a homogeneous LAN cluster: speculation
+        must reclaim most of the loss (the planner did not know about the
+        slowdown, and relocation is free on a LAN)."""
+        p = planetlab_platform(1, alpha=0.1, seed=0)
+        plan = uniform_plan(p)
+        strag = {("m", 0): 8.0}
+        base = simulate(
+            p, plan,
+            SimConfig(barriers=BARRIERS_GGL, stragglers=strag, chunk_mb=16.0),
+        ).makespan
+        spec = simulate(
+            p, plan,
+            SimConfig(barriers=BARRIERS_GGL, stragglers=strag,
+                      speculation=True, chunk_mb=16.0),
+        ).makespan
+        assert spec < base * 0.7
+
+    def test_speculation_can_hurt_over_wan(self, platform):
+        """Paper §4.6.4: dynamic relocation over a heterogeneous WAN can
+        *degrade* performance by moving intermediate data onto slow shuffle
+        links — reproduce that effect qualitatively."""
+        plan = uniform_plan(platform)
+        strag = {("m", 0): 6.0}
+        base = simulate(
+            platform, plan, SimConfig(barriers=BARRIERS_GGL, stragglers=strag)
+        )
+        spec = simulate(
+            platform, plan,
+            SimConfig(barriers=BARRIERS_GGL, stragglers=strag, speculation=True),
+        )
+        # map time improves ...
+        assert spec.phases()["map"] <= base.phases()["map"]
+        # ... but the relocated output pays on the shuffle links
+        assert spec.phases()["shuffle"] >= base.phases()["shuffle"]
+
+    def test_dynamics_never_lose_chunks(self, platform):
+        plan = uniform_plan(platform)
+        for cfg in [
+            SimConfig(barriers=BARRIERS_GGL, speculation=True, stealing=True,
+                      stragglers={("m", 1): 8.0}),
+            SimConfig(barriers=BARRIERS_GGL, speculation=True,
+                      fail_mapper=(2, 2.0)),
+        ]:
+            r = simulate(platform, plan, cfg)
+            assert np.isfinite(r.makespan) and r.makespan > 0
+
+    def test_replication_slows_push(self, platform):
+        plan = uniform_plan(platform)
+        r1 = simulate(platform, plan, SimConfig(barriers=BARRIERS_GGL, replication=1))
+        r3 = simulate(
+            platform,
+            plan,
+            SimConfig(
+                barriers=BARRIERS_GGL,
+                replication=3,
+                cross_cluster_replication=True,
+            ),
+        )
+        # paper §4.6.5: wide-area replication substantially increases push cost
+        assert r3.push_end > r1.push_end
+        assert r3.wasted_mb > 0
+
+    def test_noise_determinism(self, platform):
+        plan = uniform_plan(platform)
+        cfg = SimConfig(barriers=BARRIERS_GGL, compute_noise=0.2, seed=42)
+        a = simulate(platform, plan, cfg).makespan
+        b = simulate(platform, plan, cfg).makespan
+        assert a == b

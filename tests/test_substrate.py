@@ -1,0 +1,227 @@
+"""Substrate tests: optimizer, train step (accumulation/compression),
+checkpoint manager (atomicity, retention, elastic restore), data pipeline
+determinism, serving engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.data.pipeline import GeoDataPipeline, synthetic_lm_batch
+from repro.core.platform import tpu_pod_platform
+from repro.models import model as M
+from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.train.checkpoint import CheckpointManager
+from repro.train.compression import ef_compress_tree
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.train.train_step import TrainConfig, init_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _batch(cfg, step=0, B=4, T=32):
+    return {
+        k: jnp.asarray(v)
+        for k, v in synthetic_lm_batch(cfg.vocab, B, T, step, seed=7).items()
+    }
+
+
+class TestOptim:
+    def test_adamw_converges_quadratic(self):
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = adamw_init(params)
+        cfg = AdamWConfig(lr=0.3, weight_decay=0.0)
+        for _ in range(200):
+            g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+            params, state, _ = adamw_update(cfg, params, g, state)
+        assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+    def test_grad_clip(self):
+        params = {"w": jnp.zeros(3)}
+        state = adamw_init(params)
+        cfg = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+        _, _, m = adamw_update(cfg, params, {"w": jnp.full(3, 100.0)}, state)
+        assert float(m["grad_norm"]) > 100
+
+    def test_cosine_schedule(self):
+        lr = cosine_schedule(1.0, warmup_steps=10, total_steps=100)
+        assert float(lr(jnp.int32(0))) == 0.0
+        assert float(lr(jnp.int32(10))) == pytest.approx(1.0)
+        assert float(lr(jnp.int32(100))) == pytest.approx(0.1, abs=1e-6)
+
+
+class TestTrainStep:
+    def test_loss_decreases(self, small):
+        cfg, params = small
+        tcfg = TrainConfig(adamw=AdamWConfig(lr=1e-2), remat=False,
+                           compute_dtype=jnp.float32)
+        step = jax.jit(make_train_step(cfg, tcfg))
+        state = init_state(cfg, params)
+        batch = _batch(cfg)
+        losses = []
+        for _ in range(5):
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0]
+        assert int(state.step) == 5
+
+    def test_microbatch_accumulation_matches_full(self, small):
+        """grad-accumulated step == single-batch step (same data)."""
+        cfg, params = small
+        batch = _batch(cfg, B=8)
+        outs = {}
+        for k in (1, 4):
+            tcfg = TrainConfig(adamw=AdamWConfig(lr=1e-2), microbatches=k,
+                               remat=False, compute_dtype=jnp.float32)
+            step = jax.jit(make_train_step(cfg, tcfg))
+            state, _ = step(init_state(cfg, params), batch)
+            outs[k] = state.params
+        diff = jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a - b))), outs[1], outs[4]
+        )
+        assert max(jax.tree_util.tree_leaves(diff)) < 5e-3
+
+    def test_compression_error_feedback(self, small):
+        cfg, params = small
+        tcfg = TrainConfig(adamw=AdamWConfig(lr=1e-2), compression="int8",
+                           remat=False, compute_dtype=jnp.float32)
+        step = jax.jit(make_train_step(cfg, tcfg))
+        state = init_state(cfg, params, compression="int8")
+        l0 = None
+        for i in range(6):
+            state, metrics = step(state, _batch(cfg, step=0))
+            l0 = l0 or float(metrics["loss"])
+        assert float(metrics["loss"]) < l0  # still trains through int8
+        # residual is live (error feedback active)
+        res_norm = sum(
+            float(jnp.abs(r).sum()) for r in jax.tree_util.tree_leaves(state.residual)
+        )
+        assert res_norm > 0
+
+    def test_ef_compression_reconstruction_error_bounded(self):
+        key = jax.random.PRNGKey(0)
+        g = {"a": jax.random.normal(key, (64, 64))}
+        r = {"a": jnp.zeros((64, 64))}
+        rec, new_r = ef_compress_tree(g, r, key, kind="int8")
+        rel = float(
+            jnp.linalg.norm(rec["a"] - g["a"]) / jnp.linalg.norm(g["a"])
+        )
+        assert rel < 0.05
+        np.testing.assert_allclose(
+            np.asarray(rec["a"] + new_r["a"]), np.asarray(g["a"]), atol=1e-5
+        )
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_retention(self, small, tmp_path):
+        cfg, params = small
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        state = init_state(cfg, params)
+        for s in [1, 2, 3, 4]:
+            mgr.save(s, state.params, extras={"step": s})
+        assert mgr.steps() == [3, 4]  # retention
+        like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                            state.params)
+        restored, extras, step = mgr.restore(None, like)
+        assert step == 4 and extras["step"] == 4
+        for a, b in zip(jax.tree_util.tree_leaves(restored),
+                        jax.tree_util.tree_leaves(state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_uncommitted_checkpoint_ignored(self, small, tmp_path):
+        cfg, params = small
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        mgr.save(1, {"w": jnp.ones(3)})
+        # simulate a crash: step 2 exists without the COMMITTED marker
+        os.makedirs(tmp_path / "step_000000002" / "arrays")
+        assert mgr.latest_step() == 1
+
+    def test_async_save(self, small, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        mgr.save_async(7, {"w": jnp.arange(5.0)})
+        mgr.wait()
+        assert mgr.steps() == [7]
+
+    def test_milestone_survives_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=1)
+        mgr.save(1, {"w": jnp.ones(2)}, milestone=True)
+        for s in [2, 3, 4]:
+            mgr.save(s, {"w": jnp.ones(2)})
+        assert 1 in mgr.steps() and 4 in mgr.steps()
+
+
+class TestDataPipeline:
+    def test_determinism_across_restart(self):
+        p = tpu_pod_platform(n_pods=2, hosts_per_pod=2)
+        pipe = GeoDataPipeline(p, vocab=100, batch=4, seq=16, seed=3)
+        b5 = pipe.batch_at(5)
+        pipe2 = GeoDataPipeline(p, vocab=100, batch=4, seq=16, seed=3)
+        np.testing.assert_array_equal(b5["tokens"], pipe2.batch_at(5)["tokens"])
+
+    def test_prefetch_thread(self):
+        p = tpu_pod_platform(n_pods=2, hosts_per_pod=2)
+        pipe = GeoDataPipeline(p, vocab=100, batch=2, seq=8, seed=0).start(from_step=3)
+        try:
+            s, b = next(pipe)
+            assert s == 3 and b["tokens"].shape == (2, 8)
+            s, _ = next(pipe)
+            assert s == 4
+        finally:
+            pipe.stop()
+
+    def test_plan_beats_myopic_ingest_when_heterogeneous(self):
+        p = tpu_pod_platform(
+            n_pods=2, hosts_per_pod=2, ingest_bw_mbps=3200.0, seed=0,
+            compute_jitter=0.5,
+        )
+        pipe = GeoDataPipeline(p, vocab=100, batch=2, seq=8)
+        assert pipe.modeled_ingest_time() > 0
+        assert len(pipe.assignments) == p.nM
+        for a in pipe.assignments:
+            assert a.fractions.shape == (p.nS,)
+
+
+class TestServeEngine:
+    def test_continuous_batching_serves_all(self, small):
+        cfg, params = small
+        eng = ServeEngine(cfg, params, ServeConfig(slots=2, max_len=64))
+        rng = np.random.default_rng(0)
+        reqs = [
+            Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=n).astype(np.int32),
+                    max_new_tokens=4 + i)
+            for i, n in enumerate([5, 9, 3, 7])
+        ]
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run()
+        assert len(done) == 4
+        for r in reqs:
+            assert r.done and len(r.output) == r.max_new_tokens
+            assert r.ttft_steps is not None
+
+    def test_engine_matches_sequential_decode(self, small):
+        """Engine output for a single request == hand-rolled greedy decode."""
+        cfg, params = small
+        prompt = np.arange(1, 9, dtype=np.int32)
+        eng = ServeEngine(cfg, params, ServeConfig(slots=2, max_len=64))
+        req = Request(rid=0, prompt=prompt, max_new_tokens=5)
+        eng.submit(req)
+        eng.run()
+        # reference: full forward re-run each step
+        toks = list(prompt)
+        out = []
+        for _ in range(5):
+            logits, _, _ = M.forward(
+                cfg, params, {"tokens": jnp.asarray(np.asarray(toks)[None])}
+            )
+            nxt = int(np.argmax(np.asarray(logits[0, -1])))
+            out.append(nxt)
+            toks.append(nxt)
+        assert req.output == out
