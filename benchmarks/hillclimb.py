@@ -60,13 +60,10 @@ def run(cell: str, out_dir: str):
         print(f"[hillclimb] {tag}", flush=True)
         mesh = None
         if "mesh_shape" in kw:
-            import jax
+            from repro.launch.mesh import make_mesh
 
             d, m = kw.pop("mesh_shape")
-            mesh = jax.make_mesh(
-                (d, m), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2,
-            )
+            mesh = make_mesh((d, m), ("data", "model"))
         rep = dr.run_cell(
             arch, shape, multi_pod=False,
             variant=variant.split("_mb")[0],

@@ -21,9 +21,8 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core.makespan import (
-    BARRIERS_ALL_GLOBAL, BARRIERS_GGL, makespan, phase_breakdown,
-)
+from repro.api import GeoJob, split_sources
+from repro.core.makespan import BARRIERS_ALL_GLOBAL, BARRIERS_GGL
 from repro.core.optimize import optimize_plan
 from repro.core.plan import local_push_plan, uniform_plan
 from repro.core.platform import planetlab_platform
@@ -32,7 +31,6 @@ from repro.mapreduce.apps import (
     generate_documents, generate_logs, inverted_index, sessionization,
     word_count,
 )
-from repro.mapreduce.engine import GeoMapReduce
 
 from .common import emit, timeit
 
@@ -46,23 +44,21 @@ def fig4_validation() -> Dict:
     configs = [("G", "P", "L"), ("P", "P", "L"), ("P", "G", "L"), ("G", "G", "L")]
     for alpha in [0.1, 1.0, 2.0]:
         p = planetlab_platform(8, alpha=alpha, seed=0)
+        job = GeoJob(p)
         plans = {
             "uniform": uniform_plan(p),
             "opt": optimize_plan(p, "e2e_multi", **_OPT).plan,
         }
         for barriers, (pname, plan) in itertools.product(configs, plans.items()):
-            preds.append(makespan(p, plan, barriers))
-            meas.append(
-                simulate(p, plan, SimConfig(chunk_mb=32.0, barriers=barriers)).makespan
-            )
+            job.with_plan(plan, barriers)
+            preds.append(job.planned.makespan)
+            meas.append(job.simulate(chunk_mb=32.0).makespan)
     preds, meas = np.asarray(preds), np.asarray(meas)
     slope, intercept = np.polyfit(preds, meas, 1)
     r2 = float(np.corrcoef(preds, meas)[0, 1] ** 2)
-    us, _ = timeit(lambda: simulate(
-        planetlab_platform(8, alpha=1.0, seed=0),
-        uniform_plan(planetlab_platform(8, alpha=1.0, seed=0)),
-        SimConfig(chunk_mb=32.0),
-    ))
+    p = planetlab_platform(8, alpha=1.0, seed=0)
+    bench = GeoJob(p).with_plan(uniform_plan(p))
+    us, _ = timeit(lambda: bench.simulate(chunk_mb=32.0))
     emit("fig4_validation", us, f"R2={r2:.4f};slope={slope:.3f}")
     return {"r2": r2, "slope": float(slope), "n": len(preds)}
 
@@ -140,8 +136,9 @@ def fig8_environments() -> Dict:
 
 
 def fig9_applications() -> Dict:
-    """Three real applications on the plan-driven engine; makespan = actual
-    byte movement priced through the emulated PlanetLab platform."""
+    """Three real applications through the :class:`repro.api.GeoJob` facade;
+    makespan = actual byte movement priced through the emulated PlanetLab
+    platform by the same cost model the planner optimized."""
     out = {}
     apps = {
         "word_count": (word_count(), generate_documents(600, 60, seed=5)),
@@ -149,31 +146,28 @@ def fig9_applications() -> Dict:
         "inverted_index": (inverted_index(), generate_documents(600, 60, seed=6)),
     }
     for name, (app, (keys, vals)) in apps.items():
-        # measure alpha with a probe run to feed the optimizer's model
         probe = planetlab_platform(8, alpha=1.0, seed=0)
-        srcs = [
-            (k, v) for k, v in zip(
-                np.array_split(keys, probe.nS), np.array_split(vals, probe.nS)
-            )
-        ]
-        _, probe_stats = GeoMapReduce(probe, uniform_plan(probe), app).run(srcs)
-        p = planetlab_platform(8, alpha=max(probe_stats.alpha_measured, 0.01), seed=0)
-        plans = {
-            "uniform": uniform_plan(p),
-            "hadoop_local": local_push_plan(p),
-            "optimized": optimize_plan(p, "e2e_multi", barriers=BARRIERS_GGL,
-                                       **_OPT).plan,
+        srcs = split_sources(keys, vals, probe.nS)
+        # probe-measure the app's alpha + input volumes to feed the model
+        job = GeoJob(probe, app).calibrate(srcs)
+        p = job.platform
+        setups = {
+            "uniform": lambda: job.with_plan(uniform_plan(p), BARRIERS_GGL),
+            "hadoop_local": lambda: job.with_plan(local_push_plan(p), BARRIERS_GGL),
+            "optimized": lambda: job.plan("e2e_multi", barriers=BARRIERS_GGL,
+                                          **_OPT),
         }
-        row = {}
-        for pname, plan in plans.items():
-            us, (_, stats) = timeit(
-                lambda plan=plan: GeoMapReduce(p, plan, app).run(srcs), repeats=1
-            )
-            row[pname] = stats.makespan(p, BARRIERS_GGL)
-        out[name] = {"alpha": probe_stats.alpha_measured, **row}
+        row, err = {}, {}
+        for pname, setup in setups.items():
+            setup()
+            us, report = timeit(lambda: job.execute(srcs), repeats=1)
+            row[pname] = report.measured
+            err[pname] = report.model_error()
+        out[name] = {"alpha": p.alpha, "model_error": err, **row}
         red = 1 - row["optimized"]["makespan"] / row["hadoop_local"]["makespan"]
         emit(f"fig9_{name}", us,
-             f"alpha={probe_stats.alpha_measured:.2f};vs_hadoop={red:.2%}")
+             f"alpha={p.alpha:.2f};vs_hadoop={red:.2%};"
+             f"model_err={err['optimized']:+.1%}")
     return out
 
 
@@ -182,13 +176,13 @@ def fig10_dynamics() -> Dict:
     the Hadoop-baseline plans, with runtime stragglers the planner cannot
     see."""
     p = planetlab_platform(8, alpha=1.0, seed=0)
-    plans = {
-        "optimized": optimize_plan(p, "e2e_multi", barriers=BARRIERS_GGL, **_OPT).plan,
-        "hadoop_baseline": local_push_plan(p),
+    jobs = {
+        "optimized": GeoJob(p).plan("e2e_multi", barriers=BARRIERS_GGL, **_OPT),
+        "hadoop_baseline": GeoJob(p).with_plan(local_push_plan(p), BARRIERS_GGL),
     }
     strag = {("m", 2): 4.0}
     out = {}
-    for pname, plan in plans.items():
+    for pname, job in jobs.items():
         row = {}
         for dyn, cfg in {
             "static": SimConfig(barriers=BARRIERS_GGL, stragglers=strag),
@@ -197,7 +191,7 @@ def fig10_dynamics() -> Dict:
             "spec+steal": SimConfig(barriers=BARRIERS_GGL, stragglers=strag,
                                     speculation=True, stealing=True),
         }.items():
-            row[dyn] = simulate(p, plan, cfg).makespan
+            row[dyn] = job.simulate(cfg).makespan
         out[pname] = row
         emit(f"fig10_{pname}", 0.0,
              ";".join(f"{k}={v:.0f}s" for k, v in row.items()))

@@ -1,8 +1,10 @@
 """Benchmark driver — one benchmark per paper figure plus the roofline
-table.  Emits ``name,us_per_call,derived`` CSV rows (also saved to
+table, all driven through the :class:`repro.api.GeoJob` facade (plan →
+price → execute on one shared cost model).  Emits
+``name,us_per_call,derived`` CSV rows (also saved to
 ``reports/benchmarks.csv``) and a JSON dump of full results.
 
-    PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+    PYTHONPATH=src python -m benchmarks.run [--skip-roofline] [--quick]
 """
 from __future__ import annotations
 
@@ -18,8 +20,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-roofline", action="store_true",
                     help="skip the dry-run-report-based roofline table")
+    ap.add_argument("--quick", action="store_true",
+                    help="small solver budgets (smoke-run the whole suite)")
     ap.add_argument("--out", default="reports")
     args = ap.parse_args()
+    if args.quick:
+        F._OPT = dict(n_restarts=6, steps=200)
     os.makedirs(args.out, exist_ok=True)
 
     results = {}

@@ -1,47 +1,41 @@
-"""Geo-distributed Word Count on the plan-driven MapReduce engine.
+"""Geo-distributed Word Count through the `GeoJob` facade.
 
 Runs the paper's Word Count application (in-mapper combining, Pallas
 segment-sum reduce) over an 8-data-center platform under three execution
-plans, pricing the *measured* byte movement through the platform model —
-the Fig-9 experiment in miniature.
+plans — the Fig-9 experiment in miniature.  ``calibrate`` probe-measures
+the app's real expansion factor α and input volumes, ``plan`` optimizes
+against them, and ``execute`` prices the *measured* byte movement through
+the same cost model the planner used, so every report shows modeled vs
+measured makespan side by side.
 
     PYTHONPATH=src python examples/geo_wordcount.py
 """
-import numpy as np
-
-from repro.core import (
-    BARRIERS_GGL, local_push_plan, optimize_plan, planetlab_platform,
-    uniform_plan,
-)
+from repro.api import GeoJob, split_sources
+from repro.core import BARRIERS_GGL, local_push_plan, planetlab_platform, uniform_plan
 from repro.mapreduce.apps import generate_documents, word_count
-from repro.mapreduce.engine import GeoMapReduce
 
 keys, vals = generate_documents(n_docs=800, words_per_doc=60, seed=0)
-probe_platform = planetlab_platform(8, alpha=1.0, seed=0)
-sources = list(zip(np.array_split(keys, probe_platform.nS),
-                   np.array_split(vals, probe_platform.nS)))
-app = word_count()
+base = planetlab_platform(8, alpha=1.0, seed=0)
+sources = split_sources(keys, vals, base.nS)
 
-# measure the app's real expansion factor with a probe, then plan with it
-_, probe = GeoMapReduce(probe_platform, uniform_plan(probe_platform), app).run(sources)
-print(f"measured alpha = {probe.alpha_measured:.3f} "
+# probe-measure the app's real expansion factor, then plan with it
+job = GeoJob(base, word_count()).calibrate(sources)
+print(f"measured alpha = {job.platform.alpha:.3f} "
       f"(paper's WordCount: 0.09 — heavy aggregation)")
-platform = planetlab_platform(8, alpha=max(probe.alpha_measured, 0.01), seed=0)
 
-plans = {
-    "uniform": uniform_plan(platform),
-    "hadoop-locality": local_push_plan(platform),
-    "optimized": optimize_plan(platform, "e2e_multi", barriers=BARRIERS_GGL).plan,
+setups = {
+    "uniform": lambda: job.with_plan(uniform_plan(job.platform), BARRIERS_GGL),
+    "hadoop-locality": lambda: job.with_plan(local_push_plan(job.platform), BARRIERS_GGL),
+    "optimized": lambda: job.plan("e2e_multi", barriers=BARRIERS_GGL),
 }
-results = {}
-for name, plan in plans.items():
-    outs, stats = GeoMapReduce(platform, plan, app).run(sources)
-    results[name] = stats.makespan(platform, BARRIERS_GGL)
-    n_words = sum(len(k) for k, _ in outs)
-    print(f"{name:16s} makespan={results[name]['makespan']:8.1f}s  "
-          f"push={results[name]['push']:7.1f}s "
-          f"shuffle={results[name]['shuffle']:6.1f}s  ({n_words} unique words)")
+reports = {}
+for name, setup in setups.items():
+    setup()
+    reports[name] = job.execute(sources)
+    n_words = sum(len(k) for k, _ in reports[name].outputs)
+    print(f"{name:16s} {reports[name].summary()}  ({n_words} unique words)")
 
-red = 1 - results["optimized"]["makespan"] / results["hadoop-locality"]["makespan"]
+red = 1 - (reports["optimized"].makespan_measured
+           / reports["hadoop-locality"].makespan_measured)
 print(f"\noptimized plan beats the Hadoop-locality baseline by {red:.0%} "
       f"(paper: 36% for WordCount)")

@@ -8,9 +8,9 @@
 """
 import numpy as np
 
+from repro.api import GeoJob
 from repro.core.collective_plan import plan_cross_pod_reduction
 from repro.core.moe_plan import plan_moe_dispatch
-from repro.core.optimize import optimize_plan
 from repro.core.platform import tpu_pod_platform
 from repro.configs import get_config
 
@@ -43,8 +43,8 @@ print("[moe] router bias to load at init:", np.round(mp.router_bias, 2))
 
 # --- 3. corpus ingest ----------------------------------------------------------
 platform = tpu_pod_platform(n_pods=4, hosts_per_pod=4, compute_jitter=0.4, seed=1)
-e2e = optimize_plan(platform, "e2e_multi", n_restarts=8, steps=300)
-myo = optimize_plan(platform, "myopic_push", n_restarts=8, steps=300)
+e2e = GeoJob(platform).plan("e2e_multi", n_restarts=8, steps=300).planned
+myo = GeoJob(platform).plan("myopic_push", n_restarts=8, steps=300).planned
 print(f"\n[ingest] e2e-planned makespan {e2e.makespan:.1f}s "
       f"vs myopic push {myo.makespan:.1f}s "
       f"({1 - e2e.makespan/myo.makespan:.0%} faster)")

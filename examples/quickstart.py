@@ -1,38 +1,57 @@
-"""Quickstart: model a distributed platform, optimize an execution plan,
-and compare it against the baselines — the paper's core loop in ~30 lines.
+"""Quickstart: the paper's whole loop through the job-level `GeoJob` API.
+
+A job bundles the three stages the paper argues must be optimized
+*together* rather than myopically:
+
+1. **model** a distributed platform — bandwidths, compute rates, data at
+   each source (here: 8 PlanetLab-derived data centers);
+2. **plan** an execution plan with any registered planner mode
+   (``repro.core.optimize.available_modes()`` lists them; new strategies
+   plug in via ``register_planner`` without touching the solver) — here the
+   paper's ``e2e_multi`` end-to-end multi-phase optimization against two
+   baselines;
+3. **execute** — here on the chunk-granular discrete-event executor via
+   ``job.simulate()``; both the modeled and the executed numbers are priced
+   by the same shared cost model, so they are directly comparable.  See
+   ``examples/geo_wordcount.py`` for real map/reduce execution with
+   measured byte matrices.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
+from repro.api import GeoJob
 from repro.core import (
-    BARRIERS_GGL, SimConfig, makespan, optimize_plan, phase_breakdown,
-    planetlab_platform, simulate, uniform_plan, local_push_plan,
+    BARRIERS_GGL, local_push_plan, planetlab_platform, uniform_plan,
 )
+from repro.core.optimize import available_modes
 
 # An 8-data-center, globally distributed platform with PlanetLab-measured
 # bandwidth/compute heterogeneity; alpha=1 (e.g. a distributed sort).
 platform = planetlab_platform(n_datacenters=8, alpha=1.0, seed=0)
 print(platform.describe())
+print("registered planner modes:", ", ".join(available_modes()))
 
-plans = {
-    "uniform": uniform_plan(platform),
-    "hadoop-locality": local_push_plan(platform),
-    "e2e-multi (paper)": optimize_plan(platform, "e2e_multi").plan,
+setups = {
+    "uniform": lambda j: j.with_plan(uniform_plan(platform), BARRIERS_GGL),
+    "hadoop-locality": lambda j: j.with_plan(local_push_plan(platform), BARRIERS_GGL),
+    "e2e-multi (paper)": lambda j: j.plan("e2e_multi", barriers=BARRIERS_GGL),
 }
 
+results = {}
 print(f"\n{'plan':22s} {'model makespan':>15s} {'executed':>10s}  phases")
-for name, plan in plans.items():
-    model_t = makespan(platform, plan, BARRIERS_GGL)
-    executed = simulate(platform, plan, SimConfig(barriers=BARRIERS_GGL)).makespan
-    bd = phase_breakdown(platform, plan, BARRIERS_GGL)
+for name, setup in setups.items():
+    job = setup(GeoJob(platform))
+    results[name] = job.planned
+    executed = job.simulate().makespan
+    bd = results[name].breakdown
     phases = " ".join(f"{k}={bd[k]:.0f}s" for k in ("push", "map", "shuffle", "reduce"))
-    print(f"{name:22s} {model_t:13.0f}s {executed:9.0f}s  {phases}")
+    print(f"{name:22s} {results[name].makespan:13.0f}s {executed:9.0f}s  {phases}")
 
-best = optimize_plan(platform, "e2e_multi")
-uni = makespan(platform, plans["uniform"], BARRIERS_GGL)
+best = results["e2e-multi (paper)"]
+uni = results["uniform"]
 print(f"\nend-to-end multi-phase plan reduces makespan by "
-      f"{1 - best.makespan / uni:.0%} vs uniform "
+      f"{1 - best.makespan / uni.makespan:.0%} vs uniform "
       f"(paper reports 82-87% on its platform).")
 print("optimized push matrix x (rows=sources, cols=mappers):")
 print(np.round(best.plan.x, 2))

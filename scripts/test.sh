@@ -1,0 +1,6 @@
+#!/usr/bin/env sh
+# Tier-1 verification (see ROADMAP.md): the full test suite, fail-fast.
+# Usage: scripts/test.sh [extra pytest args]
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,0 +1,29 @@
+"""Version gates for jax APIs that moved between releases.
+
+The container pins one jax version; call sites written against newer (or
+older) APIs import from here instead of hard-coding a location, so the
+codebase runs on both sides of the moves:
+
+* ``shard_map`` — ``jax.shard_map`` (new) vs
+  ``jax.experimental.shard_map.shard_map`` (old), including the
+  ``check_vma`` → ``check_rep`` keyword rename.
+"""
+from __future__ import annotations
+
+try:  # jax >= 0.6: top-level export, `check_vma` keyword
+    from jax import shard_map as _shard_map
+
+    _CHECK_KW = "check_vma"
+except ImportError:  # older jax: experimental module, `check_rep` keyword
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` with the replication-check flag spelled per the
+    installed jax version."""
+    kwargs = {} if check_vma is None else {_CHECK_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

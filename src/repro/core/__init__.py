@@ -18,11 +18,20 @@ from .makespan import (
     BARRIERS_ALL_GLOBAL,
     BARRIERS_ALL_PIPELINED,
     BARRIERS_GGL,
+    CostModel,
     makespan,
     makespan_model,
     phase_breakdown,
 )
-from .optimize import MODES, PlanResult, brute_force_plan, optimize_plan
+from .optimize import (
+    MODES,
+    PlanResult,
+    available_modes,
+    brute_force_plan,
+    get_planner,
+    optimize_plan,
+    register_planner,
+)
 from .plan import ExecutionPlan, local_push_plan, uniform_plan
 from .platform import (
     Platform,
@@ -36,14 +45,18 @@ __all__ = [
     "BARRIERS_ALL_GLOBAL",
     "BARRIERS_ALL_PIPELINED",
     "BARRIERS_GGL",
+    "CostModel",
     "ExecutionPlan",
     "MODES",
     "Platform",
     "PlanResult",
     "SimConfig",
     "SimResult",
+    "available_modes",
     "brute_force_plan",
+    "get_planner",
     "local_push_plan",
+    "register_planner",
     "makespan",
     "makespan_model",
     "optimize_plan",

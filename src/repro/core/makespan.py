@@ -1,4 +1,4 @@
-"""Differentiable makespan model (paper §2.2, Equations 4–14).
+"""Makespan model (paper §2.2, Equations 4–14) and the shared cost model.
 
 The model computes the end-to-end completion time of a MapReduce job for a
 given platform, execution plan, and **barrier configuration**.  Each of the
@@ -11,17 +11,28 @@ three phase boundaries (push/map, map/shuffle, shuffle/reduce) is one of:
 * ``'P'`` — pipelined: a node starts as soon as the first byte arrives;
   ``⊕`` is ``max``.
 
-The whole model is written in JAX and is differentiable.  ``tau`` selects the
-max operator: ``tau=None`` (or 0) uses the exact hard ``max`` (use this for
-*evaluating* a plan); ``tau > 0`` uses the smooth upper bound
-``tau·logsumexp(v/tau)`` so that gradients flow into every branch of the max
-(use this for *optimizing* a plan, annealing ``tau → 0``).
+The phase equations live in exactly one place — :func:`volume_model`, which
+prices explicit per-phase data volumes (MB) through the platform's
+bandwidths and compute rates.  Two front ends share it:
+
+* the **analytic** path derives volumes from a plan (``D_i·x_ij`` etc.) —
+  :func:`phase_model` for the differentiable JAX optimizer,
+  :class:`CostModel` (numpy, float64) for exact evaluation;
+* the **measured** path prices byte matrices recorded by the execution
+  engine (:meth:`CostModel.price_volumes`) — so model and measurement can
+  never diverge.
+
+``tau`` selects the max operator: ``tau=None`` (or 0) uses the exact hard
+``max`` (use this for *evaluating* a plan); ``tau > 0`` uses the smooth
+upper bound ``tau·logsumexp(v/tau)`` so that gradients flow into every
+branch of the max (use this for *optimizing* a plan, annealing ``tau → 0``).
 
 Times are expressed in seconds for platforms built by
 :mod:`repro.core.platform` (MB and MB/s units).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Dict, Optional, Tuple
 
@@ -36,9 +47,13 @@ __all__ = [
     "BARRIERS_GGL",
     "BARRIERS_ALL_GLOBAL",
     "BARRIERS_ALL_PIPELINED",
+    "CostModel",
+    "analytic_volumes",
+    "attribute_phases",
     "makespan",
     "makespan_model",
     "phase_breakdown",
+    "volume_model",
 ]
 
 #: Hadoop's effective configuration (paper §4.6.1): global push/map barrier
@@ -75,11 +90,22 @@ def smooth_ops(tau):
     return mx, pmax
 
 
-def phase_model(
-    D, B_sm, B_mr, C_m, C_r, alpha, x, y, barriers, mx, pmax
-) -> Dict[str, jnp.ndarray]:
-    """Core phase-timing model parameterized by the max ops (so the same
-    equations serve both exact evaluation and smooth optimization)."""
+def volume_model(
+    V_push, V_map, V_shuffle, V_reduce, B_sm, B_mr, C_m, C_r, barriers, mx, pmax, xp=jnp
+):
+    """Phase-timing equations over explicit per-phase data volumes (MB).
+
+    This is the single home of Equations 4–14.  ``V_push`` is the (nS, nM)
+    MB pushed over each source→mapper link, ``V_map`` the (nM,) MB of map
+    input per mapper, ``V_shuffle`` the (nM, nR) MB shuffled over each
+    mapper→reducer link, and ``V_reduce`` the (nR,) MB of reduce input.
+    The volumes may be analytic (derived from a plan) or measured (recorded
+    by the execution engine) — the pricing is identical either way.
+
+    ``xp`` selects the array module (``jnp`` for the differentiable
+    optimizer path, ``np`` for exact float64 evaluation); ``mx``/``pmax``
+    select hard or smooth max reductions.
+    """
     barriers = _check_barriers(barriers)
     b_pm, b_ms, b_sr = barriers
 
@@ -89,33 +115,30 @@ def phase_model(
         return (lambda a, b: a + b) if op in ("G", "L") else pmax
 
     # --- push phase (Equation 4) -------------------------------------------
-    # push_end_j = max_i D_i x_ij / B_ij
-    push_t = (D[:, None] * x) / B_sm  # (nS, nM)
+    # push_end_j = max_i V_push_ij / B_ij
+    push_t = V_push / B_sm  # (nS, nM)
     push_end = mx(push_t, axis=0)  # (nM,)
 
     # --- map phase (Equations 5/6 or 12) ------------------------------------
-    map_in = x.T @ D  # (nM,) MB of input at each mapper
-    map_time = map_in / C_m
+    map_time = V_map / C_m
     if b_pm == "G":
-        map_start = jnp.broadcast_to(mx(push_end), push_end.shape)
+        map_start = xp.broadcast_to(mx(push_end), push_end.shape)
     else:
         map_start = push_end
     map_end = combine(b_pm)(map_start, map_time)  # (nM,)
 
     # --- shuffle phase (Equations 7/8 or 13) ---------------------------------
-    # data from mapper j to reducer k: alpha * map_in_j * y_k
-    shuffle_t = alpha * (map_in[:, None] * y[None, :]) / B_mr  # (nM, nR)
+    shuffle_t = V_shuffle / B_mr  # (nM, nR)
     if b_ms == "G":
-        shuffle_start = jnp.broadcast_to(mx(map_end), map_end.shape)
+        shuffle_start = xp.broadcast_to(mx(map_end), map_end.shape)
     else:
         shuffle_start = map_end
     shuffle_end = mx(combine(b_ms)(shuffle_start[:, None], shuffle_t), axis=0)  # (nR,)
 
     # --- reduce phase (Equations 9/10 or 14) ---------------------------------
-    total_intermediate = alpha * jnp.sum(map_in)
-    reduce_time = total_intermediate * y / C_r  # (nR,)
+    reduce_time = V_reduce / C_r  # (nR,)
     if b_sr == "G":
-        reduce_start = jnp.broadcast_to(mx(shuffle_end), shuffle_end.shape)
+        reduce_start = xp.broadcast_to(mx(shuffle_end), shuffle_end.shape)
     else:
         reduce_start = shuffle_end
     reduce_end = combine(b_sr)(reduce_start, reduce_time)  # (nR,)
@@ -131,6 +154,28 @@ def phase_model(
         "shuffle_time": mx(shuffle_t),
         "reduce_time": mx(reduce_time),
     }
+
+
+def analytic_volumes(D, x, y, alpha, xp=jnp):
+    """Per-phase data volumes (MB) implied by a plan: ``D_i·x_ij`` pushed,
+    ``xᵀD`` mapped, ``α·map_in_j·y_k`` shuffled, ``α·Σmap_in·y`` reduced."""
+    V_push = D[:, None] * x  # (nS, nM)
+    map_in = x.T @ D  # (nM,)
+    V_shuffle = alpha * (map_in[:, None] * y[None, :])  # (nM, nR)
+    V_reduce = alpha * xp.sum(map_in) * y  # (nR,)
+    return V_push, map_in, V_shuffle, V_reduce
+
+
+def phase_model(
+    D, B_sm, B_mr, C_m, C_r, alpha, x, y, barriers, mx, pmax
+) -> Dict[str, jnp.ndarray]:
+    """Analytic phase-timing model parameterized by the max ops (the same
+    equations serve exact evaluation and smooth optimization)."""
+    V_push, V_map, V_shuffle, V_reduce = analytic_volumes(D, x, y, alpha, xp=jnp)
+    return volume_model(
+        V_push, V_map, V_shuffle, V_reduce, B_sm, B_mr, C_m, C_r,
+        barriers, mx, pmax, xp=jnp,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("barriers", "tau"))
@@ -157,49 +202,20 @@ def makespan_model(
     return phase_model(D, B_sm, B_mr, C_m, C_r, alpha, x, y, barriers, mx, pmax)
 
 
-def makespan(
-    platform: Platform,
-    plan: ExecutionPlan,
-    barriers: Tuple[str, str, str] = BARRIERS_ALL_GLOBAL,
-    tau: Optional[float] = None,
-) -> float:
-    """Evaluate the (hard, by default) makespan of ``plan`` on ``platform``."""
-    D, B_sm, B_mr, C_m, C_r, alpha = platform.as_arrays()
-    out = makespan_model(
-        jnp.asarray(D),
-        jnp.asarray(B_sm),
-        jnp.asarray(B_mr),
-        jnp.asarray(C_m),
-        jnp.asarray(C_r),
-        float(alpha),
-        jnp.asarray(plan.x),
-        jnp.asarray(plan.y),
-        barriers=tuple(barriers),
-        tau=tau,
-    )
-    return float(out["makespan"])
+def _np_hard_ops():
+    """Exact (max, pairwise-max) reduction ops for the float64 numpy path."""
+    return (lambda v, axis=None: np.max(v, axis=axis)), np.maximum
 
 
-def phase_breakdown(
-    platform: Platform,
-    plan: ExecutionPlan,
-    barriers: Tuple[str, str, str] = BARRIERS_ALL_GLOBAL,
-) -> Dict[str, float]:
+def attribute_phases(out) -> Dict[str, float]:
     """Sequential attribution of the makespan to the four phases, for the
     stacked-bar figures (Figs 5/6/9).  Under global barriers this is exact;
     under relaxed barriers overlapped time is attributed to the earlier
     phase (matching how the paper plots Hadoop's overlapped phases).
     """
-    D, B_sm, B_mr, C_m, C_r, alpha = platform.as_arrays()
-    out = makespan_model(
-        jnp.asarray(D), jnp.asarray(B_sm), jnp.asarray(B_mr),
-        jnp.asarray(C_m), jnp.asarray(C_r), float(alpha),
-        jnp.asarray(plan.x), jnp.asarray(plan.y),
-        barriers=tuple(barriers), tau=None,
-    )
-    push = float(jnp.max(out["push_end"]))
-    map_e = float(jnp.max(out["map_end"]))
-    shuf_e = float(jnp.max(out["shuffle_end"]))
+    push = float(np.max(np.asarray(out["push_end"])))
+    map_e = float(np.max(np.asarray(out["map_end"])))
+    shuf_e = float(np.max(np.asarray(out["shuffle_end"])))
     total = float(out["makespan"])
     return {
         "push": push,
@@ -208,3 +224,108 @@ def phase_breakdown(
         "reduce": max(total - shuf_e, 0.0),
         "makespan": total,
     }
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """The shared pricing model: one set of phase equations for analytic
+    plan volumes *and* measured byte matrices.
+
+    ``price_plan`` derives ``D_i·x_ij``-style volumes from a plan;
+    ``price_volumes`` accepts explicit per-phase MB volumes (e.g. the byte
+    matrices recorded by :class:`repro.mapreduce.engine.GeoMapReduce`,
+    converted to MB).  Both run the exact hard-max equations in float64, so
+    pricing the analytic volumes of a plan reproduces :func:`makespan`
+    bit-for-bit.
+    """
+
+    platform: Platform
+    barriers: Tuple[str, str, str] = BARRIERS_ALL_GLOBAL
+
+    def __post_init__(self):
+        object.__setattr__(self, "barriers", _check_barriers(self.barriers))
+
+    def _barriers(self, barriers) -> Tuple[str, str, str]:
+        return self.barriers if barriers is None else _check_barriers(barriers)
+
+    # -- volume derivation ---------------------------------------------------
+    def analytic_volumes(self, plan: ExecutionPlan):
+        """(V_push, V_map, V_shuffle, V_reduce) in MB implied by ``plan``."""
+        p = self.platform
+        return analytic_volumes(p.D, np.asarray(plan.x), np.asarray(plan.y),
+                                p.alpha, xp=np)
+
+    # -- pricing -------------------------------------------------------------
+    def price_volumes(
+        self, V_push, V_map, V_shuffle, V_reduce, barriers=None
+    ) -> Dict[str, np.ndarray]:
+        """Price explicit per-phase volumes (MB); returns the phase-end
+        arrays plus the scalar ``makespan`` (seconds)."""
+        p = self.platform
+        mx, pmax = _np_hard_ops()
+        return volume_model(
+            np.asarray(V_push, dtype=np.float64),
+            np.asarray(V_map, dtype=np.float64),
+            np.asarray(V_shuffle, dtype=np.float64),
+            np.asarray(V_reduce, dtype=np.float64),
+            p.B_sm, p.B_mr, p.C_m, p.C_r,
+            self._barriers(barriers), mx, pmax, xp=np,
+        )
+
+    def price_plan(self, plan: ExecutionPlan, barriers=None) -> Dict[str, np.ndarray]:
+        """Price the analytic volumes of ``plan`` (the model side)."""
+        return self.price_volumes(*self.analytic_volumes(plan), barriers=barriers)
+
+    # -- scalar / report conveniences ---------------------------------------
+    def makespan(self, plan: ExecutionPlan, barriers=None) -> float:
+        return float(self.price_plan(plan, barriers)["makespan"])
+
+    def breakdown(self, plan: ExecutionPlan, barriers=None) -> Dict[str, float]:
+        return attribute_phases(self.price_plan(plan, barriers))
+
+    def breakdown_volumes(
+        self, V_push, V_map, V_shuffle, V_reduce, barriers=None
+    ) -> Dict[str, float]:
+        return attribute_phases(
+            self.price_volumes(V_push, V_map, V_shuffle, V_reduce, barriers)
+        )
+
+
+def makespan(
+    platform: Platform,
+    plan: ExecutionPlan,
+    barriers: Tuple[str, str, str] = BARRIERS_ALL_GLOBAL,
+    tau: Optional[float] = None,
+) -> float:
+    """Evaluate the (hard, by default) makespan of ``plan`` on ``platform``.
+
+    The hard evaluation runs through the shared :class:`CostModel` (exact,
+    float64); a positive ``tau`` evaluates the smooth JAX upper bound used
+    by the optimizer.
+    """
+    if tau:
+        D, B_sm, B_mr, C_m, C_r, alpha = platform.as_arrays()
+        out = makespan_model(
+            jnp.asarray(D),
+            jnp.asarray(B_sm),
+            jnp.asarray(B_mr),
+            jnp.asarray(C_m),
+            jnp.asarray(C_r),
+            float(alpha),
+            jnp.asarray(plan.x),
+            jnp.asarray(plan.y),
+            barriers=tuple(barriers),
+            tau=tau,
+        )
+        return float(out["makespan"])
+    return CostModel(platform, tuple(barriers)).makespan(plan)
+
+
+def phase_breakdown(
+    platform: Platform,
+    plan: ExecutionPlan,
+    barriers: Tuple[str, str, str] = BARRIERS_ALL_GLOBAL,
+) -> Dict[str, float]:
+    """Sequential phase attribution of ``plan``'s modeled makespan (see
+    :func:`attribute_phases`)."""
+    return CostModel(platform, tuple(barriers)).breakdown(plan)

@@ -29,6 +29,12 @@ Planner modes (mirroring the paper's §4 comparisons):
 * ``e2e_push``       — minimize end-to-end makespan controlling ``x`` only.
 * ``e2e_shuffle``    — minimize makespan controlling ``y`` only.
 * ``e2e_multi``      — the paper's proposed optimization: makespan over both.
+
+New strategies plug in through the **planner registry** without editing the
+solver: ``register_planner(name)`` decorates a function
+``(platform, barriers, *, n_restarts, steps, seed, fixed_x) -> (plan, objective)``
+and :func:`optimize_plan` (and the :class:`repro.api.GeoJob` facade) will
+dispatch to it by name.
 """
 from __future__ import annotations
 
@@ -52,8 +58,18 @@ from .makespan import (
 from .plan import ExecutionPlan, local_push_plan, uniform_plan
 from .platform import Platform
 
-__all__ = ["PlanResult", "optimize_plan", "brute_force_plan", "MODES"]
+__all__ = [
+    "MODES",
+    "PlanResult",
+    "available_modes",
+    "brute_force_plan",
+    "get_planner",
+    "optimize_plan",
+    "register_planner",
+]
 
+#: The paper's built-in planner modes (kept as a tuple for backwards
+#: compatibility; the live set is :func:`available_modes`).
 MODES = (
     "uniform",
     "local_push",
@@ -63,6 +79,47 @@ MODES = (
     "e2e_shuffle",
     "e2e_multi",
 )
+
+# ---------------------------------------------------------------------------
+# planner registry
+# ---------------------------------------------------------------------------
+
+#: name -> fn(platform, barriers, *, n_restarts, steps, seed, fixed_x)
+#:         -> (ExecutionPlan, objective)
+_PLANNERS: Dict[str, Callable] = {}
+
+
+def register_planner(name: str, fn: Optional[Callable] = None):
+    """Register a planning strategy under ``name``.
+
+    Usable as a decorator (``@register_planner("my_mode")``) or a direct
+    call.  A registered planner takes ``(platform, barriers, *, n_restarts,
+    steps, seed, fixed_x)`` and returns ``(plan, objective)`` where
+    ``objective`` is the value of the strategy's own loss (== the makespan
+    for end-to-end strategies).  Registered names are immediately usable in
+    :func:`optimize_plan` and :meth:`repro.api.GeoJob.plan`.
+    """
+    if fn is None:
+        return lambda f: register_planner(name, f)
+    if name in _PLANNERS:
+        raise ValueError(f"planner {name!r} is already registered")
+    _PLANNERS[name] = fn
+    return fn
+
+
+def get_planner(name: str) -> Callable:
+    """Look up a registered planner; raises ``ValueError`` for unknown names."""
+    try:
+        return _PLANNERS[name]
+    except KeyError:
+        raise ValueError(
+            f"mode must be one of {available_modes()}, got {name!r}"
+        ) from None
+
+
+def available_modes() -> Tuple[str, ...]:
+    """Names of every registered planner, built-in and user-added."""
+    return tuple(_PLANNERS)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -260,6 +317,73 @@ def _run_solver(
 
 
 # ---------------------------------------------------------------------------
+# built-in planners
+# ---------------------------------------------------------------------------
+
+@register_planner("uniform")
+def _uniform_planner(platform, barriers, *, n_restarts, steps, seed, fixed_x):
+    plan = uniform_plan(platform)
+    return plan, makespan(platform, plan, barriers)
+
+
+@register_planner("local_push")
+def _local_push_planner(platform, barriers, *, n_restarts, steps, seed, fixed_x):
+    plan = local_push_plan(platform)
+    return plan, makespan(platform, plan, barriers)
+
+
+@register_planner("myopic_push")
+def _myopic_push_planner(platform, barriers, *, n_restarts, steps, seed, fixed_x):
+    x, _, obj = _run_solver(
+        platform, "push", barriers, True, False, None, None,
+        n_restarts, steps, seed,
+    )
+    return ExecutionPlan(x=x, y=uniform_plan(platform).y, meta="myopic_push"), obj
+
+
+@register_planner("myopic_multi")
+def _myopic_multi_planner(platform, barriers, *, n_restarts, steps, seed, fixed_x):
+    # locally-optimal push, then locally-optimal shuffle given that push
+    x, _, _ = _run_solver(
+        platform, "push", barriers, True, False, None, None,
+        n_restarts, steps, seed,
+    )
+    _, y, obj = _run_solver(
+        platform, "shuffle", barriers, False, True, x, None,
+        n_restarts, steps, seed + 1,
+    )
+    return ExecutionPlan(x=x, y=y, meta="myopic_multi"), obj
+
+
+@register_planner("e2e_push")
+def _e2e_push_planner(platform, barriers, *, n_restarts, steps, seed, fixed_x):
+    x, _, obj = _run_solver(
+        platform, "e2e", barriers, True, False, None, None,
+        n_restarts, steps, seed,
+    )
+    return ExecutionPlan(x=x, y=uniform_plan(platform).y, meta="e2e_push"), obj
+
+
+@register_planner("e2e_shuffle")
+def _e2e_shuffle_planner(platform, barriers, *, n_restarts, steps, seed, fixed_x):
+    _, y, obj = _run_solver(
+        platform, "e2e", barriers, False, True, fixed_x, None,
+        n_restarts, steps, seed,
+    )
+    x = uniform_plan(platform).x if fixed_x is None else np.asarray(fixed_x)
+    return ExecutionPlan(x=x, y=y, meta="e2e_shuffle"), obj
+
+
+@register_planner("e2e_multi")
+def _e2e_multi_planner(platform, barriers, *, n_restarts, steps, seed, fixed_x):
+    x, y, obj = _run_solver(
+        platform, "e2e", barriers, True, True, None, None,
+        n_restarts, steps, seed,
+    )
+    return ExecutionPlan(x=x, y=y, meta="e2e_multi"), obj
+
+
+# ---------------------------------------------------------------------------
 # public entry point
 # ---------------------------------------------------------------------------
 
@@ -273,67 +397,27 @@ def optimize_plan(
     fixed_x: Optional[np.ndarray] = None,
 ) -> PlanResult:
     """Produce an execution plan for ``platform`` with the given planner
-    ``mode`` (see module docstring), evaluated under ``barriers``.
+    ``mode`` (any name in :func:`available_modes`), evaluated under
+    ``barriers``.
 
     ``fixed_x`` pins the push matrix for the shuffle-only modes
     (``e2e_shuffle``); defaults to the uniform push of Equation 15.  This is
     how the collective/MoE planners express "the push side is dictated by
     the system" (identity routing).
     """
-    if mode not in MODES:
-        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    planner = get_planner(mode)
     barriers = tuple(barriers)
-
-    if mode == "uniform":
-        plan = uniform_plan(platform)
-        obj = makespan(platform, plan, barriers)
-    elif mode == "local_push":
-        plan = local_push_plan(platform)
-        obj = makespan(platform, plan, barriers)
-    elif mode == "myopic_push":
-        x, _, obj = _run_solver(
-            platform, "push", barriers, True, False, None, None,
-            n_restarts, steps, seed,
-        )
-        plan = ExecutionPlan(x=x, y=uniform_plan(platform).y, meta=mode)
-    elif mode == "myopic_multi":
-        # locally-optimal push, then locally-optimal shuffle given that push
-        x, _, _ = _run_solver(
-            platform, "push", barriers, True, False, None, None,
-            n_restarts, steps, seed,
-        )
-        _, y, obj = _run_solver(
-            platform, "shuffle", barriers, False, True, x, None,
-            n_restarts, steps, seed + 1,
-        )
-        plan = ExecutionPlan(x=x, y=y, meta=mode)
-    elif mode == "e2e_push":
-        x, _, obj = _run_solver(
-            platform, "e2e", barriers, True, False, None, None,
-            n_restarts, steps, seed,
-        )
-        plan = ExecutionPlan(x=x, y=uniform_plan(platform).y, meta=mode)
-    elif mode == "e2e_shuffle":
-        _, y, obj = _run_solver(
-            platform, "e2e", barriers, False, True, fixed_x, None,
-            n_restarts, steps, seed,
-        )
-        x = uniform_plan(platform).x if fixed_x is None else np.asarray(fixed_x)
-        plan = ExecutionPlan(x=x, y=y, meta=mode)
-    else:  # e2e_multi
-        x, y, obj = _run_solver(
-            platform, "e2e", barriers, True, True, None, None,
-            n_restarts, steps, seed,
-        )
-        plan = ExecutionPlan(x=x, y=y, meta=mode)
-
+    plan, obj = planner(
+        platform, barriers,
+        n_restarts=n_restarts, steps=steps, seed=seed, fixed_x=fixed_x,
+    )
     return PlanResult(
         plan=plan,
         makespan=makespan(platform, plan, barriers),
         breakdown=phase_breakdown(platform, plan, barriers),
         mode=mode,
         barriers=barriers,
-        objective=obj,
+        objective=float(obj),
     )
 
 

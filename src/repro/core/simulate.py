@@ -35,7 +35,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .makespan import BARRIERS_GGL
+from .makespan import BARRIERS_GGL, _check_barriers
 from .plan import ExecutionPlan
 from .platform import Platform
 
@@ -59,6 +59,9 @@ class SimConfig:
     #: lognormal sigma on per-chunk service times (0 = deterministic).
     compute_noise: float = 0.0
     seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "barriers", _check_barriers(self.barriers))
 
 
 @dataclasses.dataclass

@@ -130,6 +130,14 @@ def collective_bytes_from_hlo(hlo: str) -> Dict[str, float]:
     return out
 
 
+def _cost_dict(cost):
+    """``Compiled.cost_analysis()`` returns a dict on newer jax and a list
+    of per-device dicts on older jax — normalize to one dict."""
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost or {}
+
+
 def _batch_shardings(specs: Dict[str, jax.ShapeDtypeStruct], mesh):
     """Input shardings: batch dim over (pod, data) when divisible."""
     baxes = batch_axes(mesh)
@@ -309,7 +317,7 @@ def run_cell(
                           "output_size_in_bytes")
             ) - report.get("alias_size_in_bytes", 0)
             report["per_device_bytes"] = int(total)
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled.cost_analysis())
         if cost:
             report["hlo_flops_per_device_rolled"] = float(cost.get("flops", -1))
             report["hlo_bytes_per_device_rolled"] = float(
@@ -331,7 +339,7 @@ def run_cell(
             t2 = time.time()
             compiled_u = build(unroll=True).compile()
             report["analysis_compile_s"] = round(time.time() - t2, 2)
-            cost_u = compiled_u.cost_analysis()
+            cost_u = _cost_dict(compiled_u.cost_analysis())
             if cost_u:
                 report["hlo_flops_per_device"] = float(cost_u.get("flops", -1))
                 report["hlo_bytes_per_device"] = float(

@@ -16,11 +16,12 @@ The engine runs the *actual computation* (real maps/reduces over real
 records, with the Pallas ``segment_sum`` kernel in the reduce hot loop) and
 records the *actual bytes* moved per link per phase.  Wall-clock makespan on
 a modeled platform is obtained by pricing those measured byte/compute
-volumes through the platform model (``PhaseStats.makespan`` — same
-equations as :mod:`repro.core.makespan`, with measured quantities replacing
-the analytic ``D_i·x_ij`` terms).  This is how the Fig-9 benchmark drives
-real applications over the emulated PlanetLab network, exactly in the
-spirit of the paper's ``tc``-emulated testbed.
+volumes through the **shared cost model**
+(:class:`repro.core.makespan.CostModel` — the exact same equations the
+planner optimizes, with measured quantities replacing the analytic
+``D_i·x_ij`` terms, so model and measurement cannot diverge).  This is how
+the Fig-9 benchmark drives real applications over the emulated PlanetLab
+network, exactly in the spirit of the paper's ``tc``-emulated testbed.
 """
 from __future__ import annotations
 
@@ -29,6 +30,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core.makespan import CostModel
 from ..core.plan import ExecutionPlan
 from ..core.platform import Platform
 from .partition import bucket_owners, hash_keys
@@ -36,6 +38,21 @@ from .partition import bucket_owners, hash_keys
 __all__ = ["MRApp", "GeoMapReduce", "PhaseStats"]
 
 Records = Tuple[np.ndarray, np.ndarray]  # (keys int64 (N,), values (N,) or (N,D))
+
+
+def _empty_records_like(records: Sequence[Records]) -> Records:
+    """Zero-length ``(keys, values)`` whose dtype and trailing value shape
+    match the app's actual records (preferring a non-empty pair), so empty
+    partitions concatenate cleanly with float / vector-valued loads."""
+    proto: Optional[Records] = None
+    for k, v in records:
+        proto = (k, v)
+        if k.shape[0]:
+            break
+    if proto is None:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    k, v = proto
+    return np.asarray(k)[:0], np.asarray(v)[:0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,45 +80,23 @@ class PhaseStats:
     reduce_in_bytes: np.ndarray  # (nR,)
     alpha_measured: float
 
+    def volumes_mb(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Measured per-phase volumes in the MB units the cost model prices."""
+        MB = 1e6
+        return (
+            self.push_bytes / MB,
+            self.map_in_bytes / MB,
+            self.shuffle_bytes / MB,
+            self.reduce_in_bytes / MB,
+        )
+
     def makespan(
         self, platform: Platform, barriers: Tuple[str, str, str] = ("G", "G", "L")
     ) -> Dict[str, float]:
-        """Price the measured byte volumes through the platform model (MB
-        units), using the same phase equations as core.makespan."""
-        MB = 1e6
-        push_t = self.push_bytes / MB / platform.B_sm  # (nS, nM)
-        push_end = push_t.max(axis=0)
-        map_time = self.map_in_bytes / MB / platform.C_m
-        b1, b2, b3 = barriers
-
-        map_start = np.full_like(push_end, push_end.max()) if b1 == "G" else push_end
-        map_end = (
-            np.maximum(map_start, map_time) if b1 == "P" else map_start + map_time
-        )
-        shuffle_t = self.shuffle_bytes / MB / platform.B_mr  # (nM, nR)
-        shuffle_start = (
-            np.full_like(map_end, map_end.max()) if b2 == "G" else map_end
-        )
-        if b2 == "P":
-            shuffle_end = np.maximum(shuffle_start[:, None], shuffle_t).max(axis=0)
-        else:
-            shuffle_end = (shuffle_start[:, None] + shuffle_t).max(axis=0)
-        reduce_time = self.reduce_in_bytes / MB / platform.C_r
-        reduce_start = (
-            np.full_like(shuffle_end, shuffle_end.max()) if b3 == "G" else shuffle_end
-        )
-        reduce_end = (
-            np.maximum(reduce_start, reduce_time)
-            if b3 == "P"
-            else reduce_start + reduce_time
-        )
-        return {
-            "push": float(push_end.max()),
-            "map": float(map_end.max() - push_end.max()),
-            "shuffle": float(shuffle_end.max() - map_end.max()),
-            "reduce": float(reduce_end.max() - shuffle_end.max()),
-            "makespan": float(reduce_end.max()),
-        }
+        """Price the measured byte volumes through the shared
+        :class:`repro.core.makespan.CostModel` (which also validates the
+        barrier triple)."""
+        return CostModel(platform, barriers).breakdown_volumes(*self.volumes_mb())
 
 
 class GeoMapReduce:
@@ -145,8 +140,7 @@ class GeoMapReduce:
                 ks = np.concatenate([k for k, _ in incoming[j]])
                 vs = np.concatenate([v for _, v in incoming[j]])
             else:
-                ks = np.zeros(0, np.int64)
-                vs = np.zeros(0, np.int64)
+                ks, vs = _empty_records_like(per_source)
             merged.append((ks, vs))
         return merged, push_bytes
 
@@ -184,8 +178,7 @@ class GeoMapReduce:
                 ks = np.concatenate([a for a, _ in to_reducer[k]])
                 vs = np.concatenate([b for _, b in to_reducer[k]])
             else:
-                ks = np.zeros(0, np.int64)
-                vs = np.zeros(0, np.int64)
+                ks, vs = _empty_records_like(mapped)
             merged.append((ks, vs))
         return merged, shuffle_bytes
 

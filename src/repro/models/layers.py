@@ -414,7 +414,8 @@ def moe_fwd(
         return y2d.reshape(B, T, d), aux
 
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+
+    from ..compat import shard_map
 
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

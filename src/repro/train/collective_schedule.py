@@ -25,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
+
 __all__ = ["hierarchical_allreduce", "flat_size"]
 
 
@@ -74,7 +76,7 @@ def hierarchical_allreduce(
         v = jax.lax.all_gather(v, "data", axis=0, tiled=False).reshape(-1)
         return v / denom
 
-    reduced = jax.shard_map(
+    reduced = shard_map(
         local, mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False
     )(flat)
     reduced = reduced[:n]

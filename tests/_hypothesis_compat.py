@@ -1,0 +1,37 @@
+"""Guarded import of the optional ``hypothesis`` dependency.
+
+The seed environment does not ship ``hypothesis`` (it is the ``test`` extra
+in pyproject.toml), and a bare ``from hypothesis import ...`` at module
+scope used to kill the whole suite at collection time.  Importing from this
+module instead keeps every non-property test runnable: when ``hypothesis``
+is missing, ``given`` becomes a skip marker and ``settings``/``st`` become
+inert stand-ins, so only the property-based tests are skipped.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:  # optional dependency — degrade to skips
+    HAS_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis is not installed")
+
+    def settings(*_args, **_kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate
+
+    class _InertStrategies:
+        """Accepts any ``st.<strategy>(...)`` call at decoration time."""
+
+        def __getattr__(self, _name):
+            return lambda *args, **kwargs: None
+
+    st = _InertStrategies()
+
+__all__ = ["HAS_HYPOTHESIS", "given", "settings", "st"]

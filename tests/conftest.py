@@ -1,0 +1,12 @@
+"""Shared test setup: make ``python -m pytest`` work from a fresh checkout
+without the ``PYTHONPATH=src`` incantation by prepending ``src/`` to
+``sys.path`` (mirrors the ``[tool.pytest.ini_options] pythonpath`` entry in
+pyproject.toml, for runners that bypass the ini file)."""
+import os
+import sys
+
+_SRC = os.path.abspath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir, "src")
+)
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

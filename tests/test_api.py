@@ -1,0 +1,209 @@
+"""Tests for the unified job API: CostModel parity (measured-volume pricing
+must reproduce the analytic model exactly), the planner registry, and the
+GeoJob plan→execute round trip."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.api import GeoJob, JobReport, split_sources
+from repro.core.makespan import (
+    BARRIERS_ALL_GLOBAL,
+    BARRIERS_ALL_PIPELINED,
+    BARRIERS_GGL,
+    CostModel,
+    makespan,
+    phase_breakdown,
+)
+from repro.core.optimize import (
+    MODES,
+    available_modes,
+    get_planner,
+    optimize_plan,
+    register_planner,
+)
+from repro.core.plan import ExecutionPlan, local_push_plan, uniform_plan
+from repro.core.platform import planetlab_platform, two_cluster_example
+from repro.core.simulate import SimConfig
+from repro.mapreduce.apps import generate_documents, word_count
+from repro.mapreduce.engine import PhaseStats
+
+ALL_BARRIER_TRIPLES = list(itertools.product("GLP", repeat=3))
+
+
+def _plans(platform, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "uniform": uniform_plan(platform),
+        "local": local_push_plan(platform),
+        "random": ExecutionPlan(
+            x=rng.dirichlet(np.ones(platform.nM), size=platform.nS),
+            y=rng.dirichlet(np.ones(platform.nR)),
+        ),
+    }
+
+
+class TestCostModelParity:
+    """The acceptance bar: pricing *measured* volumes through the shared
+    CostModel must agree with the analytic model to 1e-9 when the volumes
+    are the analytic ones — for every barrier triple in {G,L,P}³."""
+
+    @pytest.mark.parametrize("barriers", ALL_BARRIER_TRIPLES,
+                             ids=["".join(b) for b in ALL_BARRIER_TRIPLES])
+    def test_measured_pricing_matches_analytic(self, barriers):
+        p = planetlab_platform(4, alpha=1.7, seed=2)
+        cm = CostModel(p, barriers)
+        for name, plan in _plans(p).items():
+            vols = cm.analytic_volumes(plan)
+            got = cm.breakdown_volumes(*vols)["makespan"]
+            want = makespan(p, plan, barriers)
+            assert abs(got - want) <= 1e-9, (name, barriers)
+
+    @pytest.mark.parametrize(
+        "barriers", [BARRIERS_GGL, BARRIERS_ALL_GLOBAL, BARRIERS_ALL_PIPELINED],
+        ids=["GGL", "GGG", "PPP"],
+    )
+    def test_phasestats_delegates_to_cost_model(self, barriers):
+        """PhaseStats byte matrices holding exactly the analytic volumes must
+        reproduce core.makespan's breakdown through the same equations."""
+        p = planetlab_platform(4, alpha=0.4, seed=7)
+        for name, plan in _plans(p, seed=1).items():
+            V_push, V_map, V_shuf, V_red = CostModel(p).analytic_volumes(plan)
+            stats = PhaseStats(
+                push_bytes=V_push * 1e6,
+                map_in_bytes=V_map * 1e6,
+                shuffle_bytes=V_shuf * 1e6,
+                reduce_in_bytes=V_red * 1e6,
+                alpha_measured=p.alpha,
+            )
+            got = stats.makespan(p, barriers)
+            want = phase_breakdown(p, plan, barriers)
+            for phase in ("push", "map", "shuffle", "reduce", "makespan"):
+                assert got[phase] == pytest.approx(want[phase], abs=1e-9), (
+                    name, barriers, phase,
+                )
+
+    def test_price_plan_equals_makespan_everywhere(self):
+        p = two_cluster_example(alpha=3.0, nonlocal_bw=10.0)
+        plan = uniform_plan(p)
+        for barriers in ALL_BARRIER_TRIPLES:
+            cm = CostModel(p, barriers)
+            assert cm.makespan(plan) == makespan(p, plan, barriers)
+
+    def test_barrier_validation_is_shared(self):
+        p = planetlab_platform(2, seed=0)
+        stats = PhaseStats(
+            push_bytes=np.ones((p.nS, p.nM)),
+            map_in_bytes=np.ones(p.nM),
+            shuffle_bytes=np.ones((p.nM, p.nR)),
+            reduce_in_bytes=np.ones(p.nR),
+            alpha_measured=1.0,
+        )
+        with pytest.raises(ValueError):
+            stats.makespan(p, ("G", "G", "X"))
+        with pytest.raises(ValueError):
+            CostModel(p, ("G", "G"))
+        with pytest.raises(ValueError):
+            SimConfig(barriers=("Q", "G", "L"))
+
+
+class TestPlannerRegistry:
+    def test_builtin_modes_registered(self):
+        assert set(MODES) <= set(available_modes())
+
+    def test_unknown_mode_raises(self):
+        p = two_cluster_example()
+        with pytest.raises(ValueError, match="mode must be one of"):
+            optimize_plan(p, "no_such_mode")
+        with pytest.raises(ValueError):
+            get_planner("no_such_mode")
+
+    def test_duplicate_registration_raises(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_planner("e2e_multi", lambda *a, **k: None)
+
+    def test_custom_planner_plugs_in(self):
+        from repro.core import optimize as O
+
+        @register_planner("test_best_link")
+        def _best_link(platform, barriers, *, n_restarts, steps, seed, fixed_x):
+            x = np.zeros((platform.nS, platform.nM))
+            x[np.arange(platform.nS), np.argmax(platform.B_sm, axis=1)] = 1.0
+            plan = ExecutionPlan(x=x, y=uniform_plan(platform).y, meta="best_link")
+            return plan, makespan(platform, plan, barriers)
+
+        try:
+            assert "test_best_link" in available_modes()
+            p = two_cluster_example(nonlocal_bw=10.0)
+            res = optimize_plan(p, "test_best_link")
+            assert res.mode == "test_best_link"
+            assert res.makespan == pytest.approx(res.objective)
+            # ... and the facade dispatches to it without modification
+            job = GeoJob(p).plan("test_best_link", barriers=BARRIERS_GGL)
+            assert job.planned.mode == "test_best_link"
+            assert job.simulate().makespan > 0
+        finally:
+            del O._PLANNERS["test_best_link"]
+
+
+class TestGeoJob:
+    @pytest.fixture(scope="class")
+    def tiny(self):
+        return two_cluster_example(alpha=1.0, nonlocal_bw=10.0)
+
+    def test_every_registered_mode_roundtrips(self, tiny):
+        """plan→simulate round trip for every planner in the registry."""
+        for mode in available_modes():
+            job = GeoJob(tiny).plan(mode, barriers=BARRIERS_GGL,
+                                    n_restarts=4, steps=60)
+            res = job.planned
+            assert res.mode == mode
+            assert np.isfinite(res.makespan) and res.makespan > 0
+            assert res.breakdown["makespan"] == pytest.approx(res.makespan)
+            sim = job.simulate(chunk_mb=4096.0)
+            assert np.isfinite(sim.makespan) and sim.makespan > 0
+
+    def test_execute_reports_modeled_vs_measured(self):
+        p = planetlab_platform(8, alpha=1.0, seed=0)
+        srcs = split_sources(*generate_documents(200, 40, seed=1), p.nS)
+        job = GeoJob(p, word_count()).calibrate(srcs)
+        report = job.plan("e2e_multi", barriers=BARRIERS_GGL,
+                          n_restarts=6, steps=150).execute(srcs)
+        assert isinstance(report, JobReport)
+        assert set(report.modeled) == set(report.measured)
+        assert report.makespan_measured > 0
+        assert report.makespan_modeled == pytest.approx(report.result.makespan)
+        assert set(report.deltas()) == set(report.modeled)
+        # calibration makes model and measurement comparable: within 2x
+        assert abs(report.model_error()) < 1.0
+        # the job really ran: word counts come back
+        assert sum(len(k) for k, _ in report.outputs) > 0
+        assert "e2e_multi" in report.summary()
+
+    def test_calibrate_measures_alpha_and_volumes(self):
+        p = planetlab_platform(8, alpha=1.0, seed=0)
+        keys, vals = generate_documents(200, 40, seed=1)
+        srcs = split_sources(keys, vals, p.nS)
+        job = GeoJob(p, word_count()).calibrate(srcs)
+        assert job.platform.alpha < 0.7  # heavy aggregation
+        assert job.platform.D.sum() == pytest.approx(
+            keys.shape[0] * word_count().record_bytes / 1e6
+        )
+
+    def test_unplanned_job_raises(self, tiny):
+        with pytest.raises(RuntimeError, match="no plan yet"):
+            GeoJob(tiny, word_count()).execute([])
+        with pytest.raises(RuntimeError, match="no plan yet"):
+            GeoJob(tiny).simulate()
+
+    def test_execute_without_app_raises(self, tiny):
+        job = GeoJob(tiny).with_plan(uniform_plan(tiny))
+        with pytest.raises(RuntimeError, match="needs an application"):
+            job.execute([])
+
+    def test_with_plan_prices_through_cost_model(self, tiny):
+        job = GeoJob(tiny).with_plan(local_push_plan(tiny), BARRIERS_GGL)
+        assert job.planned.makespan == pytest.approx(
+            makespan(tiny, local_push_plan(tiny), BARRIERS_GGL)
+        )
+        assert job.planned.mode == "local_push"

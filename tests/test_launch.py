@@ -7,8 +7,7 @@ import sys
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -1,8 +1,7 @@
 """Tests for the makespan model — including the paper's §1.3 worked example."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.makespan import (
     BARRIERS_ALL_GLOBAL,

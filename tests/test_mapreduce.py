@@ -5,8 +5,8 @@ import numpy as np
 import pytest
 
 from repro.core.optimize import optimize_plan
-from repro.core.plan import local_push_plan, uniform_plan
-from repro.core.platform import planetlab_platform
+from repro.core.plan import ExecutionPlan, local_push_plan, uniform_plan
+from repro.core.platform import planetlab_platform, two_cluster_example
 from repro.mapreduce.apps import (
     generate_documents,
     generate_logs,
@@ -15,7 +15,7 @@ from repro.mapreduce.apps import (
     synthetic_alpha_job,
     word_count,
 )
-from repro.mapreduce.engine import GeoMapReduce
+from repro.mapreduce.engine import GeoMapReduce, MRApp
 from repro.mapreduce.partition import bucket_owners, hash_keys
 
 
@@ -117,6 +117,61 @@ class TestSyntheticAlpha:
         eng = GeoMapReduce(platform, uniform_plan(platform), synthetic_alpha_job(alpha))
         _, stats = eng.run(_split_sources(keys, vals, platform.nS))
         assert stats.alpha_measured == pytest.approx(alpha, rel=0.02)
+
+
+class TestEmptyPartitions:
+    """Empty mapper/reducer partitions must inherit the app's value dtype
+    and trailing shape (regression: they were created as flat ``np.int64``,
+    breaking float / vector-valued loads)."""
+
+    @staticmethod
+    def _vector_app() -> MRApp:
+        def map_fn(keys, values):
+            # genuinely vectorial: touches axis 1, so a mis-shaped empty
+            # partition ((0,) instead of (0, 2)) would crash here
+            return keys, values[:, ::-1] * np.float32(2.0)
+
+        def reduce_fn(keys, values):
+            return keys, values
+
+        return MRApp(name="vec", map_fn=map_fn, reduce_fn=reduce_fn,
+                     record_bytes=8, intermediate_record_bytes=8)
+
+    def test_vector_float_values_with_empty_nodes(self):
+        p = two_cluster_example()
+        keys = np.arange(100, dtype=np.int64)
+        vals = np.random.default_rng(0).normal(size=(100, 2)).astype(np.float32)
+        # mapper 1 receives nothing, reducer 1 owns nothing
+        plan = ExecutionPlan(x=np.array([[1.0, 0.0], [1.0, 0.0]]),
+                             y=np.array([1.0, 0.0]))
+        eng = GeoMapReduce(p, plan, self._vector_app(), n_buckets=64)
+        outs, stats = eng.run([(keys[:50], vals[:50]), (keys[50:], vals[50:])])
+        for k, v in outs:
+            assert k.dtype == np.int64
+            assert v.dtype == np.float32
+            assert v.shape[1:] == (2,)
+        # mixed (empty + non-empty) outputs concatenate cleanly
+        merged = np.concatenate([v for _, v in outs])
+        assert merged.shape == (100, 2)
+        np.testing.assert_allclose(np.sort(merged, axis=0),
+                                   np.sort(vals[:, ::-1] * 2.0, axis=0),
+                                   rtol=1e-6)
+
+    def test_empty_source_keeps_dtype(self):
+        p = two_cluster_example()
+        keys = np.arange(40, dtype=np.int64)
+        vals = np.linspace(0.0, 1.0, 40, dtype=np.float64)
+        empty = (keys[:0], vals[:0])
+        eng = GeoMapReduce(p, uniform_plan(p), self._scalar_float_app())
+        outs, _ = eng.run([(keys, vals), empty])
+        for _, v in outs:
+            assert v.dtype == np.float64
+
+    @staticmethod
+    def _scalar_float_app() -> MRApp:
+        return MRApp(name="fid", map_fn=lambda k, v: (k, v),
+                     reduce_fn=lambda k, v: (k, v),
+                     record_bytes=8, intermediate_record_bytes=8)
 
 
 class TestPlanEnforcement:

@@ -53,8 +53,8 @@ def test_moe_shard_map_matches_single_device():
 
         y_ref, aux_ref = L.moe_fwd(cfg, p, x, mesh=None)
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         xs = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
         y_ep, aux_ep = jax.jit(
             lambda pp, xx: L.moe_fwd(cfg, pp, xx, mesh=mesh))(p, xs)
@@ -70,8 +70,8 @@ def test_hierarchical_allreduce_matches_psum():
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.train.collective_schedule import hierarchical_allreduce
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("pod", "data"))
         tree = {
             "a": jnp.arange(1000, dtype=jnp.float32).reshape(10, 100),
             "b": jnp.ones((7,), jnp.float32),
@@ -98,8 +98,8 @@ def test_dryrun_cell_reduced_mesh(arch, shape):
     out = run_sub(f"""
         import jax, json
         from repro.launch.dryrun import run_cell
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         rep = run_cell({arch!r}, {shape!r}, multi_pod=False, mesh=mesh,
                        reduced=True)
         assert rep["hlo_flops_per_device"] > 0
@@ -122,8 +122,8 @@ def test_elastic_checkpoint_reshard(tmp_path):
         from jax.sharding import NamedSharding
 
         cfg = padded_for_tp(ARCHS["qwen3-1.7b"].reduced(), 4)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         with axis_rules(mesh, DEFAULT_RULES):
             params = M.init(cfg, jax.random.PRNGKey(0), tp=4)
             state = init_state(cfg, params)

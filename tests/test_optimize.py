@@ -2,8 +2,7 @@
 brute force and the paper's linearization."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.makespan import BARRIERS_ALL_GLOBAL, makespan, phase_breakdown
 from repro.core.milp import (
