@@ -38,6 +38,7 @@ def main() -> None:
     results["fig9"] = F.fig9_applications()
     results["fig10"] = F.fig10_dynamics()
     results["fig12"] = F.fig12_replication()
+    results["schedule"] = F.schedule_contention()
 
     if not args.skip_roofline and os.path.isdir(
         os.path.join(args.out, "dryrun")

@@ -26,6 +26,17 @@ Every planner name registered via
 strategies plug into the facade without touching it.  Jobs without an
 application can still :meth:`GeoJob.simulate` their plan on the
 discrete-event executor.
+
+Concurrent jobs contending for the same WAN links and compute lift the same
+loop one level up — :class:`GeoSchedule` plans N jobs *together* on their
+shared :class:`repro.core.platform.Substrate` (policies: ``independent`` /
+``sequential`` / ``joint``) and executes or simulates them with real
+resource contention:
+
+    sub = Substrate.of(platform)
+    jobs = [GeoJob(sub.view(D_a, alpha), app_a), GeoJob(sub.view(D_b, alpha))]
+    report = GeoSchedule(jobs).plan(policy="joint").simulate()
+    print(report.summary())               # aggregate makespan + hot links
 """
 from __future__ import annotations
 
@@ -34,14 +45,28 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .core.makespan import BARRIERS_GGL, CostModel
-from .core.optimize import PlanResult, available_modes, optimize_plan
+from .core.makespan import BARRIERS_GGL, CostModel, attribute_phases
+from .core.optimize import (
+    PlanResult,
+    SchedulePlanResult,
+    available_modes,
+    optimize_plan,
+    optimize_schedule,
+)
 from .core.plan import ExecutionPlan, uniform_plan
-from .core.platform import Platform
-from .core.simulate import SimConfig, SimResult, simulate
+from .core.platform import Platform, Substrate
+from .core.simulate import (
+    ResourceStats,
+    ScheduleSimResult,
+    SimConfig,
+    SimResult,
+    simulate,
+    simulate_schedule,
+)
 from .mapreduce.engine import GeoMapReduce, MRApp, PhaseStats, Records
 
-__all__ = ["GeoJob", "JobReport", "split_sources"]
+__all__ = ["GeoJob", "GeoSchedule", "JobReport", "ScheduleReport",
+           "split_sources"]
 
 
 def split_sources(keys: np.ndarray, values: np.ndarray, n_sources: int) -> List[Records]:
@@ -239,3 +264,233 @@ class GeoJob:
         elif cfg_kwargs:
             raise TypeError("pass either cfg or keyword overrides, not both")
         return simulate(self.platform, result.plan, cfg)
+
+
+# ---------------------------------------------------------------------------
+# multi-job scheduling
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleReport:
+    """The outcome of one planned, concurrently executed schedule: per-job
+    plans priced under shared-capacity contention, the discrete-event
+    execution of all jobs on the shared substrate, per-resource
+    utilization/contention accounting, and (after :meth:`GeoSchedule.execute`)
+    per-job :class:`JobReport`\\ s with real measured byte movement."""
+
+    result: SchedulePlanResult
+    #: the concurrent discrete-event execution (always present — execute()
+    #: runs the modeled schedule too, for the resource accounting)
+    sim: ScheduleSimResult
+    barriers: Tuple[str, str, str]
+    #: per-job application reports (only from execute())
+    jobs: Optional[Tuple[JobReport, ...]] = None
+
+    @property
+    def policy(self) -> str:
+        return self.result.policy
+
+    @property
+    def plans(self) -> Tuple[ExecutionPlan, ...]:
+        return self.result.plans
+
+    @property
+    def sims(self) -> Tuple[SimResult, ...]:
+        """Per-job discrete-event results."""
+        return tuple(self.sim.jobs)
+
+    @property
+    def resources(self) -> Dict[str, ResourceStats]:
+        """Named substrate resources -> service accounting."""
+        return self.sim.resources
+
+    @property
+    def makespan_modeled(self) -> float:
+        """Aggregate modeled makespan (shared-capacity pricing, max over
+        jobs)."""
+        return self.result.makespan
+
+    @property
+    def makespan_sim(self) -> float:
+        """Aggregate discrete-event makespan (absolute finish of the last
+        job)."""
+        return self.sim.makespan
+
+    @property
+    def makespan_measured(self) -> Optional[float]:
+        """Aggregate measured makespan (execute() path), else ``None``."""
+        if self.jobs is None:
+            return None
+        return max(job.makespan_measured for job in self.jobs)
+
+    def utilization(self) -> Dict[str, float]:
+        """Busy fraction of the schedule horizon per named resource."""
+        return self.sim.utilization()
+
+    def contended(self) -> Dict[str, ResourceStats]:
+        """Resources that served chunks of more than one job."""
+        return self.sim.contended()
+
+    def summary(self) -> str:
+        measured = (
+            f" measured={self.makespan_measured:.1f}s"
+            if self.jobs is not None else ""
+        )
+        util = self.utilization()
+        hot = " ".join(
+            f"{n}={util[n]:.0%}"
+            for n in sorted(util, key=lambda n: -util[n])[:3]
+        )
+        return (
+            f"{self.policy}[{''.join(self.barriers)}] {len(self.sims)} jobs "
+            f"modeled={self.makespan_modeled:.1f}s "
+            f"simulated={self.makespan_sim:.1f}s{measured} "
+            f"contended={len(self.contended())} hottest: {hot}"
+        )
+
+
+class GeoSchedule:
+    """N concurrent :class:`GeoJob`\\ s contending for one shared
+    :class:`Substrate` — the end-to-end-beats-myopic argument lifted across
+    jobs.
+
+    The facade mirrors :class:`GeoJob`:
+    ``GeoSchedule(jobs).plan(policy=...).simulate()`` (or ``.execute(...)``
+    when every job carries an application).  All job platforms must be
+    views of the same substrate (:meth:`Substrate.view`); planning adopts
+    each per-job plan into its :class:`GeoJob`, so individual jobs remain
+    usable facades afterwards.
+    """
+
+    def __init__(self, jobs: Sequence[GeoJob]):
+        if not jobs:
+            raise ValueError("GeoSchedule needs at least one job")
+        self.jobs = list(jobs)
+        self.substrate = Substrate.of(self.jobs[0].platform)
+        for job in self.jobs[1:]:
+            if not self.substrate.compatible(Substrate.of(job.platform)):
+                raise ValueError(
+                    f"job platform {job.platform.name!r} does not share the "
+                    "substrate — build job platforms with Substrate.view()"
+                )
+        self._result: Optional[SchedulePlanResult] = None
+
+    def __repr__(self):
+        planned = repr(self._result) if self._result is not None else "unplanned"
+        return f"GeoSchedule({len(self.jobs)} jobs on {self.substrate.name}, {planned})"
+
+    # -- planning ------------------------------------------------------------
+    def plan(
+        self,
+        policy: str = "joint",
+        mode: str = "e2e_multi",
+        barriers: Tuple[str, str, str] = BARRIERS_GGL,
+        **solver_kwargs,
+    ) -> "GeoSchedule":
+        """Plan all jobs together with any registered schedule policy
+        (``independent`` / ``sequential`` / ``joint`` built in — see
+        :func:`repro.core.optimize.available_policies`); ``mode`` is the
+        per-job planner the policy builds on.  Each job adopts its
+        shared-priced :class:`PlanResult`."""
+        self._result = optimize_schedule(
+            [job.platform for job in self.jobs],
+            policy=policy, mode=mode, barriers=tuple(barriers),
+            **solver_kwargs,
+        )
+        for job, res in zip(self.jobs, self._result.results):
+            job._result = res
+        return self
+
+    @property
+    def planned(self) -> SchedulePlanResult:
+        if self._result is None:
+            raise RuntimeError(
+                "schedule has no plan yet — call .plan(policy=...) first"
+            )
+        return self._result
+
+    # -- execution -----------------------------------------------------------
+    def _sim_entries(self, cfg: Optional[SimConfig], cfg_kwargs):
+        result = self.planned
+        if cfg is None and not cfg_kwargs:
+            cfg = SimConfig(barriers=result.barriers)
+        elif cfg is None:
+            cfg_kwargs.setdefault("barriers", result.barriers)
+            cfg = SimConfig(**cfg_kwargs)
+        elif cfg_kwargs:
+            raise TypeError("pass either cfg or keyword overrides, not both")
+        cfgs = [cfg] * len(self.jobs) if isinstance(cfg, SimConfig) else list(cfg)
+        if len(cfgs) != len(self.jobs):
+            raise ValueError("one SimConfig per job (or a single shared one)")
+        return [
+            (job.platform, res.plan, c)
+            for job, res, c in zip(self.jobs, result.results, cfgs)
+        ]
+
+    def simulate(self, cfg=None, **cfg_kwargs) -> ScheduleReport:
+        """Execute all planned jobs concurrently on the chunk-granular
+        executor — chunks of different jobs contend for the same link and
+        compute resources.  ``cfg`` is a shared :class:`SimConfig`, a
+        per-job sequence of them, or keyword overrides; barriers default to
+        the planned ones."""
+        entries = self._sim_entries(cfg, cfg_kwargs)
+        sim = simulate_schedule(entries, substrate=self.substrate)
+        return ScheduleReport(
+            result=self.planned,
+            sim=sim,
+            barriers=self.planned.barriers,
+        )
+
+    def execute(self, per_source: Sequence[Sequence[Records]]) -> ScheduleReport:
+        """Run every job's application under its planned slice of the
+        schedule, price each job's *measured* byte movement under the same
+        shared-capacity equations the policy optimized, and report per-job
+        modeled-vs-measured timings plus the substrate's resource
+        accounting (from the modeled concurrent execution).
+
+        ``per_source[g]`` is job ``g``'s per-source record sets."""
+        result = self.planned
+        if len(per_source) != len(self.jobs):
+            raise ValueError("one per-source record set per job")
+        for job in self.jobs:
+            if job.app is None:
+                raise RuntimeError(
+                    "execute() needs every job to carry an application — "
+                    "use .simulate() for a model-only run"
+                )
+        stats_list: List[PhaseStats] = []
+        outputs_list: List[List[Records]] = []
+        for job, res, srcs in zip(self.jobs, result.results, per_source):
+            engine = GeoMapReduce(
+                job.platform, res.plan, job.app, n_buckets=job.n_buckets
+            )
+            outputs, stats = engine.run(srcs)
+            stats_list.append(stats)
+            outputs_list.append(outputs)
+        cm = CostModel(self.jobs[0].platform, result.barriers)
+        measured = cm.price_shared(
+            [stats.volumes_mb() for stats in stats_list], result.barriers
+        )
+        reports = tuple(
+            JobReport(
+                result=res,
+                stats=stats,
+                modeled=res.breakdown,
+                measured=attribute_phases(out),
+                outputs=outputs,
+                barriers=result.barriers,
+            )
+            for res, stats, out, outputs in zip(
+                result.results, stats_list, measured, outputs_list
+            )
+        )
+        sim = simulate_schedule(
+            self._sim_entries(None, {}), substrate=self.substrate
+        )
+        return ScheduleReport(
+            result=result,
+            sim=sim,
+            barriers=result.barriers,
+            jobs=reports,
+        )

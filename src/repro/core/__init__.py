@@ -22,24 +22,38 @@ from .makespan import (
     makespan,
     makespan_model,
     phase_breakdown,
+    shared_effective_volumes,
 )
 from .optimize import (
     MODES,
     PlanResult,
+    SchedulePlanResult,
     available_modes,
+    available_policies,
     brute_force_plan,
     get_planner,
+    get_schedule_planner,
     optimize_plan,
+    optimize_schedule,
     register_planner,
+    register_schedule_planner,
 )
 from .plan import ExecutionPlan, local_push_plan, uniform_plan
 from .platform import (
     Platform,
+    Substrate,
     planetlab_platform,
     tpu_pod_platform,
     two_cluster_example,
 )
-from .simulate import SimConfig, SimResult, simulate
+from .simulate import (
+    ResourceStats,
+    ScheduleSimResult,
+    SimConfig,
+    SimResult,
+    simulate,
+    simulate_schedule,
+)
 
 __all__ = [
     "BARRIERS_ALL_GLOBAL",
@@ -50,19 +64,29 @@ __all__ = [
     "MODES",
     "Platform",
     "PlanResult",
+    "ResourceStats",
+    "SchedulePlanResult",
+    "ScheduleSimResult",
     "SimConfig",
     "SimResult",
+    "Substrate",
     "available_modes",
+    "available_policies",
     "brute_force_plan",
     "get_planner",
+    "get_schedule_planner",
     "local_push_plan",
     "register_planner",
+    "register_schedule_planner",
     "makespan",
     "makespan_model",
     "optimize_plan",
+    "optimize_schedule",
     "phase_breakdown",
     "planetlab_platform",
+    "shared_effective_volumes",
     "simulate",
+    "simulate_schedule",
     "tpu_pod_platform",
     "two_cluster_example",
     "uniform_plan",

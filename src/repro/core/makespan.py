@@ -53,6 +53,7 @@ __all__ = [
     "makespan",
     "makespan_model",
     "phase_breakdown",
+    "shared_effective_volumes",
     "volume_model",
 ]
 
@@ -164,6 +165,44 @@ def analytic_volumes(D, x, y, alpha, xp=jnp):
     V_shuffle = alpha * (map_in[:, None] * y[None, :])  # (nM, nR)
     V_reduce = alpha * xp.sum(map_in) * y  # (nR,)
     return V_push, map_in, V_shuffle, V_reduce
+
+
+def shared_effective_volumes(volumes, kappa: float = 0.0, xp=np):
+    """Congestion-effective per-job volumes on a shared substrate.
+
+    ``volumes`` is a sequence of per-job ``(V_push, V_map, V_shuffle,
+    V_reduce)`` tuples over the *same* substrate.  When concurrent jobs
+    route data through the same link or compute node, a fair-share server
+    finishes each job's demand only after serving everyone's: the time job
+    ``g`` experiences on a resource is ``(V_g + Σ_{h≠g} V_h) / capacity``
+    whenever job ``g`` uses the resource at all, and ``0`` when it does not.
+    Those contention-inflated volumes are what this returns — feed them to
+    :func:`volume_model` (or :meth:`CostModel.price_volumes`) and the
+    ordinary single-job phase equations price the shared schedule, keeping
+    one float64 home for model *and* measurement.
+
+    ``kappa=0`` applies the exact hard usage gate ``1[V_g > 1e-9]`` — the
+    same 1e-9 MB cutoff below which the executor emits no chunk at all, so
+    softmax-epsilon plan entries are "unused" on both sides (use for
+    evaluation); ``kappa > 0`` smooths it to ``V_g / (V_g + kappa)`` so the
+    joint optimizer's gradients can trade contention against link speed
+    (use a kappa small against typical per-resource volumes).
+    """
+    volumes = [tuple(v) for v in volumes]
+    if len(volumes) <= 1:
+        return list(volumes)
+    totals = [sum(job[c] for job in volumes) for c in range(4)]
+    out = []
+    for job in volumes:
+        eff = []
+        for V, total in zip(job, totals):
+            if kappa > 0:
+                gate = V / (V + kappa)
+            else:
+                gate = xp.where(V > 1e-9, 1.0, 0.0)
+            eff.append(V + gate * (total - V))
+        out.append(tuple(eff))
+    return out
 
 
 def phase_model(
@@ -288,6 +327,28 @@ class CostModel:
     ) -> Dict[str, float]:
         return attribute_phases(
             self.price_volumes(V_push, V_map, V_shuffle, V_reduce, barriers)
+        )
+
+    # -- multi-job pricing ---------------------------------------------------
+    def price_shared(
+        self, volumes_list, barriers=None
+    ) -> "list[Dict[str, np.ndarray]]":
+        """Price N concurrent jobs' volumes on the shared substrate: each
+        job's per-phase volumes are inflated by the other jobs' demand on
+        every resource it touches (:func:`shared_effective_volumes`, hard
+        gate) and priced through the identical float64 phase equations.
+        ``volumes_list`` holds one ``(V_push, V_map, V_shuffle, V_reduce)``
+        tuple per job — analytic or measured, exactly as for
+        :meth:`price_volumes`."""
+        eff = shared_effective_volumes(volumes_list, kappa=0.0, xp=np)
+        return [self.price_volumes(*v, barriers=barriers) for v in eff]
+
+    def schedule_makespan(self, volumes_list, barriers=None) -> float:
+        """Aggregate (max over jobs) modeled makespan of N concurrent jobs
+        under shared-capacity pricing."""
+        return max(
+            float(out["makespan"])
+            for out in self.price_shared(volumes_list, barriers)
         )
 
 

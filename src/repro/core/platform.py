@@ -21,12 +21,13 @@ Generators are provided for
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 __all__ = [
     "Platform",
+    "Substrate",
     "two_cluster_example",
     "planetlab_platform",
     "tpu_pod_platform",
@@ -36,8 +37,180 @@ __all__ = [
 
 
 @dataclasses.dataclass(frozen=True)
+class Substrate:
+    """The shared physical resources of a distributed platform.
+
+    A substrate is everything about the tripartite graph that is *not*
+    job-specific: named link/compute resources with capacities, plus the
+    cluster topology.  Concurrent jobs contend for the same substrate
+    entries; a :class:`Platform` is one job's slice of it
+    (:meth:`Substrate.view` attaches the job's ``D`` and ``alpha`` *without
+    copying* the capacity arrays, so two jobs literally reference the same
+    ``B_sm``/``B_mr``/``C_m``/``C_r`` rows).
+
+    Attributes:
+      B_sm:  (nS, nM) push-link bandwidth, MB/s.
+      B_mr:  (nM, nR) shuffle-link bandwidth, MB/s.
+      C_m:   (nM,) mapper compute rate, MB/s of input data.
+      C_r:   (nR,) reducer compute rate, MB/s of input data.
+      cluster_s/m/r: integer cluster (site) id per node.
+    """
+
+    B_sm: np.ndarray
+    B_mr: np.ndarray
+    C_m: np.ndarray
+    C_r: np.ndarray
+    cluster_s: np.ndarray
+    cluster_m: np.ndarray
+    cluster_r: np.ndarray
+    name: str = "substrate"
+
+    def __post_init__(self):
+        for field in ("B_sm", "B_mr", "C_m", "C_r"):
+            object.__setattr__(
+                self, field, np.asarray(getattr(self, field), dtype=np.float64)
+            )
+            if np.any(getattr(self, field) <= 0):
+                raise ValueError(f"{field} must be strictly positive")
+        nS, nM = self.B_sm.shape
+        nM2, nR = self.B_mr.shape
+        if nM != nM2:
+            raise ValueError(f"B_sm/B_mr mapper dims disagree: {nM} vs {nM2}")
+        if self.C_m.shape != (nM,):
+            raise ValueError(f"C_m shape {self.C_m.shape} != ({nM},)")
+        if self.C_r.shape != (nR,):
+            raise ValueError(f"C_r shape {self.C_r.shape} != ({nR},)")
+
+    # -- sizes ------------------------------------------------------------
+    @property
+    def nS(self) -> int:
+        return self.B_sm.shape[0]
+
+    @property
+    def nM(self) -> int:
+        return self.B_sm.shape[1]
+
+    @property
+    def nR(self) -> int:
+        return self.B_mr.shape[1]
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def of(cls, platform: "Platform") -> "Substrate":
+        """The substrate behind ``platform`` — its declared one when it was
+        built as a view, otherwise a substrate sharing the platform's own
+        capacity arrays (so views of it contend with the original job)."""
+        if platform.substrate is not None:
+            return platform.substrate
+        return cls(
+            B_sm=platform.B_sm,
+            B_mr=platform.B_mr,
+            C_m=platform.C_m,
+            C_r=platform.C_r,
+            cluster_s=platform.cluster_s,
+            cluster_m=platform.cluster_m,
+            cluster_r=platform.cluster_r,
+            name=platform.name,
+        )
+
+    def view(
+        self,
+        D: np.ndarray,
+        alpha: float = 1.0,
+        name: Optional[str] = None,
+    ) -> "Platform":
+        """One job's slice of this substrate: a :class:`Platform` carrying
+        the job's data layout ``D`` and expansion factor ``alpha`` while
+        *sharing* (not copying) the capacity arrays."""
+        return Platform(
+            D=np.asarray(D, dtype=np.float64),
+            B_sm=self.B_sm,
+            B_mr=self.B_mr,
+            C_m=self.C_m,
+            C_r=self.C_r,
+            alpha=float(alpha),
+            cluster_s=self.cluster_s,
+            cluster_m=self.cluster_m,
+            cluster_r=self.cluster_r,
+            name=name or f"{self.name}/job",
+            substrate=self,
+        )
+
+    def compatible(self, other: "Substrate") -> bool:
+        """Two substrates describe the same physical resources when they are
+        the same object or hold identical capacity arrays (jobs built from
+        equal generator calls may legitimately share)."""
+        if self is other:
+            return True
+        return (
+            self.B_sm.shape == other.B_sm.shape
+            and self.B_mr.shape == other.B_mr.shape
+            and np.array_equal(self.B_sm, other.B_sm)
+            and np.array_equal(self.B_mr, other.B_mr)
+            and np.array_equal(self.C_m, other.C_m)
+            and np.array_equal(self.C_r, other.C_r)
+        )
+
+    # -- named resources ---------------------------------------------------
+    def resources(self) -> Dict[str, float]:
+        """Every named resource and its capacity (MB/s): push/shuffle links
+        and map/reduce compute nodes.  These names key the per-resource
+        utilization stats of the multi-job executor."""
+        out: Dict[str, float] = {}
+        for i in range(self.nS):
+            for j in range(self.nM):
+                out[f"push[s{i}->m{j}]"] = float(self.B_sm[i, j])
+        for j in range(self.nM):
+            for k in range(self.nR):
+                out[f"shuffle[m{j}->r{k}]"] = float(self.B_mr[j, k])
+        for j in range(self.nM):
+            out[f"map[m{j}]"] = float(self.C_m[j])
+        for k in range(self.nR):
+            out[f"reduce[r{k}]"] = float(self.C_r[k])
+        return out
+
+    def residual(
+        self,
+        push_frac: Optional[np.ndarray] = None,
+        shuffle_frac: Optional[np.ndarray] = None,
+        map_frac: Optional[np.ndarray] = None,
+        reduce_frac: Optional[np.ndarray] = None,
+        floor: float = 0.05,
+    ) -> "Substrate":
+        """A *planning* view of this substrate with the given fraction of
+        each resource's capacity already committed to earlier jobs (greedy
+        sequential scheduling).  Residual capacities are floored at
+        ``floor`` of the original so later jobs always see a usable (if
+        slow) platform.  The result is a distinct substrate — it prices
+        hypothetical residual capacity and must not be used as the identity
+        of the physical resources."""
+
+        def scale(cap, frac):
+            if frac is None:
+                return cap.copy()  # never alias the physical substrate
+            frac = np.clip(np.asarray(frac, dtype=np.float64), 0.0, 1.0 - floor)
+            return cap * (1.0 - frac)
+
+        return dataclasses.replace(
+            self,
+            B_sm=scale(self.B_sm, push_frac),
+            B_mr=scale(self.B_mr, shuffle_frac),
+            C_m=scale(self.C_m, map_frac),
+            C_r=scale(self.C_r, reduce_frac),
+            name=f"{self.name}/residual",
+        )
+
+    def describe(self) -> str:
+        return (
+            f"Substrate({self.name}: nS={self.nS} nM={self.nM} nR={self.nR}, "
+            f"{len(self.resources())} resources)"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class Platform:
-    """A tripartite MapReduce platform (paper Figure 3).
+    """A tripartite MapReduce platform (paper Figure 3): one job's slice of
+    a (possibly shared) :class:`Substrate`.
 
     Attributes:
       D:     (nS,) data originating at each source, MB.
@@ -49,6 +222,9 @@ class Platform:
       cluster_s/m/r: integer cluster (site) id per node — used by "local"
         heuristic plans and by the replication model; not used by the
         optimizer itself.
+      substrate: the shared substrate this platform is a view of (set by
+        :meth:`Substrate.view`); ``None`` for a standalone single-job
+        platform, in which case :meth:`Substrate.of` lifts one on demand.
     """
 
     D: np.ndarray
@@ -61,6 +237,7 @@ class Platform:
     cluster_m: np.ndarray
     cluster_r: np.ndarray
     name: str = "platform"
+    substrate: Optional[Substrate] = None
 
     def __post_init__(self):
         D = np.asarray(self.D, dtype=np.float64)

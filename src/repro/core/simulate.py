@@ -1,9 +1,9 @@
-"""Discrete-event execution of a plan on a modeled platform.
+"""Resource-centric discrete-event execution of plans on a shared substrate.
 
 The paper validates its analytic model against a modified Hadoop running on
 an emulated (``tc``-shaped) testbed.  This container offers a single CPU, so
 we do the analogous thing in software: a **chunk-granular discrete-event
-executor** that runs an execution plan over the platform model, serializing
+executor** that runs execution plans over the platform model, serializing
 chunks on links and compute nodes, honoring the barrier configuration, and —
 unlike the analytic model — supporting the *dynamic* mechanisms the paper
 compares against (§4.6.4) and the failure modes a production deployment must
@@ -16,30 +16,50 @@ survive:
 * **work stealing** — idle nodes *take* (rather than clone) unstarted chunks
   from the most backlogged peer, re-fetching inputs from the source;
 * **stragglers** — per-node slowdown factors unknown to the planner;
-* **node failure** — a mapper dies at a given time; its unfinished work is
-  re-fetched from the data source (or nearest replica) and re-queued on the
-  best surviving node;
+* **node failure** — a job's mapper worker dies at a given time; its
+  unfinished work is re-fetched from the data source (or nearest replica)
+  and re-queued on the best surviving node;
 * **replication** — push chunks are written ``replication×``, optionally
   across clusters (paper §4.6.5), consuming link capacity and speeding up
   recovery.
 
+Events flow through **shared resources**, not through one hard-coded plan:
+every push/shuffle link is a :class:`LinkResource` and every mapper/reducer
+a :class:`ComputeResource`, each serving booked chunks FIFO.  ``N`` plans
+run *concurrently* on one :class:`repro.core.platform.Substrate`
+(:func:`simulate_schedule`) with real contention — chunks of different jobs
+interleave on the same links and nodes in booking order, which
+approximates fair sharing because concurrent jobs seed and emit their
+chunks round-robin.  The single-plan :func:`simulate` is the ``N=1``
+special case with unchanged semantics.
+
 The executor is used by the Fig-4 validation benchmark (model-vs-execution
-correlation), the Fig-10/11 dynamics study, and the fault-tolerance tests.
+correlation), the Fig-10/11 dynamics study, the multi-job contention
+benchmark, and the fault-tolerance tests.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from .makespan import BARRIERS_GGL, _check_barriers
 from .plan import ExecutionPlan
-from .platform import Platform
+from .platform import Platform, Substrate
 
-__all__ = ["SimConfig", "SimResult", "simulate"]
+__all__ = [
+    "ComputeResource",
+    "LinkResource",
+    "ResourceStats",
+    "ScheduleSimResult",
+    "SimConfig",
+    "SimResult",
+    "simulate",
+    "simulate_schedule",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,11 +74,14 @@ class SimConfig:
     #: per-node compute slowdown factors applied at runtime (unknown to the
     #: planner): {("m"| "r", node_index): factor >= 1}
     stragglers: Optional[Dict[Tuple[str, int], float]] = None
-    #: (mapper_index, fail_time_s) — the mapper dies; work is recovered.
+    #: (mapper_index, fail_time_s) — the job's worker on that mapper dies;
+    #: its work is recovered onto surviving mappers.
     fail_mapper: Optional[Tuple[int, float]] = None
     #: lognormal sigma on per-chunk service times (0 = deterministic).
     compute_noise: float = 0.0
     seed: int = 0
+    #: release time: the job's sources start pushing at this absolute time.
+    start_time: float = 0.0
 
     def __post_init__(self):
         object.__setattr__(self, "barriers", _check_barriers(self.barriers))
@@ -84,6 +107,122 @@ class SimResult:
             "makespan": self.makespan,
         }
 
+    def as_dict(self) -> Dict[str, float]:
+        """Stable flat form for benchmark emission / JSON dumps: every
+        scalar field by name (seconds / MB / counts)."""
+        return {
+            "makespan": self.makespan,
+            "push_end": self.push_end,
+            "map_end": self.map_end,
+            "shuffle_end": self.shuffle_end,
+            "reduce_end": self.reduce_end,
+            "wasted_mb": self.wasted_mb,
+            "recovered_chunks": float(self.recovered_chunks),
+            "total_map_chunks": float(self.total_map_chunks),
+        }
+
+
+# ---------------------------------------------------------------------------
+# shared resources
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ResourceStats:
+    """Accumulated service accounting for one named substrate resource."""
+
+    busy_s: float = 0.0  # seconds spent serving chunks
+    waited_s: float = 0.0  # chunk-seconds spent queued behind earlier bookings
+    volume_mb: float = 0.0
+    n_chunks: int = 0
+    jobs: set = dataclasses.field(default_factory=set)
+
+    def utilization(self, horizon: float) -> float:
+        """Fraction of ``horizon`` this resource spent serving."""
+        return self.busy_s / horizon if horizon > 0 else 0.0
+
+    @property
+    def contended(self) -> bool:
+        return len(self.jobs) > 1
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "busy_s": self.busy_s,
+            "waited_s": self.waited_s,
+            "volume_mb": self.volume_mb,
+            "n_chunks": float(self.n_chunks),
+            "n_jobs": float(len(self.jobs)),
+        }
+
+
+class LinkResource:
+    """A point-to-point link serving booked transfers FIFO.
+
+    Bookings reserve the link eagerly: ``book`` returns the completion time
+    of a transfer queued behind everything already booked — exactly the
+    serialization the single-job executor applied, now shared by every job
+    that routes chunks through this link.
+    """
+
+    __slots__ = ("name", "bw", "free", "stats")
+
+    def __init__(self, name: str, bw: float):
+        self.name = name
+        self.bw = float(bw)
+        self.free = 0.0
+        self.stats = ResourceStats()
+
+    def book(self, now: float, size: float, job: int) -> float:
+        start = max(now, self.free)
+        end = start + size / self.bw
+        self.free = end
+        s = self.stats
+        s.busy_s += end - start
+        s.waited_s += start - now
+        s.volume_mb += size
+        s.n_chunks += 1
+        s.jobs.add(job)
+        return end
+
+
+class ComputeResource:
+    """A map/reduce worker node serving queued chunks FIFO across jobs."""
+
+    __slots__ = ("name", "rate", "busy", "current", "queue", "stats")
+
+    def __init__(self, name: str, rate: float):
+        self.name = name
+        self.rate = float(rate)
+        self.busy = False
+        #: the job whose chunk is in service (None when idle) — barrier
+        #: checks must distinguish "busy with MY chunk" from "busy at all"
+        self.current: Optional["_JobRun"] = None
+        #: FIFO of (job_state, chunk, enqueue_time)
+        self.queue: List[Tuple["_JobRun", "_Chunk", float]] = []
+        self.stats = ResourceStats()
+
+    def enqueue(self, run: "_JobRun", chunk: "_Chunk", now: float) -> None:
+        self.queue.append((run, chunk, now))
+
+    def job_chunks(self, run: "_JobRun") -> List["_Chunk"]:
+        return [c for g, c, _ in self.queue if g is run]
+
+    def remove(self, run: "_JobRun", chunk: "_Chunk") -> None:
+        for idx, (g, c, _) in enumerate(self.queue):
+            if g is run and c is chunk:
+                del self.queue[idx]
+                return
+        raise ValueError("chunk not queued at this resource")
+
+    def record_service(self, start: float, enqueued: float, dur: float,
+                       size: float, job: int) -> None:
+        s = self.stats
+        s.busy_s += dur
+        s.waited_s += start - enqueued
+        s.volume_mb += size
+        s.n_chunks += 1
+        s.jobs.add(job)
+
 
 class _Chunk:
     __slots__ = ("cid", "size", "src", "done", "started_copies", "owner", "cloned")
@@ -98,30 +237,19 @@ class _Chunk:
         self.cloned = False
 
 
-class _Sim:
-    """Event-driven executor.  Events are (time, seq, fn_name, args)."""
+class _JobRun:
+    """Per-job executor state: the plan, barrier gates, progress counters and
+    phase timestamps of one job sharing the substrate."""
 
-    def __init__(self, platform: Platform, plan: ExecutionPlan, cfg: SimConfig):
+    def __init__(self, idx: int, platform: Platform, plan: ExecutionPlan,
+                 cfg: SimConfig, nM: int, nR: int):
+        self.idx = idx
         self.p = platform
         self.plan = plan
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
-        self.now = 0.0
-        self._heap: List[Tuple[float, int, str, tuple]] = []
-        self._seq = itertools.count()
-        self._cid = itertools.count()
 
-        nS, nM, nR = platform.nS, platform.nM, platform.nR
-        self.push_link_free = np.zeros((nS, nM))
-        self.shuf_link_free = np.zeros((nM, nR))
-        self.map_free = np.zeros(nM)
-        self.red_free = np.zeros(nR)
         self.map_alive = np.ones(nM, dtype=bool)
-
-        self.map_queue: List[List[_Chunk]] = [[] for _ in range(nM)]
-        self.red_queue: List[List[_Chunk]] = [[] for _ in range(nR)]
-        self.map_busy = np.zeros(nM, dtype=bool)
-        self.red_busy = np.zeros(nR, dtype=bool)
 
         # outstanding counters for gates
         self.push_inflight = np.zeros(nM, dtype=np.int64)
@@ -146,19 +274,17 @@ class _Sim:
         # reduce chunks gated at reducer k (shuffle/reduce barrier)
         self.red_gated: List[List[_Chunk]] = [[] for _ in range(nR)]
 
-    # -- infrastructure ----------------------------------------------------
-    def at(self, t: float, fn: str, *args):
-        heapq.heappush(self._heap, (t, next(self._seq), fn, args))
+    def noise(self) -> float:
+        if self.cfg.compute_noise <= 0:
+            return 1.0
+        return float(np.exp(self.rng.normal(0.0, self.cfg.compute_noise)))
 
-    def run(self) -> SimResult:
-        self._seed_push()
-        if self.cfg.fail_mapper is not None:
-            j, tf = self.cfg.fail_mapper
-            self.at(tf, "fail_mapper", j)
-        while self._heap:
-            t, _, fn, args = heapq.heappop(self._heap)
-            self.now = max(self.now, t)
-            getattr(self, "_ev_" + fn)(*args)
+    def slowdown(self, tier: str, idx: int) -> float:
+        if self.cfg.stragglers:
+            return self.cfg.stragglers.get((tier, idx), 1.0)
+        return 1.0
+
+    def result(self) -> SimResult:
         return SimResult(
             makespan=self.reduce_end,
             push_end=self.push_end,
@@ -170,315 +296,492 @@ class _Sim:
             total_map_chunks=self.total_map_chunks,
         )
 
-    def _noise(self) -> float:
-        if self.cfg.compute_noise <= 0:
-            return 1.0
-        return float(np.exp(self.rng.normal(0.0, self.cfg.compute_noise)))
 
-    def _rate(self, tier: str, idx: int) -> float:
-        base = self.p.C_m[idx] if tier == "m" else self.p.C_r[idx]
-        slow = 1.0
-        if self.cfg.stragglers:
-            slow = self.cfg.stragglers.get((tier, idx), 1.0)
-        return base / slow
+@dataclasses.dataclass
+class ScheduleSimResult:
+    """Concurrent execution of N jobs on one substrate: per-job timings plus
+    per-resource service accounting."""
+
+    jobs: List[SimResult]
+    makespan: float  # absolute completion time of the last job
+    resources: Dict[str, ResourceStats]
+
+    def utilization(self) -> Dict[str, float]:
+        """Busy fraction of the schedule horizon per named resource."""
+        return {
+            name: s.utilization(self.makespan)
+            for name, s in self.resources.items()
+        }
+
+    def contended(self) -> Dict[str, ResourceStats]:
+        """Resources that served chunks of more than one job."""
+        return {n: s for n, s in self.resources.items() if s.contended}
+
+    def summary(self) -> str:
+        worst = sorted(
+            self.resources.items(), key=lambda kv: -kv[1].busy_s
+        )[:3]
+        hot = " ".join(
+            f"{n}={s.utilization(self.makespan):.0%}" for n, s in worst
+        )
+        return (
+            f"schedule: {len(self.jobs)} jobs makespan={self.makespan:.1f}s "
+            f"contended={len(self.contended())} hottest: {hot}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class _MultiSim:
+    """Resource-centric event engine running N jobs on one substrate.
+
+    Events are ``(time, seq, fn_name, args)``; chunk events are routed
+    through the shared :class:`LinkResource`/:class:`ComputeResource`
+    objects, so concurrent jobs contend for the same capacity entries.
+    """
+
+    def __init__(self, substrate: Substrate, runs: List[_JobRun]):
+        self.sub = substrate
+        self.runs = runs
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, str, tuple]] = []
+        self._seq = itertools.count()
+        self._cid = itertools.count()
+
+        nS, nM, nR = substrate.nS, substrate.nM, substrate.nR
+        self.push_links = [
+            [LinkResource(f"push[s{i}->m{j}]", substrate.B_sm[i, j])
+             for j in range(nM)]
+            for i in range(nS)
+        ]
+        self.shuf_links = [
+            [LinkResource(f"shuffle[m{j}->r{k}]", substrate.B_mr[j, k])
+             for k in range(nR)]
+            for j in range(nM)
+        ]
+        self.mappers = [
+            ComputeResource(f"map[m{j}]", substrate.C_m[j]) for j in range(nM)
+        ]
+        self.reducers = [
+            ComputeResource(f"reduce[r{k}]", substrate.C_r[k]) for k in range(nR)
+        ]
+
+    # -- infrastructure ----------------------------------------------------
+    def at(self, t: float, fn: str, *args):
+        heapq.heappush(self._heap, (t, next(self._seq), fn, args))
+
+    def run(self) -> ScheduleSimResult:
+        # jobs sharing a release time seed round-robin (chunk-interleaved
+        # bookings approximate fair-share FIFO on contended links)
+        for start in sorted({g.cfg.start_time for g in self.runs}):
+            group = [g for g in self.runs if g.cfg.start_time == start]
+            self.at(start, "seed_jobs", tuple(g.idx for g in group))
+        for g in self.runs:
+            if g.cfg.fail_mapper is not None:
+                j, tf = g.cfg.fail_mapper
+                self.at(tf, "fail_mapper", g, j)
+        while self._heap:
+            t, _, fn, args = heapq.heappop(self._heap)
+            self.now = max(self.now, t)
+            getattr(self, "_ev_" + fn)(*args)
+        resources: Dict[str, ResourceStats] = {}
+        for row in self.push_links:
+            for link in row:
+                resources[link.name] = link.stats
+        for row in self.shuf_links:
+            for link in row:
+                resources[link.name] = link.stats
+        for node in self.mappers + self.reducers:
+            resources[node.name] = node.stats
+        return ScheduleSimResult(
+            jobs=[g.result() for g in self.runs],
+            makespan=max((g.reduce_end for g in self.runs), default=0.0),
+            resources=resources,
+        )
+
+    def _rate(self, g: _JobRun, tier: str, idx: int) -> float:
+        node = self.mappers[idx] if tier == "m" else self.reducers[idx]
+        return node.rate / g.slowdown(tier, idx)
 
     # -- push phase ----------------------------------------------------------
-    def _seed_push(self):
-        cfg, p = self.cfg, self.p
+    def _ev_seed_jobs(self, idxs: Tuple[int, ...]):
+        """Seed every push chunk of the released jobs, interleaving chunks
+        across jobs so shared links serve them round-robin."""
+        pending = [(self.runs[i], self._push_ops(self.runs[i])) for i in idxs]
+        cursors = [0] * len(pending)
+        live = True
+        while live:
+            live = False
+            for slot, (g, ops) in enumerate(pending):
+                if cursors[slot] >= len(ops):
+                    continue
+                live = True
+                i, j, size = ops[cursors[slot]]
+                cursors[slot] += 1
+                c = _Chunk(next(self._cid), size, i, owner=j)
+                g.total_map_chunks += 1
+                g.push_inflight[j] += 1
+                g.total_push_inflight += 1
+                g.map_unfinished[j] += 1
+                g.total_map_unfinished += 1
+                self._send_push(g, i, j, c)
+                self._replicate(g, i, j, size)
+
+    def _push_ops(self, g: _JobRun) -> List[Tuple[int, int, float]]:
+        """The job's push chunks as (source, mapper, MB) in seeding order."""
+        cfg, p = g.cfg, g.p
+        ops: List[Tuple[int, int, float]] = []
         for i in range(p.nS):
-            remaining = p.D[i]
             for j in range(p.nM):
-                amount = p.D[i] * self.plan.x[i, j]
+                amount = p.D[i] * g.plan.x[i, j]
                 if amount <= 1e-9:
                     continue
                 n_chunks = max(int(np.ceil(amount / cfg.chunk_mb)), 1)
-                sizes = np.full(n_chunks, amount / n_chunks)
-                for s in sizes:
-                    c = _Chunk(next(self._cid), float(s), i, owner=j)
-                    self.total_map_chunks += 1
-                    self.push_inflight[j] += 1
-                    self.total_push_inflight += 1
-                    self.map_unfinished[j] += 1
-                    self.total_map_unfinished += 1
-                    self._send_push(i, j, c, replica=False)
-                    self._replicate(i, j, s)
-            del remaining
+                ops.extend((i, j, amount / n_chunks) for _ in range(n_chunks))
+        return ops
 
-    def _replicate(self, i: int, j: int, size: float):
+    def _replicate(self, g: _JobRun, i: int, j: int, size: float):
         """Write replication-1 extra copies of a push chunk (replica targets
         never run map work; they only consume link capacity)."""
-        p, cfg = self.p, self.cfg
+        sub, cfg = self.sub, g.cfg
         for r in range(cfg.replication - 1):
             if cfg.cross_cluster_replication:
                 candidates = [
-                    m for m in range(p.nM) if p.cluster_m[m] != p.cluster_m[j]
+                    m for m in range(sub.nM)
+                    if sub.cluster_m[m] != sub.cluster_m[j]
                 ]
             else:
                 candidates = [
                     m
-                    for m in range(p.nM)
-                    if p.cluster_m[m] == p.cluster_m[j] and m != j
+                    for m in range(sub.nM)
+                    if sub.cluster_m[m] == sub.cluster_m[j] and m != j
                 ]
             if not candidates:
-                candidates = [m for m in range(p.nM) if m != j]
+                candidates = [m for m in range(sub.nM) if m != j]
             tgt = candidates[(j + r + 1) % len(candidates)]
-            start = max(self.now, self.push_link_free[i, tgt])
-            end = start + size / self.p.B_sm[i, tgt]
-            self.push_link_free[i, tgt] = end
-            self.wasted_mb += size
+            end = self.push_links[i][tgt].book(self.now, size, g.idx)
+            g.wasted_mb += size
             # the write pipeline is not durable (and the push phase not
             # complete) until every replica is on disk: replica writes gate
             # the ORIGIN mapper's input like any other push chunk.
-            self.push_inflight[j] += 1
-            self.total_push_inflight += 1
-            self.at(end, "replica_done", j)
+            g.push_inflight[j] += 1
+            g.total_push_inflight += 1
+            self.at(end, "replica_done", g, j)
 
-    def _ev_replica_done(self, j: int):
-        self.push_end = max(self.push_end, self.now)
-        self.push_inflight[j] -= 1
-        self.total_push_inflight -= 1
-        b = self.cfg.barriers[0]
-        if b == "L" and self.push_inflight[j] == 0:
-            self._open_map_gate(j)
-        elif b == "G" and self.total_push_inflight == 0:
-            for m in range(self.p.nM):
-                self._open_map_gate(m)
+    def _ev_replica_done(self, g: _JobRun, j: int):
+        g.push_end = max(g.push_end, self.now)
+        g.push_inflight[j] -= 1
+        g.total_push_inflight -= 1
+        b = g.cfg.barriers[0]
+        if b == "L" and g.push_inflight[j] == 0:
+            self._open_map_gate(g, j)
+        elif b == "G" and g.total_push_inflight == 0:
+            for m in range(self.sub.nM):
+                self._open_map_gate(g, m)
 
-    def _send_push(self, i: int, j: int, c: _Chunk, replica: bool):
-        start = max(self.now, self.push_link_free[i, j])
-        end = start + c.size / self.p.B_sm[i, j]
-        self.push_link_free[i, j] = end
-        self.at(end, "push_arrive", i, j, c)
+    def _send_push(self, g: _JobRun, i: int, j: int, c: _Chunk):
+        end = self.push_links[i][j].book(self.now, c.size, g.idx)
+        self.at(end, "push_arrive", g, i, j, c)
 
-    def _ev_push_arrive(self, i: int, j: int, c: _Chunk):
-        self.push_end = max(self.push_end, self.now)
-        self.push_inflight[j] -= 1
-        self.total_push_inflight -= 1
-        if not self.map_alive[j]:
-            self._recover_chunk(j, c)
+    def _ev_push_arrive(self, g: _JobRun, i: int, j: int, c: _Chunk):
+        g.push_end = max(g.push_end, self.now)
+        g.push_inflight[j] -= 1
+        g.total_push_inflight -= 1
+        if not g.map_alive[j]:
+            self._recover_chunk(g, j, c)
             return
-        b = self.cfg.barriers[0]
+        b = g.cfg.barriers[0]
         if b == "P":
-            self.map_queue[j].append(c)
+            self.mappers[j].enqueue(g, c, self.now)
             self._pump_map(j)
         else:
-            self.map_gated[j].append(c)
-            if b == "L" and self.push_inflight[j] == 0:
-                self._open_map_gate(j)
-            elif b == "G" and self.total_push_inflight == 0:
-                for m in range(self.p.nM):
-                    self._open_map_gate(m)
+            g.map_gated[j].append(c)
+            if b == "L" and g.push_inflight[j] == 0:
+                self._open_map_gate(g, j)
+            elif b == "G" and g.total_push_inflight == 0:
+                for m in range(self.sub.nM):
+                    self._open_map_gate(g, m)
 
-    def _open_map_gate(self, j: int):
-        if self.map_gated[j]:
-            self.map_queue[j].extend(self.map_gated[j])
-            self.map_gated[j].clear()
+    def _open_map_gate(self, g: _JobRun, j: int):
+        if g.map_gated[j]:
+            for c in g.map_gated[j]:
+                self.mappers[j].enqueue(g, c, self.now)
+            g.map_gated[j].clear()
         self._pump_map(j)
 
     # -- map phase -------------------------------------------------------------
     def _pump_map(self, j: int):
-        if self.map_busy[j] or not self.map_alive[j] or not self.map_queue[j]:
-            if (
-                not self.map_busy[j]
-                and not self.map_queue[j]
-                and self.map_alive[j]
-            ):
-                self._idle_mapper(j)
+        node = self.mappers[j]
+        if node.busy:
             return
-        c = self.map_queue[j].pop(0)
+        if not node.queue:
+            self._idle_mapper(j)
+            return
+        g, c, t_enq = node.queue.pop(0)
         if c.done:  # a speculative twin already finished this chunk
             self._pump_map(j)
             return
         c.started_copies += 1
-        self.map_busy[j] = True
-        dur = c.size / self._rate("m", j) * self._noise()
-        self.at(self.now + dur, "map_done", j, c)
+        node.busy = True
+        node.current = g
+        dur = c.size / self._rate(g, "m", j) * g.noise()
+        node.record_service(self.now, t_enq, dur, c.size, g.idx)
+        self.at(self.now + dur, "map_done", g, j, c)
 
-    def _ev_map_done(self, j: int, c: _Chunk):
-        self.map_busy[j] = False
+    def _ev_map_done(self, g: _JobRun, j: int, c: _Chunk):
+        self.mappers[j].busy = False
+        self.mappers[j].current = None
         if c.done:
-            self.wasted_mb += c.size  # lost the speculation race
+            g.wasted_mb += c.size  # lost the speculation race
             self._pump_map(j)
             return
         c.done = True
-        self.map_end = max(self.map_end, self.now)
+        g.map_end = max(g.map_end, self.now)
         owner = c.owner if c.owner >= 0 else j
-        self.map_unfinished[owner] -= 1
-        self.total_map_unfinished -= 1
-        self._emit_shuffle(j, c)
-        if owner != j and self.cfg.barriers[1] == "L" and self.map_unfinished[owner] == 0:
-            self._open_shuffle_gate(owner)
+        g.map_unfinished[owner] -= 1
+        g.total_map_unfinished -= 1
+        self._emit_shuffle(g, j, c)
+        if owner != j and g.cfg.barriers[1] == "L" and g.map_unfinished[owner] == 0:
+            self._open_shuffle_gate(g, owner)
         self._pump_map(j)
 
-    def _emit_shuffle(self, j: int, c: _Chunk):
-        b = self.cfg.barriers[1]
-        for k in range(self.p.nR):
-            amount = self.p.alpha * c.size * self.plan.y[k]
+    def _emit_shuffle(self, g: _JobRun, j: int, c: _Chunk):
+        b = g.cfg.barriers[1]
+        for k in range(self.sub.nR):
+            amount = g.p.alpha * c.size * g.plan.y[k]
             if amount <= 1e-9:
                 continue
             sc = _Chunk(next(self._cid), float(amount), j)
-            self.shuf_inflight[k] += 1
-            self.total_shuf_inflight += 1
+            g.shuf_inflight[k] += 1
+            g.total_shuf_inflight += 1
             if b == "P":
-                self._send_shuffle(j, k, sc)
+                self._send_shuffle(g, j, k, sc)
             else:
-                self.shuf_gated[j].append((k, sc))
-        if b == "L" and self.map_unfinished[j] == 0:
-            self._open_shuffle_gate(j)
-        elif b == "G" and self.total_map_unfinished == 0:
-            for m in range(self.p.nM):
-                self._open_shuffle_gate(m)
+                g.shuf_gated[j].append((k, sc))
+        if b == "L" and g.map_unfinished[j] == 0:
+            self._open_shuffle_gate(g, j)
+        elif b == "G" and g.total_map_unfinished == 0:
+            for m in range(self.sub.nM):
+                self._open_shuffle_gate(g, m)
 
-    def _open_shuffle_gate(self, j: int):
-        for k, sc in self.shuf_gated[j]:
-            self._send_shuffle(j, k, sc)
-        self.shuf_gated[j].clear()
+    def _open_shuffle_gate(self, g: _JobRun, j: int):
+        for k, sc in g.shuf_gated[j]:
+            self._send_shuffle(g, j, k, sc)
+        g.shuf_gated[j].clear()
 
-    def _send_shuffle(self, j: int, k: int, sc: _Chunk):
-        start = max(self.now, self.shuf_link_free[j, k])
-        end = start + sc.size / self.p.B_mr[j, k]
-        self.shuf_link_free[j, k] = end
-        self.at(end, "shuffle_arrive", j, k, sc)
+    def _send_shuffle(self, g: _JobRun, j: int, k: int, sc: _Chunk):
+        end = self.shuf_links[j][k].book(self.now, sc.size, g.idx)
+        self.at(end, "shuffle_arrive", g, j, k, sc)
 
-    def _ev_shuffle_arrive(self, j: int, k: int, sc: _Chunk):
-        self.shuffle_end = max(self.shuffle_end, self.now)
-        self.shuf_inflight[k] -= 1
-        self.total_shuf_inflight -= 1
-        b = self.cfg.barriers[2]
+    def _ev_shuffle_arrive(self, g: _JobRun, j: int, k: int, sc: _Chunk):
+        g.shuffle_end = max(g.shuffle_end, self.now)
+        g.shuf_inflight[k] -= 1
+        g.total_shuf_inflight -= 1
+        b = g.cfg.barriers[2]
         if b == "P":
-            self.red_queue[k].append(sc)
+            self.reducers[k].enqueue(g, sc, self.now)
             self._pump_reduce(k)
         else:
-            self.red_gated[k].append(sc)
-            if b == "L" and self.shuf_inflight[k] == 0 and self._shuffle_final():
-                self._open_reduce_gate(k)
-            elif b == "G" and self.total_shuf_inflight == 0 and self._shuffle_final():
-                for r in range(self.p.nR):
-                    self._open_reduce_gate(r)
+            g.red_gated[k].append(sc)
+            if b == "L" and g.shuf_inflight[k] == 0 and self._shuffle_final(g):
+                self._open_reduce_gate(g, k)
+            elif b == "G" and g.total_shuf_inflight == 0 and self._shuffle_final(g):
+                for r in range(self.sub.nR):
+                    self._open_reduce_gate(g, r)
 
-    def _shuffle_final(self) -> bool:
-        """No more shuffle chunks can appear (all map work finished)."""
-        return self.total_map_unfinished == 0 and self.total_push_inflight == 0
+    def _shuffle_final(self, g: _JobRun) -> bool:
+        """No more shuffle chunks can appear (all the job's map work done)."""
+        return g.total_map_unfinished == 0 and g.total_push_inflight == 0
 
-    def _open_reduce_gate(self, k: int):
-        if self.red_gated[k]:
-            self.red_queue[k].extend(self.red_gated[k])
-            self.red_gated[k].clear()
+    def _open_reduce_gate(self, g: _JobRun, k: int):
+        if g.red_gated[k]:
+            for sc in g.red_gated[k]:
+                self.reducers[k].enqueue(g, sc, self.now)
+            g.red_gated[k].clear()
         self._pump_reduce(k)
 
     # -- reduce phase ------------------------------------------------------------
     def _pump_reduce(self, k: int):
-        if self.red_busy[k] or not self.red_queue[k]:
+        node = self.reducers[k]
+        if node.busy or not node.queue:
             return
-        sc = self.red_queue[k].pop(0)
+        g, sc, t_enq = node.queue.pop(0)
         if sc.done:
             self._pump_reduce(k)
             return
-        self.red_busy[k] = True
-        dur = sc.size / self._rate("r", k) * self._noise()
-        self.at(self.now + dur, "reduce_done", k, sc)
+        node.busy = True
+        node.current = g
+        dur = sc.size / self._rate(g, "r", k) * g.noise()
+        node.record_service(self.now, t_enq, dur, sc.size, g.idx)
+        self.at(self.now + dur, "reduce_done", g, k, sc)
 
-    def _ev_reduce_done(self, k: int, sc: _Chunk):
-        self.red_busy[k] = False
+    def _ev_reduce_done(self, g: _JobRun, k: int, sc: _Chunk):
+        self.reducers[k].busy = False
+        self.reducers[k].current = None
         if not sc.done:
             sc.done = True
-            self.reduce_end = max(self.reduce_end, self.now)
+            g.reduce_end = max(g.reduce_end, self.now)
         else:
-            self.wasted_mb += sc.size
+            g.wasted_mb += sc.size
         self._pump_reduce(k)
 
     # -- dynamics: stealing / speculation ----------------------------------------
     def _idle_mapper(self, j: int):
-        cfg = self.cfg
-        if not (cfg.stealing or cfg.speculation):
-            return
-        # expected remaining compute time per mapper
+        """The node ran out of queued work entirely; let each job with
+        dynamics enabled (and a live worker here) try to relocate one of its
+        own backlogged chunks.  At most one booking per idle trigger."""
+        for g in self.runs:
+            if not (g.cfg.stealing or g.cfg.speculation) or not g.map_alive[j]:
+                continue
+            if self._idle_mapper_for(g, j):
+                return
+
+    def _idle_mapper_for(self, g: _JobRun, j: int) -> bool:
+        cfg = g.cfg
+        # expected remaining compute time per mapper (this job's chunks)
         rem = np.array(
             [
-                sum(c.size for c in self.map_queue[m] if not c.done)
-                / self._rate("m", m)
-                for m in range(self.p.nM)
+                sum(c.size for c in self.mappers[m].job_chunks(g) if not c.done)
+                / self._rate(g, "m", m)
+                for m in range(self.sub.nM)
             ]
         )
         if rem.sum() <= 0:
-            return
+            return False
         # fleet-mean progress (zeros included): a node is a straggler when
         # it lags the whole fleet, not merely other still-busy nodes
         mean = rem.mean()
         victim = int(rem.argmax())
         if victim == j or rem[victim] < cfg.spec_threshold * max(mean, 1e-9):
-            return
-        pending = [c for c in self.map_queue[victim] if not c.done and not c.cloned]
+            return False
+        pending = [
+            c for c in self.mappers[victim].job_chunks(g)
+            if not c.done and not c.cloned
+        ]
         if not pending:
-            return
+            return False
         c = pending[-1]
         # progress-based sanity check (Hadoop estimates task progress before
         # speculating): only act when the thief can plausibly win the race.
-        my_time = c.size / self.p.B_sm[c.src, j] + c.size / self._rate("m", j)
+        my_time = c.size / self.sub.B_sm[c.src, j] + c.size / self._rate(g, "m", j)
         if my_time >= rem[victim]:
-            return
+            return False
         if cfg.stealing:
-            self.map_queue[victim].remove(c)
+            self.mappers[victim].remove(g, c)
             # ownership (and its gate counters) moves with the chunk
-            self.map_unfinished[victim] -= 1
-            self.map_unfinished[j] += 1
+            g.map_unfinished[victim] -= 1
+            g.map_unfinished[j] += 1
             c.owner = j
-            if self.cfg.barriers[1] == "L" and self.map_unfinished[victim] == 0 \
-                    and not self.map_busy[victim]:
-                self._open_shuffle_gate(victim)
-            moved = c
+            # open now unless the victim is mid-service on one of THIS
+            # job's chunks (that chunk's map_done reopens the gate);
+            # another job's in-service chunk must not hold g's gate shut
+            victim_node = self.mappers[victim]
+            if cfg.barriers[1] == "L" and g.map_unfinished[victim] == 0 \
+                    and not (victim_node.busy and victim_node.current is g):
+                self._open_shuffle_gate(g, victim)
         else:  # speculation: clone, twin-completion resolved via c.done
             c.cloned = True
-            moved = c
         # re-fetch the input from the source over the push link
-        i = moved.src
-        start = max(self.now, self.push_link_free[i, j])
-        end = start + moved.size / self.p.B_sm[i, j]
-        self.push_link_free[i, j] = end
-        if not cfg.stealing:
-            self.wasted_mb += 0.0  # waste only counted if the race is lost
-        self.at(end, "stolen_arrive", j, moved)
+        end = self.push_links[c.src][j].book(self.now, c.size, g.idx)
+        self.at(end, "stolen_arrive", g, j, c)
+        return True
 
-    def _ev_stolen_arrive(self, j: int, c: _Chunk):
-        if c.done or not self.map_alive[j]:
+    def _ev_stolen_arrive(self, g: _JobRun, j: int, c: _Chunk):
+        if c.done:
             return
-        self.map_queue[j].append(c)
+        if not g.map_alive[j]:
+            # a STOLEN chunk (ownership moved to the thief) dies with the
+            # thief unless recovered; a speculative clone still lives in
+            # the victim's queue and can simply be dropped
+            if c.owner == j:
+                self._recover_chunk(g, j, c)
+            return
+        self.mappers[j].enqueue(g, c, self.now)
         self._pump_map(j)
 
     # -- dynamics: failure recovery ----------------------------------------------
-    def _ev_fail_mapper(self, j: int):
-        self.map_alive[j] = False
-        lost = [c for c in self.map_queue[j] if not c.done]
-        lost += [c for c in self.map_gated[j] if not c.done]
-        self.map_queue[j].clear()
-        self.map_gated[j].clear()
-        self.map_busy[j] = False
+    def _ev_fail_mapper(self, g: _JobRun, j: int):
+        g.map_alive[j] = False
+        node = self.mappers[j]
+        lost = [c for c in node.job_chunks(g) if not c.done]
+        lost += [c for c in g.map_gated[j] if not c.done]
+        node.queue = [(h, c, t) for h, c, t in node.queue if h is not g]
+        g.map_gated[j].clear()
+        # an in-flight chunk (already popped) still completes — the node's
+        # busy flag clears at its map_done, exactly as before the refactor
         for c in lost:
-            self._recover_chunk(j, c)
+            self._recover_chunk(g, j, c)
 
-    def _recover_chunk(self, dead: int, c: _Chunk):
-        """Re-push a lost chunk from its source to the best surviving mapper."""
-        self.recovered += 1
-        alive = np.flatnonzero(self.map_alive)
+    def _recover_chunk(self, g: _JobRun, dead: int, c: _Chunk):
+        """Re-push a lost chunk from its source to the job's best surviving
+        mapper."""
+        g.recovered += 1
+        alive = np.flatnonzero(g.map_alive)
         if alive.size == 0:
             raise RuntimeError("all mappers dead")
         i = c.src
-        tgt = int(alive[np.argmax(self.p.B_sm[i, alive])])
+        tgt = int(alive[np.argmax(self.sub.B_sm[i, alive])])
         if c.owner >= 0 and c.owner != tgt:
-            self.map_unfinished[c.owner] -= 1
-            self.map_unfinished[tgt] += 1
+            g.map_unfinished[c.owner] -= 1
+            g.map_unfinished[tgt] += 1
             c.owner = tgt
-        self.wasted_mb += c.size
-        start = max(self.now, self.push_link_free[i, tgt])
-        end = start + c.size / self.p.B_sm[i, tgt]
-        self.push_link_free[i, tgt] = end
-        self.push_inflight[tgt] += 1
-        self.total_push_inflight += 1
-        self.at(end, "push_arrive", i, tgt, c)
+        g.wasted_mb += c.size
+        end = self.push_links[i][tgt].book(self.now, c.size, g.idx)
+        g.push_inflight[tgt] += 1
+        g.total_push_inflight += 1
+        self.at(end, "push_arrive", g, i, tgt, c)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+_JobEntry = Union[
+    Tuple[Platform, ExecutionPlan],
+    Tuple[Platform, ExecutionPlan, Optional[SimConfig]],
+]
+
+
+def simulate_schedule(
+    jobs: Sequence[_JobEntry],
+    substrate: Optional[Substrate] = None,
+) -> ScheduleSimResult:
+    """Execute N jobs concurrently on one shared substrate.
+
+    ``jobs`` is a sequence of ``(platform, plan)`` or ``(platform, plan,
+    cfg)`` entries whose platforms must all be views of the same substrate
+    (checked via :meth:`Substrate.compatible`); ``substrate`` overrides the
+    inferred one.  Each job keeps its own barriers, chunking, dynamics and
+    release time (``SimConfig.start_time``) — only the link/compute
+    resources are shared.
+    """
+    if not jobs:
+        raise ValueError("simulate_schedule needs at least one job")
+    entries = []
+    for entry in jobs:
+        platform, plan, cfg = entry if len(entry) == 3 else (*entry, None)
+        entries.append((platform, plan, cfg or SimConfig()))
+    sub = substrate if substrate is not None else Substrate.of(entries[0][0])
+    for platform, _, _ in entries:
+        if not sub.compatible(Substrate.of(platform)):
+            raise ValueError(
+                f"platform {platform.name!r} is not a view of substrate "
+                f"{sub.name!r} — build job platforms with Substrate.view()"
+            )
+    runs = [
+        _JobRun(idx, platform, plan, cfg, sub.nM, sub.nR)
+        for idx, (platform, plan, cfg) in enumerate(entries)
+    ]
+    return _MultiSim(sub, runs).run()
 
 
 def simulate(
     platform: Platform, plan: ExecutionPlan, cfg: Optional[SimConfig] = None
 ) -> SimResult:
-    """Execute ``plan`` on ``platform`` under ``cfg`` and return timings."""
-    return _Sim(platform, plan, cfg or SimConfig()).run()
+    """Execute ``plan`` on ``platform`` under ``cfg`` and return timings —
+    the N=1 case of :func:`simulate_schedule` (one job, sole tenant of its
+    substrate)."""
+    return simulate_schedule([(platform, plan, cfg or SimConfig())]).jobs[0]

@@ -1,0 +1,421 @@
+"""Tests for the shared-substrate refactor (PR 2): Substrate views,
+shared-capacity pricing, the resource-centric multi-job executor
+(N=1 equivalence + contention), schedule policies, and the GeoSchedule
+facade."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.api import GeoJob, GeoSchedule, JobReport, ScheduleReport, split_sources
+from repro.core.makespan import (
+    BARRIERS_GGL,
+    CostModel,
+    makespan,
+    shared_effective_volumes,
+)
+from repro.core.optimize import (
+    available_policies,
+    get_schedule_planner,
+    optimize_schedule,
+    register_schedule_planner,
+)
+from repro.core.plan import uniform_plan
+from repro.core.platform import Platform, Substrate, planetlab_platform
+from repro.core.simulate import (
+    SimConfig,
+    simulate,
+    simulate_schedule,
+)
+from repro.mapreduce.apps import generate_documents, word_count
+
+ALL_BARRIER_TRIPLES = list(itertools.product("GLP", repeat=3))
+
+
+def contended_substrate() -> Substrate:
+    """Two mappers; source 0 can only reach mapper 0 quickly, source 1 can
+    reach both — the scenario where per-job-myopic plans collide."""
+    return Substrate(
+        B_sm=np.array([[10_000.0, 1.0], [10_000.0, 10_000.0]]),
+        B_mr=np.full((2, 2), 10_000.0),
+        C_m=np.array([50.0, 50.0]),
+        C_r=np.array([10_000.0, 10_000.0]),
+        cluster_s=np.array([0, 1]),
+        cluster_m=np.array([0, 1]),
+        cluster_r=np.array([0, 1]),
+        name="contended_pair",
+    )
+
+
+class TestSubstrate:
+    def test_view_shares_capacity_arrays(self):
+        sub = Substrate.of(planetlab_platform(4, seed=0))
+        a = sub.view(np.full(sub.nS, 100.0), 1.0, name="a")
+        b = sub.view(np.full(sub.nS, 50.0), 2.0, name="b")
+        for field in ("B_sm", "B_mr", "C_m", "C_r"):
+            assert getattr(a, field) is getattr(sub, field)
+            assert getattr(b, field) is getattr(sub, field)
+        assert a.substrate is sub and b.substrate is sub
+        assert a.alpha == 1.0 and b.alpha == 2.0
+
+    def test_of_lifts_standalone_platform(self):
+        p = planetlab_platform(4, seed=3)
+        sub = Substrate.of(p)
+        assert sub.B_sm is p.B_sm
+        # a view of the lifted substrate is compatible with the original
+        assert sub.compatible(Substrate.of(sub.view(p.D, p.alpha)))
+
+    def test_compatible_by_value(self):
+        s1 = Substrate.of(planetlab_platform(4, seed=5))
+        s2 = Substrate.of(planetlab_platform(4, seed=5))
+        s3 = Substrate.of(planetlab_platform(4, seed=6))
+        assert s1.compatible(s2)  # equal generator calls may share
+        assert not s1.compatible(s3)
+
+    def test_resources_named_and_complete(self):
+        sub = contended_substrate()
+        res = sub.resources()
+        assert len(res) == sub.nS * sub.nM + sub.nM * sub.nR + sub.nM + sub.nR
+        assert res["push[s0->m1]"] == 1.0
+        assert res["map[m0]"] == 50.0
+        assert res["reduce[r1]"] == 10_000.0
+
+    def test_residual_scales_and_floors(self):
+        sub = contended_substrate()
+        red = sub.residual(map_frac=np.array([1.5, 0.2]))
+        assert red.C_m[0] == pytest.approx(sub.C_m[0] * 0.05)  # floored
+        assert red.C_m[1] == pytest.approx(sub.C_m[1] * 0.8)
+        assert red.B_sm is not sub.B_sm  # a planning copy, not the identity
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="strictly positive"):
+            Substrate(
+                B_sm=np.zeros((1, 1)), B_mr=np.ones((1, 1)),
+                C_m=np.ones(1), C_r=np.ones(1),
+                cluster_s=np.zeros(1), cluster_m=np.zeros(1),
+                cluster_r=np.zeros(1),
+            )
+
+
+class TestSharedPricing:
+    def test_single_job_unchanged(self):
+        p = planetlab_platform(4, alpha=1.3, seed=2)
+        cm = CostModel(p, BARRIERS_GGL)
+        vols = cm.analytic_volumes(uniform_plan(p))
+        [shared] = cm.price_shared([vols])
+        plain = cm.price_volumes(*vols)
+        assert shared["makespan"] == plain["makespan"]
+
+    def test_disjoint_jobs_price_independently(self):
+        """Jobs touching disjoint resources see zero contention."""
+        sub = contended_substrate()
+        a = sub.view(np.array([10_000.0, 0.0]), 1.0)
+        b = sub.view(np.array([0.0, 10_000.0]), 1.0)
+        plan_a = np.zeros((2, 2)); plan_a[:, 0] = 1.0  # all to m0
+        plan_b = np.zeros((2, 2)); plan_b[:, 1] = 1.0  # all to m1
+        from repro.core.plan import ExecutionPlan
+        pa = ExecutionPlan(x=plan_a, y=np.array([1.0, 0.0]))
+        pb = ExecutionPlan(x=plan_b, y=np.array([0.0, 1.0]))
+        cm = CostModel(a, BARRIERS_GGL)
+        va = CostModel(a).analytic_volumes(pa)
+        vb = CostModel(b).analytic_volumes(pb)
+        got = cm.price_shared([va, vb], BARRIERS_GGL)
+        assert got[0]["makespan"] == pytest.approx(makespan(a, pa, BARRIERS_GGL))
+        assert got[1]["makespan"] == pytest.approx(makespan(b, pb, BARRIERS_GGL))
+
+    def test_overlap_inflates_both(self):
+        p = planetlab_platform(4, alpha=1.0, seed=0)
+        cm = CostModel(p, BARRIERS_GGL)
+        vols = cm.analytic_volumes(uniform_plan(p))
+        alone = float(cm.price_volumes(*vols)["makespan"])
+        both = cm.price_shared([vols, vols])
+        for out in both:
+            assert float(out["makespan"]) == pytest.approx(2 * alone)
+
+    def test_smooth_gate_approaches_hard(self):
+        p = planetlab_platform(2, alpha=1.0, seed=1)
+        vols = CostModel(p).analytic_volumes(uniform_plan(p))
+        hard = shared_effective_volumes([vols, vols], kappa=0.0, xp=np)
+        soft = shared_effective_volumes([vols, vols], kappa=1e-9, xp=np)
+        for h, s in zip(hard[0], soft[0]):
+            np.testing.assert_allclose(h, s, rtol=1e-6)
+
+
+class TestExecutorEquivalence:
+    """The refactor bar: N=1 scheduling reproduces the single-job executor
+    phase-for-phase, for every barrier triple."""
+
+    @pytest.fixture(scope="class")
+    def platform(self):
+        return planetlab_platform(4, alpha=1.2, seed=1)
+
+    @pytest.mark.parametrize("barriers", ALL_BARRIER_TRIPLES,
+                             ids=["".join(b) for b in ALL_BARRIER_TRIPLES])
+    def test_n1_schedule_matches_simulate(self, platform, barriers):
+        plan = uniform_plan(platform)
+        cfg = SimConfig(chunk_mb=32.0, barriers=barriers)
+        legacy = simulate(platform, plan, cfg)
+        sched = simulate_schedule([(platform, plan, cfg)])
+        assert len(sched.jobs) == 1
+        got, want = sched.jobs[0].phases(), legacy.phases()
+        for phase in want:
+            assert abs(got[phase] - want[phase]) <= 1e-9, phase
+        assert sched.makespan == pytest.approx(legacy.makespan, abs=1e-9)
+
+    def test_n1_geoschedule_matches_geojob(self, platform):
+        job = GeoJob(platform).plan("uniform", barriers=BARRIERS_GGL)
+        solo = job.simulate()
+        report = GeoSchedule([GeoJob(platform)]).plan(
+            "independent", mode="uniform", barriers=BARRIERS_GGL
+        ).simulate()
+        for phase, want in solo.phases().items():
+            assert abs(report.sims[0].phases()[phase] - want) <= 1e-9, phase
+
+    def test_n1_dynamics_preserved(self, platform):
+        """Speculation/stealing/failure/replication semantics survive the
+        refactor: the N=1 schedule path reproduces them event-for-event."""
+        plan = uniform_plan(platform)
+        for cfg in [
+            SimConfig(barriers=BARRIERS_GGL, stragglers={("m", 1): 8.0},
+                      speculation=True, stealing=True),
+            SimConfig(barriers=BARRIERS_GGL, fail_mapper=(2, 2.0),
+                      speculation=True),
+            SimConfig(barriers=BARRIERS_GGL, replication=3,
+                      cross_cluster_replication=True),
+            SimConfig(barriers=BARRIERS_GGL, compute_noise=0.2, seed=42),
+        ]:
+            a = simulate(platform, plan, cfg)
+            b = simulate_schedule([(platform, plan, cfg)]).jobs[0]
+            assert a.phases() == b.phases()
+            assert a.wasted_mb == b.wasted_mb
+            assert a.recovered_chunks == b.recovered_chunks
+
+
+class TestContention:
+    def test_shared_link_no_earlier_than_alone(self):
+        """Two jobs squeezing through the same links finish no earlier than
+        either would alone, and the schedule horizon covers both."""
+        p = planetlab_platform(4, alpha=1.0, seed=0)
+        sub = Substrate.of(p)
+        a = sub.view(p.D, 1.0, name="a")
+        b = sub.view(p.D * 0.5, 1.0, name="b")
+        plan_a, plan_b = uniform_plan(a), uniform_plan(b)
+        alone_a = simulate(a, plan_a).makespan
+        alone_b = simulate(b, plan_b).makespan
+        sched = simulate_schedule([(a, plan_a), (b, plan_b)])
+        assert sched.jobs[0].makespan >= alone_a - 1e-9
+        assert sched.jobs[1].makespan >= alone_b - 1e-9
+        assert sched.makespan >= max(alone_a, alone_b) - 1e-9
+        assert len(sched.contended()) > 0
+
+    def test_resource_stats_accounting(self):
+        sub = contended_substrate()
+        a = sub.view(np.array([4_000.0, 0.0]), 1.0)
+        b = sub.view(np.array([0.0, 4_000.0]), 1.0)
+        sched = simulate_schedule([(a, uniform_plan(a)), (b, uniform_plan(b))])
+        util = sched.utilization()
+        assert set(util) == set(sub.resources())
+        assert all(0.0 <= u <= 1.0 + 1e-9 for u in util.values())
+        # both jobs uniformly split -> both mappers served both jobs
+        assert sched.resources["map[m0]"].jobs == {0, 1}
+        vol = sum(s.volume_mb for n, s in sched.resources.items()
+                  if n.startswith("push["))
+        assert vol == pytest.approx(8_000.0)
+
+    def test_multijob_stealing_completes_all_work(self):
+        """Stealing with a local map/shuffle barrier while ANOTHER job keeps
+        the victim node busy: the thief job's gates must still open (the
+        victim being busy with someone else's chunk cannot hold them shut)
+        and every byte must reach the reducers."""
+        sub = contended_substrate()
+        a = sub.view(np.array([4_000.0, 0.0]), 1.0, name="steals")
+        b = sub.view(np.array([0.0, 4_000.0]), 1.0, name="bystander")
+        barriers = ("G", "L", "L")
+        sched = simulate_schedule([
+            (a, uniform_plan(a),
+             SimConfig(barriers=barriers, stealing=True, chunk_mb=16.0,
+                       stragglers={("m", 0): 8.0})),
+            (b, uniform_plan(b), SimConfig(barriers=barriers, chunk_mb=16.0)),
+        ])
+        for sim in sched.jobs:
+            assert np.isfinite(sim.makespan) and sim.makespan > 0
+            assert sim.reduce_end >= sim.shuffle_end > 0
+        # completion invariant: all alpha-expanded bytes were reduced
+        reduced = sum(s.volume_mb for n, s in sched.resources.items()
+                      if n.startswith("reduce["))
+        assert reduced == pytest.approx(8_000.0)
+
+    def test_start_time_releases_job_late(self):
+        p = planetlab_platform(2, alpha=1.0, seed=0)
+        sub = Substrate.of(p)
+        v = sub.view(p.D, 1.0)
+        plan = uniform_plan(v)
+        t0 = simulate(v, plan).makespan
+        late = simulate_schedule(
+            [(v, plan, SimConfig(start_time=100.0))]
+        ).jobs[0]
+        assert late.makespan == pytest.approx(t0 + 100.0, rel=1e-9)
+
+    def test_substrate_mismatch_raises(self):
+        p1 = planetlab_platform(4, seed=0)
+        p2 = planetlab_platform(4, seed=1)
+        with pytest.raises(ValueError, match="not a view"):
+            simulate_schedule([(p1, uniform_plan(p1)),
+                               (p2, uniform_plan(p2))])
+
+
+class TestSchedulePolicies:
+    def test_builtin_policies_registered(self):
+        assert {"independent", "sequential", "joint"} <= set(available_policies())
+
+    def test_unknown_policy_raises(self):
+        p = planetlab_platform(2, seed=0)
+        with pytest.raises(ValueError, match="policy must be one of"):
+            optimize_schedule([p], policy="no_such_policy")
+        with pytest.raises(ValueError):
+            get_schedule_planner("no_such_policy")
+
+    def test_duplicate_registration_raises(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_schedule_planner("joint", lambda *a, **k: None)
+
+    def test_custom_policy_plugs_in(self):
+        from repro.core import optimize as O
+
+        @register_schedule_planner("test_all_uniform")
+        def _all_uniform(substrate, platforms, barriers, *, mode, n_restarts,
+                         steps, seed):
+            return [uniform_plan(p) for p in platforms]
+
+        try:
+            sub = contended_substrate()
+            views = [sub.view(np.array([1_000.0, 0.0])),
+                     sub.view(np.array([0.0, 1_000.0]))]
+            res = optimize_schedule(views, policy="test_all_uniform")
+            assert res.policy == "test_all_uniform"
+            assert len(res.results) == 2
+            # ... and the facade dispatches to it without modification
+            rep = GeoSchedule([GeoJob(v) for v in views]).plan(
+                "test_all_uniform").simulate()
+            assert rep.makespan_sim > 0
+        finally:
+            del O._SCHEDULE_PLANNERS["test_all_uniform"]
+
+    @pytest.fixture(scope="class")
+    def contended_views(self):
+        sub = contended_substrate()
+        return [
+            sub.view(np.array([40_000.0, 0.0]), 1.0, name="pinned"),
+            sub.view(np.array([0.0, 40_000.0]), 1.0, name="flexible"),
+        ]
+
+    def test_joint_beats_independent(self, contended_views):
+        """The acceptance bar: on a shared substrate where myopic plans
+        collide, joint planning is strictly better — modeled *and* as
+        actually executed (same shared substrate, real contention)."""
+        opts = dict(mode="e2e_multi", barriers=BARRIERS_GGL,
+                    n_restarts=8, steps=250)
+        indep = optimize_schedule(contended_views, policy="independent", **opts)
+        joint = optimize_schedule(contended_views, policy="joint", **opts)
+        # modeled: never worse by construction, strictly better here
+        assert joint.makespan < indep.makespan
+        # simulated on the same shared substrate: strictly lower aggregate
+        cfg = SimConfig(barriers=BARRIERS_GGL)
+        sim_of = lambda res: simulate_schedule(
+            [(v, plan, cfg) for v, plan in zip(contended_views, res.plans)]
+        ).makespan
+        sim_indep, sim_joint = sim_of(indep), sim_of(joint)
+        assert sim_joint < sim_indep * 0.95
+        # and the model agrees with the execution on both
+        assert joint.makespan == pytest.approx(sim_joint, rel=0.1)
+
+    def test_sequential_between(self, contended_views):
+        opts = dict(mode="e2e_multi", barriers=BARRIERS_GGL,
+                    n_restarts=6, steps=200)
+        seq = optimize_schedule(contended_views, policy="sequential", **opts)
+        indep = optimize_schedule(contended_views, policy="independent", **opts)
+        assert seq.makespan < indep.makespan
+
+    def test_schedule_result_shape(self, contended_views):
+        res = optimize_schedule(contended_views, policy="independent",
+                                mode="uniform")
+        assert len(res.results) == len(res.plans) == 2
+        assert res.makespan == pytest.approx(
+            max(r.makespan for r in res.results))
+        assert res.results[0].mode == "independent:uniform"
+        assert "SchedulePlanResult" in repr(res)
+
+
+class TestGeoScheduleFacade:
+    def test_unplanned_raises(self):
+        p = planetlab_platform(2, seed=0)
+        with pytest.raises(RuntimeError, match="no plan yet"):
+            GeoSchedule([GeoJob(p)]).simulate()
+
+    def test_empty_raises(self):
+        with pytest.raises(ValueError, match="at least one job"):
+            GeoSchedule([])
+
+    def test_mismatched_substrates_raise(self):
+        a = GeoJob(planetlab_platform(4, seed=0))
+        b = GeoJob(planetlab_platform(4, seed=1))
+        with pytest.raises(ValueError, match="does not share the substrate"):
+            GeoSchedule([a, b])
+
+    def test_plan_adopts_per_job_results(self):
+        sub = contended_substrate()
+        jobs = [GeoJob(sub.view(np.array([1_000.0, 0.0]))),
+                GeoJob(sub.view(np.array([0.0, 1_000.0])))]
+        sched = GeoSchedule(jobs).plan("independent", mode="uniform")
+        for job, res in zip(jobs, sched.planned.results):
+            assert job.planned is res
+            assert job.simulate().makespan > 0  # jobs stay usable facades
+
+    def test_simulate_report(self):
+        sub = contended_substrate()
+        jobs = [GeoJob(sub.view(np.array([2_000.0, 0.0]))),
+                GeoJob(sub.view(np.array([0.0, 2_000.0])))]
+        rep = GeoSchedule(jobs).plan("independent", mode="uniform").simulate()
+        assert isinstance(rep, ScheduleReport)
+        assert rep.jobs is None and rep.makespan_measured is None
+        assert len(rep.sims) == 2
+        assert rep.makespan_sim == max(s.makespan for s in rep.sims)
+        assert set(rep.utilization()) == set(sub.resources())
+        assert "independent[" in rep.summary()
+
+    def test_execute_reports_shared_measured(self):
+        p = planetlab_platform(4, alpha=1.0, seed=0)
+        sub = Substrate.of(p)
+        keys, vals = generate_documents(240, 40, seed=1)
+        jobs, srcs = [], []
+        for g, frac in enumerate([1.0, 0.5]):
+            n = int(keys.shape[0] * frac)
+            job = GeoJob(sub.view(p.D, p.alpha, name=f"wc{g}"), word_count())
+            job = job.calibrate(split_sources(keys[:n], vals[:n], sub.nS))
+            jobs.append(job)
+            srcs.append(split_sources(keys[:n], vals[:n], sub.nS))
+        rep = GeoSchedule(jobs).plan(
+            "sequential", barriers=BARRIERS_GGL, n_restarts=4, steps=80
+        ).execute(srcs)
+        assert rep.jobs is not None and len(rep.jobs) == 2
+        for jr in rep.jobs:
+            assert isinstance(jr, JobReport)
+            assert set(jr.modeled) == set(jr.measured)
+            assert jr.makespan_measured > 0
+            assert sum(len(k) for k, _ in jr.outputs) > 0
+        assert rep.makespan_measured == pytest.approx(
+            max(jr.makespan_measured for jr in rep.jobs))
+        # contended measured pricing is never cheaper than each job alone
+        for jr, job in zip(rep.jobs, jobs):
+            alone = CostModel(job.platform, BARRIERS_GGL).breakdown_volumes(
+                *jr.stats.volumes_mb())
+            assert jr.makespan_measured >= alone["makespan"] - 1e-9
+
+    def test_as_dict_stable(self):
+        p = planetlab_platform(2, seed=0)
+        d = simulate(p, uniform_plan(p)).as_dict()
+        assert set(d) == {
+            "makespan", "push_end", "map_end", "shuffle_end", "reduce_end",
+            "wasted_mb", "recovered_chunks", "total_map_chunks",
+        }
+        assert all(isinstance(v, float) for v in d.values())
