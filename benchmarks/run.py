@@ -4,16 +4,31 @@ price → execute on one shared cost model).  Emits
 ``name,us_per_call,derived`` CSV rows (also saved to
 ``reports/benchmarks.csv``) and a JSON dump of full results.
 
+``--json PATH`` additionally writes a machine-readable timing document —
+``{scenario: {wall_s, results}}`` with modeled/simulated makespans where the
+scenario produces them — which CI uploads as an artifact to seed the bench
+trajectory.
+
     PYTHONPATH=src python -m benchmarks.run [--skip-roofline] [--quick]
+                                            [--json PATH]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import time
 
 from . import paper_figures as F
 from .common import flush_csv
+
+
+def _json_default(o):
+    import numpy as np
+
+    if isinstance(o, (np.floating, np.integer)):
+        return float(o)
+    return str(o)
 
 
 def main() -> None:
@@ -22,44 +37,68 @@ def main() -> None:
                     help="skip the dry-run-report-based roofline table")
     ap.add_argument("--quick", action="store_true",
                     help="small solver budgets (smoke-run the whole suite)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable per-scenario timings "
+                         "(modeled/simulated makespans + wall seconds)")
     ap.add_argument("--out", default="reports")
     args = ap.parse_args()
     if args.quick:
         F._OPT = dict(n_restarts=6, steps=200)
     os.makedirs(args.out, exist_ok=True)
 
-    results = {}
+    scenarios = [
+        ("fig4", F.fig4_validation),
+        ("fig5", F.fig5_e2e_vs_myopic),
+        ("fig6", F.fig6_single_vs_multi),
+        ("fig7", F.fig7_barriers),
+        ("fig8", F.fig8_environments),
+        ("fig9", F.fig9_applications),
+        ("fig10", F.fig10_dynamics),
+        ("fig12", F.fig12_replication),
+        ("schedule", F.schedule_contention),
+        ("schedule_online", F.schedule_online),
+    ]
+
+    results, wall = {}, {}
     print("name,us_per_call,derived")
-    results["fig4"] = F.fig4_validation()
-    results["fig5"] = F.fig5_e2e_vs_myopic()
-    results["fig6"] = F.fig6_single_vs_multi()
-    results["fig7"] = F.fig7_barriers()
-    results["fig8"] = F.fig8_environments()
-    results["fig9"] = F.fig9_applications()
-    results["fig10"] = F.fig10_dynamics()
-    results["fig12"] = F.fig12_replication()
-    results["schedule"] = F.schedule_contention()
+    for name, fn in scenarios:
+        t0 = time.perf_counter()
+        results[name] = fn()
+        wall[name] = time.perf_counter() - t0
 
     if not args.skip_roofline and os.path.isdir(
         os.path.join(args.out, "dryrun")
     ):
         from . import roofline
 
+        t0 = time.perf_counter()
         rows = roofline.run(os.path.join(args.out, "dryrun"),
                             os.path.join(args.out, "roofline.md"))
         results["roofline"] = rows
+        wall["roofline"] = time.perf_counter() - t0
 
     flush_csv(os.path.join(args.out, "benchmarks.csv"))
 
-    def default(o):
-        import numpy as np
-
-        if isinstance(o, (np.floating, np.integer)):
-            return float(o)
-        return str(o)
-
     with open(os.path.join(args.out, "benchmarks.json"), "w") as f:
-        json.dump(results, f, indent=1, default=default)
+        json.dump(results, f, indent=1, default=_json_default)
+
+    if args.json:
+        doc = {
+            "meta": {"quick": bool(args.quick),
+                     "opt": {k: int(v) for k, v in F._OPT.items()},
+                     "total_wall_s": sum(wall.values())},
+            "scenarios": {
+                name: {"wall_s": wall[name], "results": results[name]}
+                for name in results
+            },
+        }
+        json_dir = os.path.dirname(args.json)
+        if json_dir:
+            os.makedirs(json_dir, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, default=_json_default)
+        print(f"[json] machine-readable timings in {args.json}")
+
     print(f"\n[done] results in {args.out}/benchmarks.{{csv,json}}")
 
 

@@ -37,6 +37,18 @@ resource contention:
     jobs = [GeoJob(sub.view(D_a, alpha), app_a), GeoJob(sub.view(D_b, alpha))]
     report = GeoSchedule(jobs).plan(policy="joint").simulate()
     print(report.summary())               # aggregate makespan + hot links
+
+And when the world refuses to hold still — jobs streaming in after t=0,
+WAN capacities drifting mid-run — the schedule becomes a *controller*:
+:meth:`GeoSchedule.run_online` closes the plan→observe→re-plan loop,
+pausing the executor at decision points, re-planning each job's residual
+work against the capacities then in force, and swapping improved plans in
+for the chunks not yet committed:
+
+    report = GeoSchedule([job_a]).plan(policy="joint").run_online(
+        policy="reactive", arrivals=[Arrival(job_b, time=50.0)])
+    print(report.summary())               # online vs frozen-plan makespan
+    print(report.timeline())              # the per-decision audit trail
 """
 from __future__ import annotations
 
@@ -49,9 +61,12 @@ from .core.makespan import BARRIERS_GGL, CostModel, attribute_phases
 from .core.optimize import (
     PlanResult,
     SchedulePlanResult,
+    _shared_schedule_result,
     available_modes,
+    get_online_policy,
     optimize_plan,
     optimize_schedule,
+    replan,
 )
 from .core.plan import ExecutionPlan, uniform_plan
 from .core.platform import Platform, Substrate
@@ -60,13 +75,14 @@ from .core.simulate import (
     ScheduleSimResult,
     SimConfig,
     SimResult,
+    open_schedule,
     simulate,
     simulate_schedule,
 )
 from .mapreduce.engine import GeoMapReduce, MRApp, PhaseStats, Records
 
-__all__ = ["GeoJob", "GeoSchedule", "JobReport", "ScheduleReport",
-           "split_sources"]
+__all__ = ["Arrival", "Decision", "GeoJob", "GeoSchedule", "JobReport",
+           "OnlineReport", "ScheduleReport", "split_sources"]
 
 
 def split_sources(keys: np.ndarray, values: np.ndarray, n_sources: int) -> List[Records]:
@@ -350,6 +366,99 @@ class ScheduleReport:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """A job that streams in after t=0: the online control plane learns of
+    it only at ``time``.  If ``job`` is unplanned, a *frozen* offline plan
+    is produced with planner ``mode`` against the nominal substrate (what a
+    static scheduler would have committed to); online policies may replace
+    it at arrival against the capacities then in force.  ``cfg`` overrides
+    the schedule-wide :class:`SimConfig` template for this job (its
+    ``start_time`` is always forced to ``time``)."""
+
+    job: "GeoJob"
+    time: float
+    mode: str = "e2e_multi"
+    cfg: Optional[SimConfig] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One entry of an online run's control timeline."""
+
+    time: float
+    event: str  # "arrival" | "drift" | "failure" | "tick"
+    job: int
+    action: str  # "inject" | "swap" | "keep"
+    #: modeled remaining seconds under the incumbent plan at decision time
+    modeled_before: float
+    #: modeled remaining seconds under the adopted plan (== before on keep)
+    modeled_after: float
+
+    def __repr__(self):
+        return (
+            f"Decision(t={self.time:.1f}s {self.event}: job {self.job} "
+            f"{self.action} {self.modeled_before:.1f}s->"
+            f"{self.modeled_after:.1f}s)"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineReport:
+    """The outcome of one online-controlled schedule: the steered execution,
+    the frozen-plan baseline on the *same* arrivals and capacity drift, and
+    the per-decision timeline that separates them."""
+
+    policy: str
+    sim: ScheduleSimResult
+    static_sim: ScheduleSimResult
+    decisions: Tuple[Decision, ...]
+    #: each job's plan when the run finished (arrivals included, in
+    #: injection order after the initial jobs)
+    plans: Tuple[ExecutionPlan, ...]
+    barriers: Tuple[str, str, str]
+
+    @property
+    def makespan_online(self) -> float:
+        """Aggregate simulated makespan of the steered execution."""
+        return self.sim.makespan
+
+    @property
+    def makespan_static(self) -> float:
+        """Aggregate simulated makespan of the frozen-plan baseline."""
+        return self.static_sim.makespan
+
+    @property
+    def improvement(self) -> float:
+        """Fraction of the frozen baseline's makespan the online policy
+        removed (0 = no better, 0.4 = 40% faster)."""
+        if self.makespan_static <= 0:
+            return 0.0
+        return 1.0 - self.makespan_online / self.makespan_static
+
+    @property
+    def swaps(self) -> Tuple[Decision, ...]:
+        return tuple(d for d in self.decisions if d.action == "swap")
+
+    def timeline(self) -> str:
+        if not self.decisions:
+            return "(no decisions)"
+        return "\n".join(
+            f"  t={d.time:8.1f}s  {d.event:8s} job {d.job}: {d.action:6s} "
+            f"remaining {d.modeled_before:8.1f}s -> {d.modeled_after:8.1f}s"
+            for d in self.decisions
+        )
+
+    def summary(self) -> str:
+        return (
+            f"online[{self.policy}] {len(self.sim.jobs)} jobs "
+            f"online={self.makespan_online:.1f}s "
+            f"static={self.makespan_static:.1f}s "
+            f"({self.improvement:+.0%} vs frozen, "
+            f"{len(self.swaps)} swaps/{len(self.decisions)} decisions)"
+        )
+
+
 class GeoSchedule:
     """N concurrent :class:`GeoJob`\\ s contending for one shared
     :class:`Substrate` — the end-to-end-beats-myopic argument lifted across
@@ -397,6 +506,27 @@ class GeoSchedule:
             [job.platform for job in self.jobs],
             policy=policy, mode=mode, barriers=tuple(barriers),
             **solver_kwargs,
+        )
+        for job, res in zip(self.jobs, self._result.results):
+            job._result = res
+        return self
+
+    def with_plans(self) -> "GeoSchedule":
+        """Adopt every job's existing plan (set via :meth:`GeoJob.plan` or
+        :meth:`GeoJob.with_plan`) as the schedule plan, re-priced under
+        shared capacity — the schedule analogue of :meth:`GeoJob.with_plan`
+        for baselines and replays."""
+        barriers = self.jobs[0].planned.barriers
+        for job in self.jobs[1:]:
+            if job.planned.barriers != barriers:
+                raise ValueError(
+                    "with_plans() needs every job planned under the same "
+                    f"barriers, got {job.planned.barriers} vs {barriers}"
+                )
+        self._result = _shared_schedule_result(
+            [job.platform for job in self.jobs],
+            [job.planned.plan for job in self.jobs],
+            barriers, policy="external", mode="external",
         )
         for job, res in zip(self.jobs, self._result.results):
             job._result = res
@@ -493,4 +623,179 @@ class GeoSchedule:
             sim=sim,
             barriers=result.barriers,
             jobs=reports,
+        )
+
+    # -- online control ------------------------------------------------------
+    def run_online(
+        self,
+        policy: str = "reactive",
+        arrivals: Sequence[Arrival] = (),
+        cfg: Optional[SimConfig] = None,
+        replan_dt: Optional[float] = None,
+        n_restarts: int = 8,
+        steps: int = 200,
+        seed: int = 0,
+    ) -> OnlineReport:
+        """Execute the planned schedule under a closed plan→observe→re-plan
+        loop, with ``arrivals`` streaming in after t=0 and any capacity
+        drift of the substrate's :class:`repro.core.platform.CapacityTrace`\\ s
+        applied live.
+
+        ``policy`` is any name registered via
+        :func:`repro.core.optimize.register_online_policy` — built in:
+        ``static`` (never re-plan: reproduces the frozen offline pipeline
+        exactly), ``reactive`` (re-plan on every arrival / failure /
+        capacity-drift event) and ``horizon`` (re-plan every ``replan_dt``
+        seconds).  At each decision point the executor is paused, a
+        :class:`~repro.core.simulate.ProgressSnapshot` is captured, each
+        active job is re-planned over its *residual* work against the
+        capacities then in force (:func:`repro.core.optimize.replan`,
+        warm-started from the incumbent plan), and any improving plan is
+        swapped in for the job's not-yet-committed chunks.
+
+        The returned :class:`OnlineReport` carries the steered execution,
+        the frozen-plan baseline run on the *same* arrivals and drift, and
+        the per-decision timeline.
+        """
+        policy_fn = get_online_policy(policy)
+        if replan_dt is not None and replan_dt <= 0:
+            raise ValueError(f"replan_dt must be > 0, got {replan_dt}")
+        if policy == "horizon" and replan_dt is None:
+            raise ValueError(
+                "policy='horizon' replans only on ticks — pass replan_dt "
+                "(seconds between re-planning decisions)"
+            )
+        result = self.planned
+        entries = self._sim_entries(cfg, {})
+        template = entries[0][2]
+
+        # frozen offline plans for the arrivals (planned on the nominal
+        # substrate — what a static scheduler would have committed to)
+        arrivals = sorted(arrivals, key=lambda a: a.time)
+        arrival_entries = []
+        for n, a in enumerate(arrivals):
+            if a.job._result is None:
+                a.job.plan(
+                    mode=a.mode, barriers=result.barriers,
+                    n_restarts=n_restarts, steps=steps, seed=seed + 101 * n,
+                )
+            acfg = dataclasses.replace(
+                a.cfg if a.cfg is not None else template, start_time=a.time
+            )
+            arrival_entries.append((a.job.platform, a.job.planned.plan, acfg))
+
+        # the frozen baseline: identical jobs, releases and drift — no loop
+        static_sim = simulate_schedule(
+            entries + arrival_entries, substrate=self.substrate
+        )
+
+        # candidate decision points (arrivals first among equal times, so a
+        # newcomer is admitted before the policy reacts to the same instant)
+        events: List[Tuple[float, str, list]] = []
+        for t_a in sorted({e[2].start_time for e in arrival_entries}):
+            group = [e for e in arrival_entries if e[2].start_time == t_a]
+            events.append((t_a, "arrival", group))
+        for t_d in self.substrate.drift_times():
+            events.append((t_d, "drift", []))
+        for _, _, c in entries + arrival_entries:
+            if c.fail_mapper is not None:
+                # the decision never pre-dates the job: a failure timed
+                # before an arrival's release is observed at the release
+                events.append((
+                    max(float(c.fail_mapper[1]), c.start_time), "failure", []
+                ))
+        events.sort(key=lambda e: (e[0], 0 if e[1] == "arrival" else 1))
+
+        eng = open_schedule(entries, substrate=self.substrate)
+        decisions: List[Decision] = []
+        n_replans = 0
+
+        def replan_job(jp, kind, t, sub_t):
+            nonlocal n_replans
+            g = eng.runs[jp.job]
+            view = sub_t.view(g.p.D, g.p.alpha, name=f"{g.p.name}@{t:g}s")
+            before = CostModel(view, g.cfg.barriers).residual_makespan(
+                jp, g.plan
+            )
+            n_replans += 1
+            res = replan(
+                view, g.plan, progress=jp, barriers=g.cfg.barriers,
+                n_restarts=n_restarts, steps=steps,
+                seed=seed + 977 * n_replans,
+            )
+            if res.plan is not g.plan:
+                eng.swap_plan(jp.job, res.plan)
+                action = "swap"
+            else:
+                action = "keep"
+            decisions.append(Decision(
+                time=t, event=kind, job=jp.job, action=action,
+                modeled_before=before, modeled_after=res.makespan,
+            ))
+
+        ei = 0
+        next_tick = replan_dt
+        while True:
+            t_next, kind, payload = None, None, []
+            if ei < len(events):
+                t_next, kind, payload = events[ei]
+            if next_tick is not None and (t_next is None or next_tick < t_next):
+                t_next, kind, payload = next_tick, "tick", []
+            if t_next is None:
+                break
+            more_arrivals = any(k == "arrival" for _, k, _ in events[ei:])
+            if eng.finished and not more_arrivals:
+                break  # nothing left to steer; ticks would spin forever
+            # a failure decision must observe the failure itself: drain the
+            # events AT the instant before snapshotting (arrivals instead
+            # act before same-time events, matching the offline seed order)
+            eng.run_until(t_next, inclusive=(kind == "failure"))
+            if kind == "tick":
+                next_tick = t_next + replan_dt
+            else:
+                ei += 1
+            snap = eng.snapshot()
+            decide = policy_fn(kind, snap)
+            sub_t = self.substrate.at(t_next) if (decide or payload) \
+                else self.substrate
+            injected = set()
+            if kind == "arrival":
+                for platform, frozen, acfg in payload:
+                    view = sub_t.view(platform.D, platform.alpha,
+                                      name=f"{platform.name}@{t_next:g}s")
+                    cm_t = CostModel(view, acfg.barriers)
+                    plan = frozen
+                    if decide:
+                        # plan the newcomer against the capacities in force
+                        res = replan(
+                            view, frozen, progress=None,
+                            barriers=acfg.barriers, n_restarts=n_restarts,
+                            steps=steps, seed=seed + 977 * len(decisions),
+                        )
+                        plan = res.plan
+                    idx = eng.inject([(platform, plan, acfg)])[0]
+                    injected.add(idx)
+                    before = cm_t.makespan(frozen)
+                    decisions.append(Decision(
+                        time=t_next, event="arrival", job=idx,
+                        action="inject", modeled_before=before,
+                        modeled_after=(before if plan is frozen
+                                       else cm_t.makespan(plan)),
+                    ))
+            if decide:
+                if injected:
+                    snap = eng.snapshot()  # include the newcomers' state
+                for jp in snap.jobs:
+                    if jp.done or jp.job in injected:
+                        continue
+                    replan_job(jp, kind, t_next, sub_t)
+
+        sim = eng.run()
+        return OnlineReport(
+            policy=policy,
+            sim=sim,
+            static_sim=static_sim,
+            decisions=tuple(decisions),
+            plans=tuple(g.plan for g in eng.runs),
+            barriers=result.barriers,
         )

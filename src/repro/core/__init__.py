@@ -19,27 +19,35 @@ from .makespan import (
     BARRIERS_ALL_PIPELINED,
     BARRIERS_GGL,
     CostModel,
+    JobProgress,
     makespan,
     makespan_model,
     phase_breakdown,
+    residual_volumes,
     shared_effective_volumes,
 )
 from .optimize import (
     MODES,
+    SCHEDULE_OBJECTIVES,
     PlanResult,
     SchedulePlanResult,
     available_modes,
+    available_online_policies,
     available_policies,
     brute_force_plan,
+    get_online_policy,
     get_planner,
     get_schedule_planner,
     optimize_plan,
     optimize_schedule,
+    register_online_policy,
     register_planner,
     register_schedule_planner,
+    replan,
 )
 from .plan import ExecutionPlan, local_push_plan, uniform_plan
 from .platform import (
+    CapacityTrace,
     Platform,
     Substrate,
     planetlab_platform,
@@ -47,10 +55,12 @@ from .platform import (
     two_cluster_example,
 )
 from .simulate import (
+    ProgressSnapshot,
     ResourceStats,
     ScheduleSimResult,
     SimConfig,
     SimResult,
+    open_schedule,
     simulate,
     simulate_schedule,
 )
@@ -59,23 +69,31 @@ __all__ = [
     "BARRIERS_ALL_GLOBAL",
     "BARRIERS_ALL_PIPELINED",
     "BARRIERS_GGL",
+    "CapacityTrace",
     "CostModel",
     "ExecutionPlan",
+    "JobProgress",
     "MODES",
     "Platform",
     "PlanResult",
+    "ProgressSnapshot",
     "ResourceStats",
+    "SCHEDULE_OBJECTIVES",
     "SchedulePlanResult",
     "ScheduleSimResult",
     "SimConfig",
     "SimResult",
     "Substrate",
     "available_modes",
+    "available_online_policies",
     "available_policies",
     "brute_force_plan",
+    "get_online_policy",
     "get_planner",
     "get_schedule_planner",
     "local_push_plan",
+    "open_schedule",
+    "register_online_policy",
     "register_planner",
     "register_schedule_planner",
     "makespan",
@@ -84,6 +102,8 @@ __all__ = [
     "optimize_schedule",
     "phase_breakdown",
     "planetlab_platform",
+    "replan",
+    "residual_volumes",
     "shared_effective_volumes",
     "simulate",
     "simulate_schedule",

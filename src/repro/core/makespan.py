@@ -48,11 +48,13 @@ __all__ = [
     "BARRIERS_ALL_GLOBAL",
     "BARRIERS_ALL_PIPELINED",
     "CostModel",
+    "JobProgress",
     "analytic_volumes",
     "attribute_phases",
     "makespan",
     "makespan_model",
     "phase_breakdown",
+    "residual_volumes",
     "shared_effective_volumes",
     "volume_model",
 ]
@@ -205,6 +207,114 @@ def shared_effective_volumes(volumes, kappa: float = 0.0, xp=np):
     return out
 
 
+@dataclasses.dataclass(frozen=True)
+class JobProgress:
+    """One job's *remaining* work at an observation instant, bucketed by
+    what an online re-planner can still control.
+
+    Captured by the executor's ``snapshot()`` (see
+    :class:`repro.core.simulate.ProgressSnapshot`); priced by
+    :meth:`CostModel.price_residual` through the same float64
+    :func:`volume_model` equations as everything else, so online decisions
+    stay on the one shared cost model.
+
+    Attributes:
+      resid_push:        (nS,) push MB still at the sources / queued but not
+                         started — re-routable by a new ``x``.
+      committed_push:    (nS, nM) push MB in service on a link — it will
+                         land where it was sent.
+      at_mapper:         (nM,) map-input MB already delivered (or gated)
+                         at each mapper but not yet mapped.
+      shuffle_pool:      (nM,) map-*output* MB at each mapper awaiting
+                         shuffle (gated or queued, not started) —
+                         re-routable by a new ``y``.
+      committed_shuffle: (nM, nR) shuffle MB in service on a link.
+      at_reducer:        (nR,) reduce-input MB delivered/queued at each
+                         reducer but not yet reduced.
+      map_alive:         (nM,) bool worker liveness at the observation
+                         instant (``None`` = all alive) — a re-planner must
+                         route around dead mappers, not just around slow
+                         links.
+    """
+
+    job: int
+    released: bool
+    done: bool
+    resid_push: np.ndarray
+    committed_push: np.ndarray
+    at_mapper: np.ndarray
+    shuffle_pool: np.ndarray
+    committed_shuffle: np.ndarray
+    at_reducer: np.ndarray
+    alpha: float
+    total_push_mb: float
+    map_alive: Optional[np.ndarray] = None
+
+    @classmethod
+    def fresh(cls, platform: Platform, job: int = 0) -> "JobProgress":
+        """The zero-progress snapshot: every byte still at its source —
+        pricing it reproduces :meth:`CostModel.price_plan` exactly."""
+        nS, nM, nR = platform.nS, platform.nM, platform.nR
+        return cls(
+            job=job, released=False, done=False,
+            resid_push=platform.D.copy(),
+            committed_push=np.zeros((nS, nM)),
+            at_mapper=np.zeros(nM),
+            shuffle_pool=np.zeros(nM),
+            committed_shuffle=np.zeros((nM, nR)),
+            at_reducer=np.zeros(nR),
+            alpha=float(platform.alpha),
+            total_push_mb=float(platform.D.sum()),
+            map_alive=np.ones(nM, dtype=bool),
+        )
+
+    def remaining_mb(self) -> Dict[str, float]:
+        """Remaining MB per phase (push/map input; shuffle/reduce output)."""
+        push = float(self.resid_push.sum() + self.committed_push.sum())
+        map_in = push + float(self.at_mapper.sum())
+        shuffle = (
+            self.alpha * map_in
+            + float(self.shuffle_pool.sum() + self.committed_shuffle.sum())
+        )
+        reduce = shuffle + float(self.at_reducer.sum())
+        return {"push": push, "map": map_in, "shuffle": shuffle,
+                "reduce": reduce}
+
+    def completion(self) -> Dict[str, float]:
+        """Per-phase completion fraction in [0, 1]."""
+        rem = self.remaining_mb()
+        tot_in = max(self.total_push_mb, 1e-12)
+        tot_out = max(self.alpha * self.total_push_mb, 1e-12)
+        return {
+            "push": 1.0 - min(rem["push"] / tot_in, 1.0),
+            "map": 1.0 - min(rem["map"] / tot_in, 1.0),
+            "shuffle": 1.0 - min(rem["shuffle"] / tot_out, 1.0),
+            "reduce": 1.0 - min(rem["reduce"] / tot_out, 1.0),
+        }
+
+
+def residual_volumes(
+    resid_push, committed_push, at_mapper, shuffle_pool, committed_shuffle,
+    at_reducer, alpha, x, y, xp=jnp,
+):
+    """Per-phase volumes of the *remaining* work under a candidate plan.
+
+    The re-routable buckets flow through the candidate ``x``/``y`` exactly
+    like :func:`analytic_volumes` routes a fresh job; the committed buckets
+    enter as fixed per-resource volumes.  With zero committed/delivered
+    buckets this degenerates to ``analytic_volumes(resid_push, x, y,
+    alpha)`` — a fresh job is the special case of an untouched residual.
+    """
+    V_push = resid_push[:, None] * x + committed_push
+    map_in = x.T @ resid_push + at_mapper + xp.sum(committed_push, axis=0)
+    out = alpha * map_in + shuffle_pool  # map-output MB leaving each mapper
+    V_shuffle = out[:, None] * y[None, :] + committed_shuffle
+    V_reduce = (
+        xp.sum(out) * y + xp.sum(committed_shuffle, axis=0) + at_reducer
+    )
+    return V_push, map_in, V_shuffle, V_reduce
+
+
 def phase_model(
     D, B_sm, B_mr, C_m, C_r, alpha, x, y, barriers, mx, pmax
 ) -> Dict[str, jnp.ndarray]:
@@ -314,6 +424,34 @@ class CostModel:
     def price_plan(self, plan: ExecutionPlan, barriers=None) -> Dict[str, np.ndarray]:
         """Price the analytic volumes of ``plan`` (the model side)."""
         return self.price_volumes(*self.analytic_volumes(plan), barriers=barriers)
+
+    def price_residual(
+        self, progress: JobProgress, plan: ExecutionPlan, barriers=None
+    ) -> Dict[str, np.ndarray]:
+        """Price the *remaining* work of an observed job under a candidate
+        plan: the snapshot's re-routable volumes flow through ``plan``'s
+        ``x``/``y``, the committed ones enter as fixed per-resource load,
+        and everything runs through the identical float64 phase equations
+        (:func:`residual_volumes` → :func:`volume_model`).  Pricing a
+        zero-progress snapshot (:meth:`JobProgress.fresh`) reproduces
+        :meth:`price_plan` exactly — online and offline decisions share one
+        cost model."""
+        return self.price_volumes(
+            *residual_volumes(
+                progress.resid_push, progress.committed_push,
+                progress.at_mapper, progress.shuffle_pool,
+                progress.committed_shuffle, progress.at_reducer,
+                progress.alpha, np.asarray(plan.x), np.asarray(plan.y),
+                xp=np,
+            ),
+            barriers=barriers,
+        )
+
+    def residual_makespan(
+        self, progress: JobProgress, plan: ExecutionPlan, barriers=None
+    ) -> float:
+        """Modeled seconds to finish the observed job under ``plan``."""
+        return float(self.price_residual(progress, plan, barriers)["makespan"])
 
     # -- scalar / report conveniences ---------------------------------------
     def makespan(self, plan: ExecutionPlan, barriers=None) -> float:

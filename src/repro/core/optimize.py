@@ -40,8 +40,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import inspect
 import itertools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,11 +51,13 @@ import numpy as np
 from .makespan import (
     BARRIERS_ALL_GLOBAL,
     CostModel,
+    JobProgress,
     analytic_volumes,
     attribute_phases,
     hard_ops,
     makespan,
     phase_breakdown,
+    residual_volumes,
     shared_effective_volumes,
     smooth_ops,
     phase_model,
@@ -65,17 +68,22 @@ from .platform import Platform, Substrate
 
 __all__ = [
     "MODES",
+    "SCHEDULE_OBJECTIVES",
     "PlanResult",
     "SchedulePlanResult",
     "available_modes",
+    "available_online_policies",
     "available_policies",
     "brute_force_plan",
+    "get_online_policy",
     "get_planner",
     "get_schedule_planner",
     "optimize_plan",
     "optimize_schedule",
+    "register_online_policy",
     "register_planner",
     "register_schedule_planner",
+    "replan",
 ]
 
 #: The paper's built-in planner modes (kept as a tuple for backwards
@@ -184,6 +192,39 @@ def _objective_fn(mode: str, barriers) -> Callable:
 # the annealed multi-restart solver
 # ---------------------------------------------------------------------------
 
+def _adam_anneal(loss, params0, steps: int, scale, lr, tau0_frac, tau1_frac):
+    """The one annealed-Adam loop every solver here shares: minimize
+    ``loss(params, tau)`` for ``steps`` iterations with the smoothing
+    temperature ``tau`` geometrically decayed from ``scale*tau0_frac`` to
+    ``scale*tau1_frac`` inside a single ``lax.scan``.  Pure JAX — callers
+    invoke it inside their own jitted bodies, so each solver keeps its own
+    compilation cache entry."""
+    m0 = jax.tree.map(jnp.zeros_like, params0)
+    v0 = jax.tree.map(jnp.zeros_like, params0)
+
+    def step(carry, t):
+        params, m, v = carry
+        frac = t / max(steps - 1, 1)
+        tau = scale * tau0_frac * (tau1_frac / tau0_frac) ** frac
+        g = jax.grad(loss)(params, tau)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+        t1 = t + 1.0
+        mhat = jax.tree.map(lambda a: a / (1 - b1**t1), m)
+        vhat = jax.tree.map(lambda a: a / (1 - b2**t1), v)
+        params = jax.tree.map(
+            lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
+            params, mhat, vhat,
+        )
+        return (params, m, v), None
+
+    (params, _, _), _ = jax.lax.scan(
+        step, (params0, m0, v0), jnp.arange(steps, dtype=jnp.float32)
+    )
+    return params
+
+
 @functools.partial(
     jax.jit, static_argnames=("loss_kind", "barriers", "opt_x", "opt_y", "steps")
 )
@@ -218,29 +259,8 @@ def _solve_batch(
         return loss_core(arrs, x, y, mx, pmax) / scale
 
     def one_restart(lx0, ly0):
-        params = {"x": lx0, "y": ly0}
-        m0 = jax.tree.map(jnp.zeros_like, params)
-        v0 = jax.tree.map(jnp.zeros_like, params)
-
-        def step(carry, t):
-            params, m, v = carry
-            frac = t / max(steps - 1, 1)
-            tau = scale * tau0_frac * (tau1_frac / tau0_frac) ** frac
-            g = jax.grad(loss)(params, tau)
-            b1, b2, eps = 0.9, 0.999, 1e-8
-            m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
-            v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
-            t1 = t + 1.0
-            mhat = jax.tree.map(lambda a: a / (1 - b1**t1), m)
-            vhat = jax.tree.map(lambda a: a / (1 - b2**t1), v)
-            params = jax.tree.map(
-                lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
-                params, mhat, vhat,
-            )
-            return (params, m, v), None
-
-        (params, _, _), _ = jax.lax.scan(
-            step, (params, m0, v0), jnp.arange(steps, dtype=jnp.float32)
+        params = _adam_anneal(
+            loss, {"x": lx0, "y": ly0}, steps, scale, lr, tau0_frac, tau1_frac
         )
         x, y = build(params)
         mx, pmax = hard_ops()
@@ -475,13 +495,16 @@ class SchedulePlanResult:
     """N per-job plans priced together on their shared substrate.  Each
     per-job :class:`PlanResult` carries the job's *contended* makespan
     (shared-capacity pricing — the other jobs' demand inflates every
-    resource the job touches); ``makespan`` is the modeled aggregate."""
+    resource the job touches); ``makespan`` is the modeled aggregate.
+    ``objective`` records what the policy optimized (see
+    :data:`SCHEDULE_OBJECTIVES`)."""
 
     results: Tuple[PlanResult, ...]
     makespan: float
     policy: str
     mode: str
     barriers: Tuple[str, str, str]
+    objective: str = "makespan"
 
     @property
     def plans(self) -> Tuple[ExecutionPlan, ...]:
@@ -506,7 +529,8 @@ def _job_volumes(platforms, plans):
 
 
 def _shared_schedule_result(
-    platforms, plans, barriers, policy: str, mode: str
+    platforms, plans, barriers, policy: str, mode: str,
+    objective: str = "makespan",
 ) -> SchedulePlanResult:
     """Price per-job plans under shared-capacity float64 equations and wrap
     them in per-job PlanResults + the aggregate."""
@@ -531,6 +555,7 @@ def _shared_schedule_result(
         policy=policy,
         mode=mode,
         barriers=tuple(barriers),
+        objective=objective,
     )
 
 
@@ -542,6 +567,7 @@ def optimize_schedule(
     n_restarts: int = 24,
     steps: int = 500,
     seed: int = 0,
+    objective: str = "makespan",
 ) -> SchedulePlanResult:
     """Plan N concurrent jobs sharing one substrate.
 
@@ -558,11 +584,23 @@ def optimize_schedule(
       ``independent`` under the model, because the independent plans are a
       candidate).
 
+    ``objective`` selects what the policy minimizes
+    (:data:`SCHEDULE_OBJECTIVES`): the aggregate ``makespan``, or
+    ``min_max_slowdown`` — the fairness objective bounding how much any one
+    job is stretched relative to running alone.  It is forwarded to
+    policies that accept an ``objective`` keyword (the built-in ``joint``
+    does); requesting a non-default objective from a policy that does not
+    is an error rather than a silent ignore.
+
     The result prices every job with shared-capacity float64 equations, so
     policies are compared on exactly the surface the executor measures.
     """
     if not platforms:
         raise ValueError("optimize_schedule needs at least one job")
+    if objective not in SCHEDULE_OBJECTIVES:
+        raise ValueError(
+            f"objective must be one of {SCHEDULE_OBJECTIVES}, got {objective!r}"
+        )
     sub = Substrate.of(platforms[0])
     for p in platforms[1:]:
         if not sub.compatible(Substrate.of(p)):
@@ -572,11 +610,18 @@ def optimize_schedule(
             )
     planner = get_schedule_planner(policy)
     barriers = tuple(barriers)
-    plans = planner(
-        sub, list(platforms), barriers,
-        mode=mode, n_restarts=n_restarts, steps=steps, seed=seed,
+    kwargs = dict(mode=mode, n_restarts=n_restarts, steps=steps, seed=seed)
+    if "objective" in inspect.signature(planner).parameters:
+        kwargs["objective"] = objective
+    elif objective != "makespan":
+        raise ValueError(
+            f"policy {policy!r} does not take an objective — register it "
+            "with an `objective` keyword to opt in"
+        )
+    plans = planner(sub, list(platforms), barriers, **kwargs)
+    return _shared_schedule_result(
+        platforms, plans, barriers, policy, mode, objective
     )
-    return _shared_schedule_result(platforms, plans, barriers, policy, mode)
 
 
 @register_schedule_planner("independent")
@@ -626,7 +671,17 @@ def _sequential_policy(substrate, platforms, barriers, *, mode, n_restarts,
     return plans
 
 
-@functools.partial(jax.jit, static_argnames=("barriers", "steps", "kappa"))
+#: Selectable aggregation objectives for multi-job scheduling:
+#: ``makespan`` minimizes the schedule's aggregate (max-over-jobs) makespan;
+#: ``min_max_slowdown`` minimizes the worst per-job *slowdown* — the job's
+#: contended makespan divided by its independent-plan (sole-tenant)
+#: makespan — so no job is sacrificed to shorten the schedule.
+SCHEDULE_OBJECTIVES = ("makespan", "min_max_slowdown")
+
+
+@functools.partial(
+    jax.jit, static_argnames=("barriers", "steps", "kappa", "objective")
+)
 def _solve_joint_batch(
     D_stack,  # (J, nS)
     alpha_stack,  # (J,)
@@ -637,16 +692,18 @@ def _solve_joint_batch(
     logits_x0,  # (R, J, nS, nM)
     logits_y0,  # (R, J, nR)
     scale,  # scalar — typical makespan, sets the tau schedule units
+    refs,  # (J,) per-job reference makespans (1s for the makespan objective)
     kappa: float,  # static — smooth-usage-gate width, MB
     barriers: Tuple[str, str, str],
     steps: int,
+    objective: str = "makespan",
     lr: float = 0.08,
     tau0_frac: float = 0.3,
     tau1_frac: float = 1e-3,
 ):
     """Anneal all jobs' stacked plans jointly against shared-capacity
     pricing; return per-restart (x, y) stacks plus their exact hard-gate
-    aggregate makespans."""
+    aggregate objective values."""
 
     def stacked_volumes(x, y, xp):
         return [
@@ -657,12 +714,14 @@ def _solve_joint_batch(
     def aggregate(x, y, mx, pmax, kap):
         vols = stacked_volumes(x, y, jnp)
         eff = shared_effective_volumes(vols, kappa=kap, xp=jnp)
-        spans = [
+        spans = jnp.stack([
             volume_model(*v, B_sm, B_mr, C_m, C_r, barriers, mx, pmax,
                          xp=jnp)["makespan"]
             for v in eff
-        ]
-        return mx(jnp.stack(spans))
+        ])
+        if objective == "min_max_slowdown":
+            spans = spans / refs * scale  # keep the tau schedule's units
+        return mx(spans)
 
     def loss(params, tau):
         mx, pmax = smooth_ops(tau)
@@ -671,29 +730,8 @@ def _solve_joint_batch(
         return aggregate(x, y, mx, pmax, kappa) / scale
 
     def one_restart(lx0, ly0):
-        params = {"x": lx0, "y": ly0}
-        m0 = jax.tree.map(jnp.zeros_like, params)
-        v0 = jax.tree.map(jnp.zeros_like, params)
-
-        def step(carry, t):
-            params, m, v = carry
-            frac = t / max(steps - 1, 1)
-            tau = scale * tau0_frac * (tau1_frac / tau0_frac) ** frac
-            g = jax.grad(loss)(params, tau)
-            b1, b2, eps = 0.9, 0.999, 1e-8
-            m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
-            v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
-            t1 = t + 1.0
-            mhat = jax.tree.map(lambda a: a / (1 - b1**t1), m)
-            vhat = jax.tree.map(lambda a: a / (1 - b2**t1), v)
-            params = jax.tree.map(
-                lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
-                params, mhat, vhat,
-            )
-            return (params, m, v), None
-
-        (params, _, _), _ = jax.lax.scan(
-            step, (params, m0, v0), jnp.arange(steps, dtype=jnp.float32)
+        params = _adam_anneal(
+            loss, {"x": lx0, "y": ly0}, steps, scale, lr, tau0_frac, tau1_frac
         )
         x = jax.nn.softmax(params["x"], axis=-1)
         y = jax.nn.softmax(params["y"], axis=-1)
@@ -721,13 +759,16 @@ def _normalized_plans(xs, ys, meta: str) -> "list[ExecutionPlan]":
 
 @register_schedule_planner("joint")
 def _joint_policy(substrate, platforms, barriers, *, mode, n_restarts, steps,
-                  seed):
+                  seed, objective: str = "makespan"):
     """The paper's end-to-end argument lifted across jobs: one annealed
     optimization over every job's stacked ``x``/``y`` against
     shared-capacity pricing.  Warm starts include the independent per-job
     plans (so the joint result is never worse than ``independent`` under
     the model) and node-rotated anti-affinity variants that bias different
-    jobs toward different substrate entries."""
+    jobs toward different substrate entries.  ``objective`` selects the
+    aggregate being annealed *and* the float64 selection criterion:
+    ``makespan`` or ``min_max_slowdown`` (per-job contended makespan over
+    its independent-plan sole-tenant makespan)."""
     J, nS, nM, nR = len(platforms), substrate.nS, substrate.nM, substrate.nR
     indep = _independent_policy(
         substrate, platforms, barriers,
@@ -765,6 +806,15 @@ def _joint_policy(substrate, platforms, barriers, *, mode, n_restarts, steps,
         makespan(platforms[0], uniform_plan(platforms[0]), barriers=barriers),
         1e-6,
     )
+    # per-job fairness references: what each job would take as sole tenant
+    # under its own independent plan (slowdown = contended / this)
+    refs = np.maximum(
+        np.array([
+            makespan(p, plan, barriers=barriers)
+            for p, plan in zip(platforms, indep)
+        ]),
+        1e-9,
+    )
     # smooth usage-gate width: small against a typical per-link volume
     kappa = max(1e-3 * float(D_stack.sum()) / max(nM, 1), 1e-9)
     xs, ys, _ = _solve_joint_batch(
@@ -776,9 +826,11 @@ def _joint_policy(substrate, platforms, barriers, *, mode, n_restarts, steps,
         logits_x,
         logits_y,
         jnp.float32(scale),
+        jnp.asarray(refs, jnp.float32),
         kappa=float(kappa),
         barriers=tuple(barriers),
         steps=steps,
+        objective=objective,
     )
 
     # exact float64 shared pricing picks the winner; the independent stack
@@ -791,11 +843,210 @@ def _joint_policy(substrate, platforms, barriers, *, mode, n_restarts, steps,
     candidates.append([
         dataclasses.replace(plan, meta="joint") for plan in indep
     ])
-    scores = [
-        cm.schedule_makespan(_job_volumes(platforms, plans), barriers)
-        for plans in candidates
-    ]
+
+    def score(plans):
+        priced = cm.price_shared(_job_volumes(platforms, plans), barriers)
+        spans = np.array([float(out["makespan"]) for out in priced])
+        if objective == "min_max_slowdown":
+            return float(np.max(spans / refs))
+        return float(np.max(spans))
+
+    scores = [score(plans) for plans in candidates]
     return candidates[int(np.argmin(scores))]
+
+
+# ---------------------------------------------------------------------------
+# online re-planning: warm-started residual optimization + policy registry
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("barriers", "steps"))
+def _solve_residual_batch(
+    resid,  # 6-tuple: resid_push, committed_push, at_mapper, shuffle_pool,
+            #          committed_shuffle, at_reducer
+    caps,  # 4-tuple: B_sm, B_mr, C_m, C_r
+    alpha,
+    logits_x0,  # (R, nS, nM)
+    logits_y0,  # (R, nR)
+    scale,
+    barriers: Tuple[str, str, str],
+    steps: int,
+    lr: float = 0.08,
+    tau0_frac: float = 0.3,
+    tau1_frac: float = 1e-3,
+):
+    """Anneal ``R`` restarts of the *residual* makespan — the remaining
+    work of an observed job (re-routable buckets through candidate x/y,
+    committed buckets fixed) priced by the same phase equations."""
+
+    def residual_span(x, y, mx, pmax):
+        V = residual_volumes(*resid, alpha, x, y, xp=jnp)
+        return volume_model(*V, *caps, barriers, mx, pmax, xp=jnp)["makespan"]
+
+    def loss(params, tau):
+        mx, pmax = smooth_ops(tau)
+        x = jax.nn.softmax(params["x"], axis=-1)
+        y = jax.nn.softmax(params["y"], axis=-1)
+        return residual_span(x, y, mx, pmax) / scale
+
+    def one_restart(lx0, ly0):
+        params = _adam_anneal(
+            loss, {"x": lx0, "y": ly0}, steps, scale, lr, tau0_frac, tau1_frac
+        )
+        x = jax.nn.softmax(params["x"], axis=-1)
+        y = jax.nn.softmax(params["y"], axis=-1)
+        mx, pmax = hard_ops()
+        return x, y, residual_span(x, y, mx, pmax)
+
+    return jax.vmap(one_restart)(logits_x0, logits_y0)
+
+
+def replan(
+    platform: Platform,
+    incumbent: ExecutionPlan,
+    progress: Optional[JobProgress] = None,
+    barriers: Tuple[str, str, str] = BARRIERS_ALL_GLOBAL,
+    n_restarts: int = 8,
+    steps: int = 200,
+    seed: int = 0,
+) -> PlanResult:
+    """Re-optimize a running job's plan against its *remaining* work.
+
+    ``platform`` should be the **current view** of the fabric
+    (:meth:`repro.core.platform.Substrate.at` folds capacity drift in);
+    ``progress`` is the executor's observed residual
+    (:class:`repro.core.makespan.JobProgress`; ``None`` means the job has
+    not started — a fresh zero-progress snapshot, i.e. ordinary planning).
+    The annealed solver **warm-starts from the incumbent plan's logits**
+    (plus the standard heuristic and random restarts), every candidate is
+    re-priced in float64 through :meth:`CostModel.price_residual`, and the
+    incumbent itself competes — so the returned plan is never modeled
+    worse than keeping it, and is the *same object* when keeping it wins.
+
+    The returned :class:`PlanResult`'s ``makespan``/``breakdown`` are the
+    modeled **remaining** seconds from the observation instant, not a
+    from-scratch makespan.
+    """
+    barriers = tuple(barriers)
+    if progress is None:
+        progress = JobProgress.fresh(platform)
+    if progress.map_alive is not None and not progress.map_alive.all():
+        # a dead worker is a capacity fact the drift traces cannot express:
+        # collapse its compute and ingest links 1000x so the solver (and
+        # the float64 selection) routes the residual around it.  Not zero —
+        # softmax plans keep epsilon mass everywhere and the phase
+        # equations have no usage gate on push links.
+        alive = progress.map_alive.astype(bool)
+        platform = dataclasses.replace(
+            platform,
+            C_m=np.where(alive, platform.C_m, platform.C_m * 1e-3),
+            B_sm=np.where(alive[None, :], platform.B_sm,
+                          platform.B_sm * 1e-3),
+        )
+    cm = CostModel(platform, barriers)
+    inc_out = cm.price_residual(progress, incumbent)
+    inc_span = float(inc_out["makespan"])
+
+    eps = 1e-9
+    lx0, ly0 = _initial_logits(platform, max(n_restarts - 1, 1), seed)
+    lx_inc = jnp.asarray(
+        np.log(np.asarray(incumbent.x) + eps), jnp.float32
+    )[None]
+    ly_inc = jnp.asarray(
+        np.log(np.asarray(incumbent.y) + eps), jnp.float32
+    )[None]
+    logits_x = jnp.concatenate([lx_inc, lx0])[:n_restarts]
+    logits_y = jnp.concatenate([ly_inc, ly0])[:n_restarts]
+
+    resid = tuple(
+        jnp.asarray(a, jnp.float32)
+        for a in (progress.resid_push, progress.committed_push,
+                  progress.at_mapper, progress.shuffle_pool,
+                  progress.committed_shuffle, progress.at_reducer)
+    )
+    caps = tuple(
+        jnp.asarray(a, jnp.float32)
+        for a in (platform.B_sm, platform.B_mr, platform.C_m, platform.C_r)
+    )
+    xs, ys, _ = _solve_residual_batch(
+        resid, caps, float(progress.alpha), logits_x, logits_y,
+        jnp.float32(max(inc_span, 1e-6)), barriers=barriers, steps=steps,
+    )
+
+    best_plan, best_span, best_out = incumbent, inc_span, inc_out
+    for r in range(int(xs.shape[0])):
+        x = np.clip(np.asarray(xs[r], dtype=np.float64), 0.0, None)
+        x /= x.sum(axis=1, keepdims=True)
+        y = np.clip(np.asarray(ys[r], dtype=np.float64), 0.0, None)
+        y /= y.sum()
+        plan = ExecutionPlan(x=x, y=y, meta="replan")
+        out = cm.price_residual(progress, plan)
+        if float(out["makespan"]) < best_span:
+            best_plan, best_span, best_out = plan, float(out["makespan"]), out
+    return PlanResult(
+        plan=best_plan,
+        makespan=best_span,
+        breakdown=attribute_phases(best_out),
+        mode="replan",
+        barriers=barriers,
+        objective=best_span,
+    )
+
+
+#: name -> fn(kind, snapshot) -> bool (replan now?)
+_ONLINE_POLICIES: Dict[str, Callable] = {}
+
+
+def register_online_policy(name: str, fn: Optional[Callable] = None):
+    """Register an online re-planning policy under ``name`` (decorator or
+    direct call, mirroring :func:`register_planner`).  A policy is called
+    at every candidate decision point of
+    :meth:`repro.api.GeoSchedule.run_online` with ``(kind, snapshot)`` —
+    ``kind`` one of ``"arrival"`` / ``"drift"`` / ``"failure"`` /
+    ``"tick"``, ``snapshot`` the executor's
+    :class:`repro.core.simulate.ProgressSnapshot` at that instant — and
+    returns whether to re-plan the active jobs now."""
+    if fn is None:
+        return lambda f: register_online_policy(name, f)
+    if name in _ONLINE_POLICIES:
+        raise ValueError(f"online policy {name!r} is already registered")
+    _ONLINE_POLICIES[name] = fn
+    return fn
+
+
+def get_online_policy(name: str) -> Callable:
+    try:
+        return _ONLINE_POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"online policy must be one of {available_online_policies()}, "
+            f"got {name!r}"
+        ) from None
+
+
+def available_online_policies() -> Tuple[str, ...]:
+    """Names of every registered online re-planning policy."""
+    return tuple(_ONLINE_POLICIES)
+
+
+@register_online_policy("static")
+def _static_online_policy(kind, snapshot):
+    """Never re-plan: the frozen offline pipeline, reproduced exactly —
+    the baseline every online policy is measured against."""
+    return False
+
+
+@register_online_policy("reactive")
+def _reactive_online_policy(kind, snapshot):
+    """Re-plan whenever the world changes: a job arrives, a worker fails,
+    or a traced capacity steps."""
+    return kind in ("arrival", "failure", "drift")
+
+
+@register_online_policy("horizon")
+def _horizon_online_policy(kind, snapshot):
+    """Re-plan on a fixed cadence (every ``replan_dt`` tick), ignoring
+    event triggers — the rolling-horizon control baseline."""
+    return kind == "tick"
 
 
 # ---------------------------------------------------------------------------

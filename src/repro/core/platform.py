@@ -20,12 +20,15 @@ Generators are provided for
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import re
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 __all__ = [
+    "CapacityTrace",
     "Platform",
     "Substrate",
     "two_cluster_example",
@@ -34,6 +37,57 @@ __all__ = [
     "PLANETLAB_SITES",
     "TABLE1_BANDWIDTH_KBPS",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityTrace:
+    """A drifting resource capacity as a right-open step function.
+
+    ``values[i]`` (MB/s) applies on ``[times[i], times[i+1])``; the last
+    value holds forever.  ``times`` must start at 0 and strictly increase,
+    so a trace always answers :meth:`at` for any ``t >= 0``.  Traces attach
+    to a :class:`Substrate` by resource name (see
+    :meth:`Substrate.with_traces`) and model WAN capacity drift the planner
+    did not know at plan time: the executor serves each chunk at the
+    capacity in force when its service *starts*, and :meth:`Substrate.at`
+    gives an online planner the capacities in force at any instant.
+    """
+
+    times: Tuple[float, ...]
+    values: Tuple[float, ...]
+
+    def __post_init__(self):
+        times = tuple(float(t) for t in self.times)
+        values = tuple(float(v) for v in self.values)
+        object.__setattr__(self, "times", times)
+        object.__setattr__(self, "values", values)
+        if len(times) != len(values) or not times:
+            raise ValueError("times and values must be equal-length, non-empty")
+        if times[0] != 0.0:
+            raise ValueError("a CapacityTrace must start at t=0")
+        if any(b <= a for a, b in zip(times, times[1:])):
+            raise ValueError("times must strictly increase")
+        if any(v <= 0 for v in values):
+            raise ValueError("capacities must be strictly positive")
+
+    @classmethod
+    def step(cls, before: float, after: float, t: float) -> "CapacityTrace":
+        """A single capacity step: ``before`` MB/s on [0, t), ``after``
+        from ``t`` on — the one-event drift of a degrading backbone link."""
+        return cls(times=(0.0, float(t)), values=(before, after))
+
+    def at(self, t: float) -> float:
+        """Capacity (MB/s) in force at absolute time ``t``."""
+        idx = bisect.bisect_right(self.times, float(t)) - 1
+        return self.values[max(idx, 0)]
+
+
+#: resource-name grammar shared with :meth:`Substrate.resources` — traces
+#: key into the same namespace the executor's per-resource stats use.
+_TRACE_KEY_RE = re.compile(
+    r"^(?:push\[s(\d+)->m(\d+)\]|shuffle\[m(\d+)->r(\d+)\]"
+    r"|map\[m(\d+)\]|reduce\[r(\d+)\])$"
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +108,10 @@ class Substrate:
       C_m:   (nM,) mapper compute rate, MB/s of input data.
       C_r:   (nR,) reducer compute rate, MB/s of input data.
       cluster_s/m/r: integer cluster (site) id per node.
+      traces: optional {resource name -> :class:`CapacityTrace`} overriding
+        the (nominal, t=0) capacity arrays over time.  The executor reads
+        the trace at each chunk's service start; an online planner reads
+        :meth:`at` for the capacities in force at a decision instant.
     """
 
     B_sm: np.ndarray
@@ -64,6 +122,7 @@ class Substrate:
     cluster_m: np.ndarray
     cluster_r: np.ndarray
     name: str = "substrate"
+    traces: Optional[Dict[str, CapacityTrace]] = None
 
     def __post_init__(self):
         for field in ("B_sm", "B_mr", "C_m", "C_r"):
@@ -80,6 +139,16 @@ class Substrate:
             raise ValueError(f"C_m shape {self.C_m.shape} != ({nM},)")
         if self.C_r.shape != (nR,):
             raise ValueError(f"C_r shape {self.C_r.shape} != ({nR},)")
+        if self.traces:
+            known = self.resources()
+            for key, trace in self.traces.items():
+                if not isinstance(trace, CapacityTrace):
+                    raise TypeError(f"trace for {key!r} is not a CapacityTrace")
+                if _TRACE_KEY_RE.match(key) is None or key not in known:
+                    raise ValueError(
+                        f"unknown trace key {key!r} — use a resource name "
+                        "from Substrate.resources()"
+                    )
 
     # -- sizes ------------------------------------------------------------
     @property
@@ -197,13 +266,61 @@ class Substrate:
             B_mr=scale(self.B_mr, shuffle_frac),
             C_m=scale(self.C_m, map_frac),
             C_r=scale(self.C_r, reduce_frac),
+            traces=None,  # a hypothetical planning view, not the live fabric
             name=f"{self.name}/residual",
         )
 
+    # -- capacity drift ----------------------------------------------------
+    def with_traces(self, traces: Dict[str, CapacityTrace]) -> "Substrate":
+        """This substrate with drifting capacities: ``traces`` maps resource
+        names (the :meth:`resources` namespace) to step-function
+        :class:`CapacityTrace`\\ s.  The base arrays stay the *nominal*
+        (t=0) view every offline planner sees; the executor and
+        :meth:`at` read the traces."""
+        return dataclasses.replace(self, traces=dict(traces))
+
+    def trace_for(self, name: str) -> Optional[CapacityTrace]:
+        """The capacity trace attached to resource ``name``, if any."""
+        return self.traces.get(name) if self.traces else None
+
+    def drift_times(self) -> Tuple[float, ...]:
+        """Every future instant (t > 0, ascending) at which some traced
+        capacity steps — the event times a reactive online policy watches."""
+        if not self.traces:
+            return ()
+        return tuple(sorted({
+            t for trace in self.traces.values() for t in trace.times if t > 0
+        }))
+
+    def at(self, t: float) -> "Substrate":
+        """The capacities in force at absolute time ``t``: a plain (trace
+        free) substrate whose arrays fold every trace in — the *current
+        view* an online planner replans against."""
+        if not self.traces:
+            return self
+        B_sm, B_mr = self.B_sm.copy(), self.B_mr.copy()
+        C_m, C_r = self.C_m.copy(), self.C_r.copy()
+        for key, trace in self.traces.items():
+            m = _TRACE_KEY_RE.match(key)
+            ps, pm, sm, sr, mm, rr = m.groups()
+            if ps is not None:
+                B_sm[int(ps), int(pm)] = trace.at(t)
+            elif sm is not None:
+                B_mr[int(sm), int(sr)] = trace.at(t)
+            elif mm is not None:
+                C_m[int(mm)] = trace.at(t)
+            else:
+                C_r[int(rr)] = trace.at(t)
+        return dataclasses.replace(
+            self, B_sm=B_sm, B_mr=B_mr, C_m=C_m, C_r=C_r,
+            traces=None, name=f"{self.name}@{t:g}s",
+        )
+
     def describe(self) -> str:
+        drift = f" drifting@{len(self.traces)}" if self.traces else ""
         return (
             f"Substrate({self.name}: nS={self.nS} nM={self.nM} nR={self.nR}, "
-            f"{len(self.resources())} resources)"
+            f"{len(self.resources())} resources{drift})"
         )
 
 

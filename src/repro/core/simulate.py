@@ -33,9 +33,30 @@ approximates fair sharing because concurrent jobs seed and emit their
 chunks round-robin.  The single-plan :func:`simulate` is the ``N=1``
 special case with unchanged semantics.
 
+Links serve their queue one transfer at a time (a *pump*, like the compute
+nodes) rather than pre-booking completion times, so the engine is
+**observable and steerable** — the substance of the online control plane:
+
+* every transfer sitting in a queue is uncommitted and can be re-routed,
+  which is what :meth:`_MultiSim.swap_plan` does when an online policy
+  replaces a job's plan mid-flight;
+* a link's service rate is read *at service start* from its
+  :class:`repro.core.platform.CapacityTrace`, so WAN capacities may drift
+  while chunks are queued (an in-service transfer keeps the rate it
+  started with);
+* :meth:`_MultiSim.snapshot` captures a :class:`ProgressSnapshot` at any
+  event time — per-job residual volumes bucketed by what a re-planner can
+  still control (:class:`repro.core.makespan.JobProgress`), plus
+  per-resource backlog;
+* :meth:`_MultiSim.inject` admits new jobs after t=0, so arrivals stream
+  in rather than being known upfront;
+* :meth:`_MultiSim.run_until` pauses the event loop at a decision instant
+  (:func:`open_schedule` hands out a paused engine;
+  :func:`simulate_schedule` is the run-to-completion wrapper).
+
 The executor is used by the Fig-4 validation benchmark (model-vs-execution
-correlation), the Fig-10/11 dynamics study, the multi-job contention
-benchmark, and the fault-tolerance tests.
+correlation), the Fig-10/11 dynamics study, the multi-job contention and
+online re-planning benchmarks, and the fault-tolerance tests.
 """
 from __future__ import annotations
 
@@ -46,17 +67,19 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .makespan import BARRIERS_GGL, _check_barriers
+from .makespan import BARRIERS_GGL, JobProgress, _check_barriers
 from .plan import ExecutionPlan
 from .platform import Platform, Substrate
 
 __all__ = [
     "ComputeResource",
     "LinkResource",
+    "ProgressSnapshot",
     "ResourceStats",
     "ScheduleSimResult",
     "SimConfig",
     "SimResult",
+    "open_schedule",
     "simulate",
     "simulate_schedule",
 ]
@@ -85,6 +108,14 @@ class SimConfig:
 
     def __post_init__(self):
         object.__setattr__(self, "barriers", _check_barriers(self.barriers))
+        if self.start_time < 0:
+            raise ValueError(
+                f"start_time must be >= 0, got {self.start_time}"
+            )
+        if self.replication < 1:
+            raise ValueError(
+                f"replication must be >= 1, got {self.replication}"
+            )
 
 
 @dataclasses.dataclass
@@ -136,6 +167,20 @@ class ResourceStats:
     volume_mb: float = 0.0
     n_chunks: int = 0
     jobs: set = dataclasses.field(default_factory=set)
+    #: absolute time of the first/last service — a job released at t>0 must
+    #: leave ``first_busy_s >= t`` on every resource it alone touches.
+    first_busy_s: float = float("inf")
+    last_busy_s: float = 0.0
+
+    def record(self, start: float, enqueued: float, dur: float,
+               size: float, job: int) -> None:
+        self.busy_s += dur
+        self.waited_s += start - enqueued
+        self.volume_mb += size
+        self.n_chunks += 1
+        self.jobs.add(job)
+        self.first_busy_s = min(self.first_busy_s, start)
+        self.last_busy_s = max(self.last_busy_s, start + dur)
 
     def utilization(self, horizon: float) -> float:
         """Fraction of ``horizon`` this resource spent serving."""
@@ -155,51 +200,68 @@ class ResourceStats:
         }
 
 
-class LinkResource:
-    """A point-to-point link serving booked transfers FIFO.
+class _Transfer:
+    """One queued/in-service link transfer: the chunk-sized payload plus the
+    event to fire when it completes."""
 
-    Bookings reserve the link eagerly: ``book`` returns the completion time
-    of a transfer queued behind everything already booked — exactly the
-    serialization the single-job executor applied, now shared by every job
-    that routes chunks through this link.
+    __slots__ = ("run", "size", "fn", "args", "enqueued")
+
+    def __init__(self, run: "_JobRun", size: float, fn: str, args: tuple,
+                 enqueued: float):
+        self.run = run
+        self.size = float(size)
+        self.fn = fn
+        self.args = args
+        self.enqueued = enqueued
+
+
+class LinkResource:
+    """A point-to-point link serving queued transfers FIFO, one at a time.
+
+    Transfers wait in :attr:`queue` until the link is free — exactly the
+    serialization the old eager-booking link applied, but *revocable*: a
+    queued transfer has committed nothing and can be pulled back and
+    re-routed (plan swap), and each service reads the link's capacity trace
+    at its own start time (drift).  Only :attr:`current` is committed.
     """
 
-    __slots__ = ("name", "bw", "free", "stats")
+    __slots__ = ("name", "bw", "trace", "busy", "current", "queue", "stats")
 
-    def __init__(self, name: str, bw: float):
+    def __init__(self, name: str, bw: float, trace=None):
         self.name = name
         self.bw = float(bw)
-        self.free = 0.0
+        self.trace = trace
+        self.busy = False
+        self.current: Optional[_Transfer] = None
+        self.queue: List[_Transfer] = []
         self.stats = ResourceStats()
 
-    def book(self, now: float, size: float, job: int) -> float:
-        start = max(now, self.free)
-        end = start + size / self.bw
-        self.free = end
-        s = self.stats
-        s.busy_s += end - start
-        s.waited_s += start - now
-        s.volume_mb += size
-        s.n_chunks += 1
-        s.jobs.add(job)
-        return end
+    def rate_at(self, t: float) -> float:
+        """MB/s in force at time ``t`` (nominal unless a trace overrides)."""
+        return self.trace.at(t) if self.trace is not None else self.bw
 
 
 class ComputeResource:
     """A map/reduce worker node serving queued chunks FIFO across jobs."""
 
-    __slots__ = ("name", "rate", "busy", "current", "queue", "stats")
+    __slots__ = ("name", "rate", "trace", "busy", "current", "current_chunk",
+                 "queue", "stats")
 
-    def __init__(self, name: str, rate: float):
+    def __init__(self, name: str, rate: float, trace=None):
         self.name = name
         self.rate = float(rate)
+        self.trace = trace
         self.busy = False
         #: the job whose chunk is in service (None when idle) — barrier
         #: checks must distinguish "busy with MY chunk" from "busy at all"
         self.current: Optional["_JobRun"] = None
+        self.current_chunk: Optional["_Chunk"] = None
         #: FIFO of (job_state, chunk, enqueue_time)
         self.queue: List[Tuple["_JobRun", "_Chunk", float]] = []
         self.stats = ResourceStats()
+
+    def rate_at(self, t: float) -> float:
+        return self.trace.at(t) if self.trace is not None else self.rate
 
     def enqueue(self, run: "_JobRun", chunk: "_Chunk", now: float) -> None:
         self.queue.append((run, chunk, now))
@@ -213,15 +275,6 @@ class ComputeResource:
                 del self.queue[idx]
                 return
         raise ValueError("chunk not queued at this resource")
-
-    def record_service(self, start: float, enqueued: float, dur: float,
-                       size: float, job: int) -> None:
-        s = self.stats
-        s.busy_s += dur
-        s.waited_s += start - enqueued
-        s.volume_mb += size
-        s.n_chunks += 1
-        s.jobs.add(job)
 
 
 class _Chunk:
@@ -248,6 +301,7 @@ class _JobRun:
         self.plan = plan
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
+        self.seeded = False
 
         self.map_alive = np.ones(nM, dtype=bool)
 
@@ -317,6 +371,18 @@ class ScheduleSimResult:
         """Resources that served chunks of more than one job."""
         return {n: s for n, s in self.resources.items() if s.contended}
 
+    def as_dict(self) -> Dict[str, object]:
+        """Stable nested form mirroring :meth:`SimResult.as_dict` one level
+        up: aggregate makespan, per-job phase timings, per-resource
+        utilization and service accounting — what the schedule benchmarks
+        and ``--json`` emission feed to figures."""
+        return {
+            "makespan": self.makespan,
+            "jobs": [job.as_dict() for job in self.jobs],
+            "utilization": self.utilization(),
+            "resources": {n: s.as_dict() for n, s in self.resources.items()},
+        }
+
     def summary(self) -> str:
         worst = sorted(
             self.resources.items(), key=lambda kv: -kv[1].busy_s
@@ -330,6 +396,22 @@ class ScheduleSimResult:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class ProgressSnapshot:
+    """The executor's observable state at one event time: every job's
+    remaining work bucketed for the re-planner
+    (:class:`repro.core.makespan.JobProgress`) plus the MB queued at each
+    named resource."""
+
+    time: float
+    jobs: Tuple[JobProgress, ...]
+    backlog: Dict[str, float]
+
+    def active_jobs(self) -> Tuple[JobProgress, ...]:
+        """Jobs with remaining work (released or not)."""
+        return tuple(j for j in self.jobs if not j.done)
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -341,6 +423,13 @@ class _MultiSim:
     Events are ``(time, seq, fn_name, args)``; chunk events are routed
     through the shared :class:`LinkResource`/:class:`ComputeResource`
     objects, so concurrent jobs contend for the same capacity entries.
+
+    The engine doubles as the **online control plane's plant**: a driver
+    may interleave :meth:`run_until` (advance to a decision instant),
+    :meth:`snapshot` (observe), :meth:`swap_plan`/:meth:`inject` (steer)
+    and finally :meth:`run` (drain to completion).  :meth:`run` with no
+    intervening steering is byte-for-byte the offline
+    :func:`simulate_schedule`.
     """
 
     def __init__(self, substrate: Substrate, runs: List[_JobRun]):
@@ -350,32 +439,43 @@ class _MultiSim:
         self._heap: List[Tuple[float, int, str, tuple]] = []
         self._seq = itertools.count()
         self._cid = itertools.count()
+        self._started = False
 
         nS, nM, nR = substrate.nS, substrate.nM, substrate.nR
+        trace = substrate.trace_for
         self.push_links = [
-            [LinkResource(f"push[s{i}->m{j}]", substrate.B_sm[i, j])
+            [LinkResource(f"push[s{i}->m{j}]", substrate.B_sm[i, j],
+                          trace(f"push[s{i}->m{j}]"))
              for j in range(nM)]
             for i in range(nS)
         ]
         self.shuf_links = [
-            [LinkResource(f"shuffle[m{j}->r{k}]", substrate.B_mr[j, k])
+            [LinkResource(f"shuffle[m{j}->r{k}]", substrate.B_mr[j, k],
+                          trace(f"shuffle[m{j}->r{k}]"))
              for k in range(nR)]
             for j in range(nM)
         ]
         self.mappers = [
-            ComputeResource(f"map[m{j}]", substrate.C_m[j]) for j in range(nM)
+            ComputeResource(f"map[m{j}]", substrate.C_m[j], trace(f"map[m{j}]"))
+            for j in range(nM)
         ]
         self.reducers = [
-            ComputeResource(f"reduce[r{k}]", substrate.C_r[k]) for k in range(nR)
+            ComputeResource(f"reduce[r{k}]", substrate.C_r[k],
+                            trace(f"reduce[r{k}]"))
+            for k in range(nR)
         ]
 
     # -- infrastructure ----------------------------------------------------
     def at(self, t: float, fn: str, *args):
         heapq.heappush(self._heap, (t, next(self._seq), fn, args))
 
-    def run(self) -> ScheduleSimResult:
-        # jobs sharing a release time seed round-robin (chunk-interleaved
-        # bookings approximate fair-share FIFO on contended links)
+    def _start(self):
+        """Schedule the initial seeds and failures (idempotent) — jobs
+        sharing a release time seed round-robin (chunk-interleaved bookings
+        approximate fair-share FIFO on contended links)."""
+        if self._started:
+            return
+        self._started = True
         for start in sorted({g.cfg.start_time for g in self.runs}):
             group = [g for g in self.runs if g.cfg.start_time == start]
             self.at(start, "seed_jobs", tuple(g.idx for g in group))
@@ -383,10 +483,38 @@ class _MultiSim:
             if g.cfg.fail_mapper is not None:
                 j, tf = g.cfg.fail_mapper
                 self.at(tf, "fail_mapper", g, j)
+
+    def _dispatch(self):
+        t, _, fn, args = heapq.heappop(self._heap)
+        self.now = max(self.now, t)
+        getattr(self, "_ev_" + fn)(*args)
+
+    @property
+    def finished(self) -> bool:
+        return self._started and not self._heap
+
+    def run_until(self, t: float, inclusive: bool = False) -> None:
+        """Advance the clock to ``t``, processing every event strictly
+        before it.  Events *at* ``t`` stay pending, so a decision taken at
+        ``t`` (inject, swap) acts before them — matching the offline event
+        order, where release seeds carry the earliest sequence numbers.
+        ``inclusive`` additionally drains the events *at* ``t`` — the right
+        framing when the decision must observe what happens at that instant
+        (e.g. re-planning *after* a worker failure fires)."""
+        self._start()
+        while self._heap and (
+            self._heap[0][0] < t or (inclusive and self._heap[0][0] == t)
+        ):
+            self._dispatch()
+        self.now = max(self.now, t)
+
+    def run(self) -> ScheduleSimResult:
+        self._start()
         while self._heap:
-            t, _, fn, args = heapq.heappop(self._heap)
-            self.now = max(self.now, t)
-            getattr(self, "_ev_" + fn)(*args)
+            self._dispatch()
+        return self.result()
+
+    def result(self) -> ScheduleSimResult:
         resources: Dict[str, ResourceStats] = {}
         for row in self.push_links:
             for link in row:
@@ -404,13 +532,37 @@ class _MultiSim:
 
     def _rate(self, g: _JobRun, tier: str, idx: int) -> float:
         node = self.mappers[idx] if tier == "m" else self.reducers[idx]
-        return node.rate / g.slowdown(tier, idx)
+        return node.rate_at(self.now) / g.slowdown(tier, idx)
+
+    # -- link pump ---------------------------------------------------------
+    def _link_send(self, link: LinkResource, g: _JobRun, size: float,
+                   fn: str, args: tuple) -> None:
+        link.queue.append(_Transfer(g, size, fn, args, self.now))
+        self._pump_link(link)
+
+    def _pump_link(self, link: LinkResource):
+        if link.busy or not link.queue:
+            return
+        tr = link.queue.pop(0)
+        link.busy = True
+        link.current = tr
+        dur = tr.size / link.rate_at(self.now)
+        link.stats.record(self.now, tr.enqueued, dur, tr.size, tr.run.idx)
+        self.at(self.now + dur, "link_done", link, tr)
+
+    def _ev_link_done(self, link: LinkResource, tr: _Transfer):
+        link.busy = False
+        link.current = None
+        getattr(self, "_ev_" + tr.fn)(*tr.args)
+        self._pump_link(link)
 
     # -- push phase ----------------------------------------------------------
     def _ev_seed_jobs(self, idxs: Tuple[int, ...]):
         """Seed every push chunk of the released jobs, interleaving chunks
         across jobs so shared links serve them round-robin."""
         pending = [(self.runs[i], self._push_ops(self.runs[i])) for i in idxs]
+        for i in idxs:
+            self.runs[i].seeded = True
         cursors = [0] * len(pending)
         live = True
         while live:
@@ -462,14 +614,14 @@ class _MultiSim:
             if not candidates:
                 candidates = [m for m in range(sub.nM) if m != j]
             tgt = candidates[(j + r + 1) % len(candidates)]
-            end = self.push_links[i][tgt].book(self.now, size, g.idx)
             g.wasted_mb += size
             # the write pipeline is not durable (and the push phase not
             # complete) until every replica is on disk: replica writes gate
             # the ORIGIN mapper's input like any other push chunk.
             g.push_inflight[j] += 1
             g.total_push_inflight += 1
-            self.at(end, "replica_done", g, j)
+            self._link_send(self.push_links[i][tgt], g, size,
+                            "replica_done", (g, j))
 
     def _ev_replica_done(self, g: _JobRun, j: int):
         g.push_end = max(g.push_end, self.now)
@@ -483,8 +635,8 @@ class _MultiSim:
                 self._open_map_gate(g, m)
 
     def _send_push(self, g: _JobRun, i: int, j: int, c: _Chunk):
-        end = self.push_links[i][j].book(self.now, c.size, g.idx)
-        self.at(end, "push_arrive", g, i, j, c)
+        self._link_send(self.push_links[i][j], g, c.size,
+                        "push_arrive", (g, i, j, c))
 
     def _ev_push_arrive(self, g: _JobRun, i: int, j: int, c: _Chunk):
         g.push_end = max(g.push_end, self.now)
@@ -527,13 +679,15 @@ class _MultiSim:
         c.started_copies += 1
         node.busy = True
         node.current = g
+        node.current_chunk = c
         dur = c.size / self._rate(g, "m", j) * g.noise()
-        node.record_service(self.now, t_enq, dur, c.size, g.idx)
+        node.stats.record(self.now, t_enq, dur, c.size, g.idx)
         self.at(self.now + dur, "map_done", g, j, c)
 
     def _ev_map_done(self, g: _JobRun, j: int, c: _Chunk):
         self.mappers[j].busy = False
         self.mappers[j].current = None
+        self.mappers[j].current_chunk = None
         if c.done:
             g.wasted_mb += c.size  # lost the speculation race
             self._pump_map(j)
@@ -573,8 +727,8 @@ class _MultiSim:
         g.shuf_gated[j].clear()
 
     def _send_shuffle(self, g: _JobRun, j: int, k: int, sc: _Chunk):
-        end = self.shuf_links[j][k].book(self.now, sc.size, g.idx)
-        self.at(end, "shuffle_arrive", g, j, k, sc)
+        self._link_send(self.shuf_links[j][k], g, sc.size,
+                        "shuffle_arrive", (g, j, k, sc))
 
     def _ev_shuffle_arrive(self, g: _JobRun, j: int, k: int, sc: _Chunk):
         g.shuffle_end = max(g.shuffle_end, self.now)
@@ -614,13 +768,15 @@ class _MultiSim:
             return
         node.busy = True
         node.current = g
+        node.current_chunk = sc
         dur = sc.size / self._rate(g, "r", k) * g.noise()
-        node.record_service(self.now, t_enq, dur, sc.size, g.idx)
+        node.stats.record(self.now, t_enq, dur, sc.size, g.idx)
         self.at(self.now + dur, "reduce_done", g, k, sc)
 
     def _ev_reduce_done(self, g: _JobRun, k: int, sc: _Chunk):
         self.reducers[k].busy = False
         self.reducers[k].current = None
+        self.reducers[k].current_chunk = None
         if not sc.done:
             sc.done = True
             g.reduce_end = max(g.reduce_end, self.now)
@@ -685,8 +841,8 @@ class _MultiSim:
         else:  # speculation: clone, twin-completion resolved via c.done
             c.cloned = True
         # re-fetch the input from the source over the push link
-        end = self.push_links[c.src][j].book(self.now, c.size, g.idx)
-        self.at(end, "stolen_arrive", g, j, c)
+        self._link_send(self.push_links[c.src][j], g, c.size,
+                        "stolen_arrive", (g, j, c))
         return True
 
     def _ev_stolen_arrive(self, g: _JobRun, j: int, c: _Chunk):
@@ -729,10 +885,302 @@ class _MultiSim:
             g.map_unfinished[tgt] += 1
             c.owner = tgt
         g.wasted_mb += c.size
-        end = self.push_links[i][tgt].book(self.now, c.size, g.idx)
         g.push_inflight[tgt] += 1
         g.total_push_inflight += 1
-        self.at(end, "push_arrive", g, i, tgt, c)
+        self._link_send(self.push_links[i][tgt], g, c.size,
+                        "push_arrive", (g, i, tgt, c))
+
+    # -- online control plane: observe ------------------------------------------
+    def snapshot(self) -> ProgressSnapshot:
+        """Capture every job's remaining work at the current event time,
+        bucketed by what a re-planner can still control (see
+        :class:`repro.core.makespan.JobProgress`), plus per-resource queued
+        MB.  Speculative/replica overhead traffic is excluded — it is
+        wasted-work accounting, not residual job volume."""
+        nS, nM, nR = self.sub.nS, self.sub.nM, self.sub.nR
+        jobs = []
+        for g in self.runs:
+            if not g.seeded:
+                prog = dataclasses.replace(
+                    JobProgress.fresh(g.p, job=g.idx), released=False,
+                    map_alive=g.map_alive.copy(),
+                )
+                jobs.append(prog)
+                continue
+            resid_push = np.zeros(g.p.nS)
+            committed_push = np.zeros((g.p.nS, nM))
+            at_mapper = np.zeros(nM)
+            pool = np.zeros(nM)
+            committed_shuffle = np.zeros((nM, nR))
+            at_reducer = np.zeros(nR)
+            def stolen_dest(tr):
+                """Stolen chunks (ownership moved to the thief) are real
+                residual work in flight to a fixed destination; speculative
+                clones are overhead (their originals still sit, counted, in
+                the victim's queue)."""
+                if tr.run is g and tr.fn == "stolen_arrive":
+                    j, c = tr.args[1], tr.args[2]
+                    if c.owner == j and not c.done:
+                        return j, c
+                return None
+
+            for i, row in enumerate(self.push_links):
+                for link in row:
+                    for tr in link.queue:
+                        if tr.run is g and tr.fn == "push_arrive":
+                            c = tr.args[3]
+                            if not c.done:
+                                resid_push[tr.args[1]] += c.size
+                        elif (hit := stolen_dest(tr)) is not None:
+                            committed_push[hit[1].src, hit[0]] += hit[1].size
+                    cur = link.current
+                    if cur is not None and cur.run is g:
+                        if cur.fn == "push_arrive":
+                            c = cur.args[3]
+                            if not c.done:
+                                committed_push[cur.args[1], cur.args[2]] \
+                                    += c.size
+                        elif (hit := stolen_dest(cur)) is not None:
+                            committed_push[hit[1].src, hit[0]] += hit[1].size
+            for j, row in enumerate(self.shuf_links):
+                for link in row:
+                    for tr in link.queue:
+                        if tr.run is g and tr.fn == "shuffle_arrive":
+                            sc = tr.args[3]
+                            if not sc.done:
+                                pool[tr.args[1]] += sc.size
+                    cur = link.current
+                    if cur is not None and cur.run is g \
+                            and cur.fn == "shuffle_arrive":
+                        sc = cur.args[3]
+                        if not sc.done:
+                            committed_shuffle[cur.args[1], cur.args[2]] += sc.size
+            for j, node in enumerate(self.mappers):
+                at_mapper[j] += sum(
+                    c.size for h, c, _ in node.queue if h is g and not c.done
+                )
+                if node.current is g and node.current_chunk is not None \
+                        and not node.current_chunk.done:
+                    at_mapper[j] += node.current_chunk.size
+                at_mapper[j] += sum(c.size for c in g.map_gated[j] if not c.done)
+                pool[j] += sum(sc.size for _, sc in g.shuf_gated[j] if not sc.done)
+            for k, node in enumerate(self.reducers):
+                at_reducer[k] += sum(
+                    sc.size for h, sc, _ in node.queue if h is g and not sc.done
+                )
+                if node.current is g and node.current_chunk is not None \
+                        and not node.current_chunk.done:
+                    at_reducer[k] += node.current_chunk.size
+                at_reducer[k] += sum(sc.size for sc in g.red_gated[k] if not sc.done)
+            prog = JobProgress(
+                job=g.idx, released=True, done=False,
+                resid_push=resid_push, committed_push=committed_push,
+                at_mapper=at_mapper, shuffle_pool=pool,
+                committed_shuffle=committed_shuffle, at_reducer=at_reducer,
+                alpha=float(g.p.alpha), total_push_mb=float(g.p.D.sum()),
+                map_alive=g.map_alive.copy(),
+            )
+            if prog.remaining_mb()["reduce"] <= 1e-9:
+                prog = dataclasses.replace(prog, done=True)
+            jobs.append(prog)
+        backlog: Dict[str, float] = {}
+        for row in self.push_links + self.shuf_links:
+            for link in row:
+                backlog[link.name] = sum(tr.size for tr in link.queue)
+        for node in self.mappers + self.reducers:
+            backlog[node.name] = sum(
+                c.size for _, c, _ in node.queue if not c.done
+            )
+        return ProgressSnapshot(
+            time=self.now, jobs=tuple(jobs), backlog=backlog
+        )
+
+    # -- online control plane: steer ---------------------------------------------
+    def inject(self, jobs: Sequence["_JobEntry"]) -> List[int]:
+        """Admit new jobs mid-flight (streaming arrival).  Jobs released at
+        or before the current time seed immediately — *ahead* of any event
+        already pending at this instant, matching the offline order where
+        release seeds carry the earliest sequence numbers; future releases
+        schedule normally.  Returns the new job indices."""
+        self._start()
+        entries = _normalize_entries(jobs)
+        idxs: List[int] = []
+        for platform, plan, cfg in entries:
+            if not self.sub.compatible(Substrate.of(platform)):
+                raise ValueError(
+                    f"platform {platform.name!r} is not a view of substrate "
+                    f"{self.sub.name!r} — build job platforms with "
+                    "Substrate.view()"
+                )
+            g = _JobRun(len(self.runs), platform, plan, cfg,
+                        self.sub.nM, self.sub.nR)
+            self.runs.append(g)
+            idxs.append(g.idx)
+            if cfg.fail_mapper is not None:
+                # raw fail time, exactly as _start() schedules it offline —
+                # a past time simply fires on the next dispatch (a worker
+                # that died before this job arrived is already dead)
+                j, tf = cfg.fail_mapper
+                self.at(tf, "fail_mapper", g, j)
+        for start in sorted({self.runs[i].cfg.start_time for i in idxs}):
+            group = tuple(
+                i for i in idxs if self.runs[i].cfg.start_time == start
+            )
+            if start <= self.now:
+                # merge with a pending release group at this exact instant:
+                # offline, equal start times seed as ONE round-robin group
+                # (earlier jobs first), and the equivalence must survive an
+                # arrival landing on another job's release time
+                pending: List[int] = []
+                rest = []
+                for ev in self._heap:
+                    if ev[0] == start and ev[2] == "seed_jobs":
+                        pending.extend(ev[3][0])
+                    else:
+                        rest.append(ev)
+                if pending:
+                    self._heap = rest
+                    heapq.heapify(self._heap)
+                self._ev_seed_jobs(tuple(pending) + group)
+            else:
+                self.at(start, "seed_jobs", group)
+        return idxs
+
+    def swap_plan(self, idx: int, plan: ExecutionPlan) -> None:
+        """Replace job ``idx``'s plan for every chunk not yet committed.
+
+        Un-started push transfers are pulled back and redistributed across
+        mappers per the new ``x`` (largest-deficit-first, so discrete chunks
+        track the continuous split); un-started shuffle transfers and gated
+        emissions are pooled per mapper and re-split per the new ``y``.
+        In-service transfers, delivered data and finished work are
+        untouched — the swap only redirects the future.  Barrier gate
+        counters move with the chunks, and gates that the moves leave
+        satisfiable open immediately.  Future shuffle emissions (of not yet
+        mapped chunks) follow the new ``y`` automatically.
+        """
+        g = self.runs[idx]
+        if plan.x.shape != g.plan.x.shape or plan.y.shape != g.plan.y.shape:
+            raise ValueError(
+                f"plan shapes {plan.x.shape}/{plan.y.shape} do not match "
+                f"job {idx}'s {g.plan.x.shape}/{g.plan.y.shape}"
+            )
+        self._start()
+        if not g.seeded:
+            g.plan = plan  # released later: seeding reads the new plan
+            return
+        nM, nR = self.sub.nM, self.sub.nR
+        b0, b1, b2 = g.cfg.barriers
+        x = np.asarray(plan.x)
+        y = np.asarray(plan.y)
+
+        # --- pull back un-started push transfers, re-split per the new x
+        pulled: Dict[int, List[_Chunk]] = {}
+        for i, row in enumerate(self.push_links):
+            for link in row:
+                kept = []
+                for tr in link.queue:
+                    if tr.run is g and tr.fn == "push_arrive":
+                        pulled.setdefault(tr.args[1], []).append(tr.args[3])
+                    else:
+                        kept.append(tr)
+                link.queue = kept
+        drained_j = set()
+        for i, chunks in pulled.items():
+            total = sum(c.size for c in chunks)
+            desired = np.where(
+                (x[i] > 1e-9) & g.map_alive, total * x[i], 0.0
+            )
+            if desired.sum() <= 0:  # new row dead/unreachable: spread alive
+                desired = np.where(g.map_alive, total / max(nM, 1), 0.0)
+            # assign inside the eligible set only — an excluded mapper's
+            # zero deficit must never beat an over-assigned eligible one
+            eligible = np.flatnonzero(desired > 0)
+            if eligible.size == 0:  # every mapper dead: recovery will raise
+                eligible = np.arange(nM)
+            assigned = np.zeros(nM)
+            for c in chunks:
+                j_new = int(eligible[
+                    np.argmax(desired[eligible] - assigned[eligible])
+                ])
+                assigned[j_new] += c.size
+                j_old = c.owner
+                if j_new != j_old:
+                    g.push_inflight[j_old] -= 1
+                    g.push_inflight[j_new] += 1
+                    g.map_unfinished[j_old] -= 1
+                    g.map_unfinished[j_new] += 1
+                    c.owner = j_new
+                    drained_j.add(j_old)
+                self._link_send(self.push_links[i][j_new], g, c.size,
+                                "push_arrive", (g, i, j_new, c))
+
+        # --- pull back un-started / gated shuffle, re-split per the new y
+        pool_sent = np.zeros(nM)
+        pool_gated = np.zeros(nM)
+        drained_k = set()
+        for j, row in enumerate(self.shuf_links):
+            for k, link in enumerate(row):
+                kept = []
+                for tr in link.queue:
+                    if tr.run is g and tr.fn == "shuffle_arrive":
+                        pool_sent[tr.args[1]] += tr.args[3].size
+                        g.shuf_inflight[k] -= 1
+                        g.total_shuf_inflight -= 1
+                        drained_k.add(k)
+                    else:
+                        kept.append(tr)
+                link.queue = kept
+        for j in range(nM):
+            if g.shuf_gated[j]:
+                for k, sc in g.shuf_gated[j]:
+                    pool_gated[j] += sc.size
+                    g.shuf_inflight[k] -= 1
+                    g.total_shuf_inflight -= 1
+                    drained_k.add(k)
+                g.shuf_gated[j].clear()
+
+        g.plan = plan  # future emissions (un-mapped chunks) use the new y
+
+        for j in range(nM):
+            for amount, gated in ((pool_sent[j], False), (pool_gated[j], True)):
+                if amount <= 1e-9:
+                    continue
+                shares = np.where(y > 1e-9, amount * y, 0.0)
+                if shares.sum() <= 0:
+                    shares = np.full(nR, amount / max(nR, 1))
+                shares *= amount / shares.sum()
+                for k in range(nR):
+                    if shares[k] <= 1e-9:
+                        continue
+                    n = max(int(np.ceil(shares[k] / g.cfg.chunk_mb)), 1)
+                    for _ in range(n):
+                        sc = _Chunk(next(self._cid), shares[k] / n, j)
+                        g.shuf_inflight[k] += 1
+                        g.total_shuf_inflight += 1
+                        if gated:
+                            g.shuf_gated[j].append((k, sc))
+                        else:
+                            self._send_shuffle(g, j, k, sc)
+
+        # --- gates the moves left satisfiable open now (mirrors the
+        # arrival/steal paths; totals are unchanged, so 'G' gates only need
+        # re-checking where a bucket drained to zero)
+        for j in drained_j:
+            if b0 == "L" and g.push_inflight[j] == 0:
+                self._open_map_gate(g, j)
+            node = self.mappers[j]
+            if b1 == "L" and g.map_unfinished[j] == 0 \
+                    and not (node.busy and node.current is g):
+                self._open_shuffle_gate(g, j)
+        if b2 == "L":
+            for k in drained_k:
+                if g.shuf_inflight[k] == 0 and self._shuffle_final(g):
+                    self._open_reduce_gate(g, k)
+        elif b2 == "G" and g.total_shuf_inflight == 0 \
+                and self._shuffle_final(g) and drained_k:
+            for k in range(nR):
+                self._open_reduce_gate(g, k)
 
 
 # ---------------------------------------------------------------------------
@@ -745,25 +1193,31 @@ _JobEntry = Union[
 ]
 
 
-def simulate_schedule(
-    jobs: Sequence[_JobEntry],
-    substrate: Optional[Substrate] = None,
-) -> ScheduleSimResult:
-    """Execute N jobs concurrently on one shared substrate.
-
-    ``jobs`` is a sequence of ``(platform, plan)`` or ``(platform, plan,
-    cfg)`` entries whose platforms must all be views of the same substrate
-    (checked via :meth:`Substrate.compatible`); ``substrate`` overrides the
-    inferred one.  Each job keeps its own barriers, chunking, dynamics and
-    release time (``SimConfig.start_time``) — only the link/compute
-    resources are shared.
-    """
-    if not jobs:
-        raise ValueError("simulate_schedule needs at least one job")
+def _normalize_entries(jobs: Sequence[_JobEntry]):
     entries = []
     for entry in jobs:
         platform, plan, cfg = entry if len(entry) == 3 else (*entry, None)
         entries.append((platform, plan, cfg or SimConfig()))
+    return entries
+
+
+def open_schedule(
+    jobs: Sequence[_JobEntry],
+    substrate: Optional[Substrate] = None,
+) -> _MultiSim:
+    """Build (but do not run) the multi-job engine — the entry point of the
+    online control plane.  The returned engine supports ``run_until(t)`` /
+    ``snapshot()`` / ``swap_plan(idx, plan)`` / ``inject(jobs)`` / ``run()``;
+    draining it without steering is exactly :func:`simulate_schedule`.
+
+    ``jobs`` is a sequence of ``(platform, plan)`` or ``(platform, plan,
+    cfg)`` entries whose platforms must all be views of the same substrate
+    (checked via :meth:`Substrate.compatible`); ``substrate`` overrides the
+    inferred one.
+    """
+    if not jobs:
+        raise ValueError("open_schedule needs at least one job")
+    entries = _normalize_entries(jobs)
     sub = substrate if substrate is not None else Substrate.of(entries[0][0])
     for platform, _, _ in entries:
         if not sub.compatible(Substrate.of(platform)):
@@ -775,7 +1229,23 @@ def simulate_schedule(
         _JobRun(idx, platform, plan, cfg, sub.nM, sub.nR)
         for idx, (platform, plan, cfg) in enumerate(entries)
     ]
-    return _MultiSim(sub, runs).run()
+    return _MultiSim(sub, runs)
+
+
+def simulate_schedule(
+    jobs: Sequence[_JobEntry],
+    substrate: Optional[Substrate] = None,
+) -> ScheduleSimResult:
+    """Execute N jobs concurrently on one shared substrate.
+
+    Each job keeps its own barriers, chunking, dynamics and release time
+    (``SimConfig.start_time``) — only the link/compute resources are
+    shared.  This is :func:`open_schedule` drained to completion with no
+    online steering (the frozen-plan baseline of the control plane).
+    """
+    if not jobs:
+        raise ValueError("simulate_schedule needs at least one job")
+    return open_schedule(jobs, substrate).run()
 
 
 def simulate(

@@ -1,0 +1,825 @@
+"""Tests for the online control plane (PR 3): capacity traces, the
+observable/steerable executor (snapshot / plan swap / streaming job
+injection), residual pricing on the shared cost model, warm-started
+re-planning, online policies, the fairness schedule objective, and the
+staggered-release semantics they all build on."""
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.api import Arrival, GeoJob, GeoSchedule, OnlineReport
+from repro.core.makespan import (
+    BARRIERS_GGL,
+    CostModel,
+    JobProgress,
+    makespan,
+)
+from repro.core.optimize import (
+    available_online_policies,
+    get_online_policy,
+    optimize_schedule,
+    register_online_policy,
+    replan,
+)
+from repro.core.plan import ExecutionPlan, uniform_plan
+from repro.core.platform import CapacityTrace, Substrate, planetlab_platform
+from repro.core.simulate import (
+    SimConfig,
+    open_schedule,
+    simulate,
+    simulate_schedule,
+)
+
+ALL_BARRIER_TRIPLES = list(itertools.product("GLP", repeat=3))
+
+OPT = dict(n_restarts=6, steps=150)
+
+
+def pair_substrate(**traces) -> Substrate:
+    """2 sources / 2 mappers / 2 reducers, every capacity distinct enough
+    to exercise routing, optionally with capacity traces attached."""
+    sub = Substrate(
+        B_sm=np.array([[200.0, 150.0], [150.0, 200.0]]),
+        B_mr=np.array([[500.0, 100.0], [500.0, 100.0]]),
+        C_m=np.array([100.0, 100.0]),
+        C_r=np.array([2000.0, 2000.0]),
+        cluster_s=np.array([0, 1]),
+        cluster_m=np.array([0, 1]),
+        cluster_r=np.array([0, 1]),
+        name="online_pair",
+    )
+    return sub.with_traces(traces) if traces else sub
+
+
+def online_drift_substrate(t_drift: float = 105.0) -> Substrate:
+    """The schedule_online scenario fabric: both backbone links into the
+    fast-path reducer r0 degrade 250x at ``t_drift`` (mid-shuffle of the
+    steady job)."""
+    return pair_substrate(**{
+        "shuffle[m0->r0]": CapacityTrace.step(500.0, 2.0, t_drift),
+        "shuffle[m1->r0]": CapacityTrace.step(500.0, 2.0, t_drift),
+    })
+
+
+# ---------------------------------------------------------------------------
+# capacity traces and the drifting substrate
+# ---------------------------------------------------------------------------
+
+
+class TestCapacityTrace:
+    def test_step_function_semantics(self):
+        tr = CapacityTrace(times=(0.0, 10.0, 20.0), values=(5.0, 1.0, 3.0))
+        assert tr.at(0.0) == 5.0
+        assert tr.at(9.999) == 5.0
+        assert tr.at(10.0) == 1.0  # right-open: the new value holds at t
+        assert tr.at(19.0) == 1.0
+        assert tr.at(1e9) == 3.0
+
+    def test_step_constructor(self):
+        tr = CapacityTrace.step(100.0, 2.0, 7.5)
+        assert tr.at(7.4) == 100.0 and tr.at(7.5) == 2.0
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="start at t=0"):
+            CapacityTrace(times=(1.0,), values=(5.0,))
+        with pytest.raises(ValueError, match="strictly increase"):
+            CapacityTrace(times=(0.0, 5.0, 5.0), values=(1.0, 2.0, 3.0))
+        with pytest.raises(ValueError, match="strictly positive"):
+            CapacityTrace(times=(0.0, 1.0), values=(1.0, 0.0))
+        with pytest.raises(ValueError, match="equal-length"):
+            CapacityTrace(times=(0.0,), values=(1.0, 2.0))
+
+    def test_substrate_trace_keys_validated(self):
+        sub = pair_substrate()
+        with pytest.raises(ValueError, match="unknown trace key"):
+            sub.with_traces({"nonsense": CapacityTrace.step(1.0, 2.0, 1.0)})
+        with pytest.raises(ValueError, match="unknown trace key"):
+            # out of range for a 2x2 substrate
+            sub.with_traces({"map[m7]": CapacityTrace.step(1.0, 2.0, 1.0)})
+
+    def test_substrate_at_folds_traces(self):
+        sub = online_drift_substrate(t_drift=50.0)
+        before, after = sub.at(49.0), sub.at(50.0)
+        assert before.B_mr[0, 0] == 500.0 and before.B_mr[1, 0] == 500.0
+        assert after.B_mr[0, 0] == 2.0 and after.B_mr[1, 0] == 2.0
+        # untraced entries unchanged; result is a plain substrate
+        assert after.B_mr[0, 1] == 100.0
+        assert after.traces is None
+        assert sub.drift_times() == (50.0,)
+
+    def test_residual_drops_traces(self):
+        sub = online_drift_substrate()
+        assert sub.residual(map_frac=np.array([0.5, 0.0])).traces is None
+
+    def test_executor_applies_drift_to_queued_chunks(self):
+        """A transfer that starts after the step serves at the new rate;
+        already-started service keeps its rate."""
+        sub = pair_substrate(**{
+            "push[s0->m0]": CapacityTrace.step(200.0, 1.0, 5.0)
+        })
+        v = sub.view(np.array([2000.0, 0.0]), 1.0)
+        plan = ExecutionPlan(x=np.array([[1.0, 0.0], [0.5, 0.5]]),
+                             y=np.array([0.5, 0.5]))
+        cfg = SimConfig(barriers=BARRIERS_GGL, chunk_mb=100.0)
+        nominal = pair_substrate().view(np.array([2000.0, 0.0]), 1.0)
+        base = simulate(nominal, plan, cfg).makespan
+        drifted = simulate(v, plan, cfg).makespan
+        assert drifted > base * 5  # ~1500 MB queued at 1 MB/s
+
+
+# ---------------------------------------------------------------------------
+# SimConfig validation (negative values used to flow into the event loop)
+# ---------------------------------------------------------------------------
+
+
+class TestSimConfigValidation:
+    def test_negative_start_time_rejected(self):
+        with pytest.raises(ValueError, match="start_time"):
+            SimConfig(start_time=-1.0)
+
+    def test_zero_replication_rejected(self):
+        with pytest.raises(ValueError, match="replication"):
+            SimConfig(replication=0)
+        with pytest.raises(ValueError, match="replication"):
+            SimConfig(replication=-2)
+
+    def test_valid_boundaries_accepted(self):
+        assert SimConfig(start_time=0.0, replication=1).replication == 1
+
+
+# ---------------------------------------------------------------------------
+# the acceptance bar: static online == the frozen offline pipeline
+# ---------------------------------------------------------------------------
+
+
+class TestStaticEquivalence:
+    @pytest.mark.parametrize("barriers", ALL_BARRIER_TRIPLES,
+                             ids=["".join(b) for b in ALL_BARRIER_TRIPLES])
+    def test_static_reproduces_offline_pipeline(self, barriers):
+        """`static` run_online == simulate_schedule phase-for-phase (1e-9)
+        on every barrier triple, with a streaming arrival and capacity
+        drift in play — the control loop without control is exactly the
+        offline pipeline."""
+        sub = online_drift_substrate(t_drift=40.0)
+        v1 = sub.view(np.array([3000.0, 3000.0]), 1.0, name="steady")
+        v2 = sub.view(np.array([1500.0, 1500.0]), 1.0, name="late")
+        plan1, plan2 = uniform_plan(v1), uniform_plan(v2)
+        cfg = SimConfig(barriers=barriers, chunk_mb=256.0)
+        t_arrival = 13.7
+
+        sched = GeoSchedule([GeoJob(v1).with_plan(plan1, barriers)]).with_plans()
+        report = sched.run_online(
+            policy="static",
+            arrivals=[Arrival(GeoJob(v2).with_plan(plan2, barriers),
+                              t_arrival)],
+            cfg=cfg,
+        )
+        ref = simulate_schedule(
+            [(v1, plan1, cfg),
+             (v2, plan2, dataclasses.replace(cfg, start_time=t_arrival))],
+            substrate=sub,
+        )
+        assert len(report.sim.jobs) == len(ref.jobs) == 2
+        for got, want in zip(report.sim.jobs, ref.jobs):
+            for phase, t in want.phases().items():
+                assert abs(got.phases()[phase] - t) <= 1e-9, phase
+        assert abs(report.makespan_online - ref.makespan) <= 1e-9
+        # same plans: nothing was swapped, the objects themselves ran
+        assert report.swaps == ()
+        assert report.plans[0] is plan1 and report.plans[1] is plan2
+        # and the report's own static baseline is the run itself
+        assert report.makespan_online == report.makespan_static
+
+
+# ---------------------------------------------------------------------------
+# snapshots and residual pricing
+# ---------------------------------------------------------------------------
+
+
+class TestSnapshot:
+    def setup_engine(self, barriers=BARRIERS_GGL, start_time=0.0):
+        sub = pair_substrate()
+        v = sub.view(np.array([2000.0, 1000.0]), 1.5, name="observed")
+        plan = uniform_plan(v)
+        cfg = SimConfig(barriers=barriers, chunk_mb=100.0,
+                        start_time=start_time)
+        return sub, v, plan, open_schedule([(v, plan, cfg)], substrate=sub)
+
+    def test_unreleased_job_is_fresh(self):
+        sub, v, plan, eng = self.setup_engine(start_time=100.0)
+        eng.run_until(1.0)
+        jp = eng.snapshot().jobs[0]
+        assert not jp.released and not jp.done
+        np.testing.assert_allclose(jp.resid_push, v.D)
+        assert jp.remaining_mb()["push"] == pytest.approx(3000.0)
+        assert jp.completion()["push"] == pytest.approx(0.0)
+
+    def test_volume_conservation_over_time(self):
+        """At every observation instant the residual map-input volume never
+        exceeds the total and only shrinks as the run progresses."""
+        sub, v, plan, eng = self.setup_engine()
+        total = float(v.D.sum())
+        horizon = simulate(v, plan,
+                           SimConfig(barriers=BARRIERS_GGL,
+                                     chunk_mb=100.0)).makespan
+        prev = np.inf
+        for frac in (0.1, 0.3, 0.5, 0.8, 1.1):
+            eng.run_until(horizon * frac)
+            jp = eng.snapshot().jobs[0]
+            rem = jp.remaining_mb()
+            assert rem["map"] <= total + 1e-6
+            assert rem["map"] <= prev + 1e-6
+            prev = rem["map"]
+            comp = jp.completion()
+            assert all(0.0 <= c <= 1.0 for c in comp.values())
+        assert jp.done and rem["reduce"] == pytest.approx(0.0)
+
+    def test_fresh_residual_prices_like_plan(self):
+        """The zero-progress snapshot priced through price_residual equals
+        price_plan bit-for-bit on every barrier triple — online and offline
+        share one cost model."""
+        p = planetlab_platform(4, alpha=1.3, seed=2)
+        plan = uniform_plan(p)
+        fresh = JobProgress.fresh(p)
+        for barriers in ALL_BARRIER_TRIPLES:
+            cm = CostModel(p, barriers)
+            assert cm.residual_makespan(fresh, plan) == pytest.approx(
+                cm.makespan(plan), abs=1e-9
+            )
+
+    def test_residual_shrinks_with_progress(self):
+        sub, v, plan, eng = self.setup_engine()
+        cm = CostModel(v, BARRIERS_GGL)
+        full = cm.residual_makespan(JobProgress.fresh(v), plan)
+        horizon = simulate(v, plan,
+                           SimConfig(barriers=BARRIERS_GGL,
+                                     chunk_mb=100.0)).makespan
+        eng.run_until(horizon * 0.6)
+        mid = cm.residual_makespan(eng.snapshot().jobs[0], plan)
+        assert 0.0 < mid < full
+
+    def test_backlog_accounting(self):
+        sub, v, plan, eng = self.setup_engine()
+        eng.run_until(0.5)
+        snap = eng.snapshot()
+        assert set(snap.backlog) == set(sub.resources())
+        assert sum(snap.backlog.values()) > 0
+        assert snap.time == 0.5
+
+
+# ---------------------------------------------------------------------------
+# steering: plan swap and streaming injection
+# ---------------------------------------------------------------------------
+
+
+class TestSwapAndInject:
+    @pytest.mark.parametrize("barriers", [("G", "G", "L"), ("G", "L", "L"),
+                                          ("P", "P", "P"), ("L", "G", "G")],
+                             ids=lambda b: "".join(b))
+    def test_identity_swap_preserves_completion(self, barriers):
+        """Swapping a plan for itself mid-run re-routes nothing of
+        substance: the job still completes and every alpha-expanded byte
+        still reaches the reducers."""
+        sub = pair_substrate()
+        v = sub.view(np.array([2000.0, 1000.0]), 1.0)
+        plan = uniform_plan(v)
+        cfg = SimConfig(barriers=barriers, chunk_mb=100.0)
+        ref = simulate(v, plan, cfg)
+        eng = open_schedule([(v, plan, cfg)], substrate=sub)
+        eng.run_until(ref.makespan * 0.4)
+        eng.swap_plan(0, ExecutionPlan(x=plan.x.copy(), y=plan.y.copy(),
+                                       meta="identity"))
+        res = eng.run()
+        sim = res.jobs[0]
+        assert np.isfinite(sim.makespan) and sim.makespan > 0
+        reduced = sum(s.volume_mb for n, s in res.resources.items()
+                      if n.startswith("reduce["))
+        assert reduced == pytest.approx(3000.0)
+
+    def test_swap_reroutes_around_degraded_link(self):
+        """The point of the whole machinery: when a link collapses under a
+        frozen plan, swapping a plan that routes around it recovers most of
+        the loss."""
+        sub = pair_substrate(**{
+            "push[s0->m0]": CapacityTrace.step(200.0, 1.0, 5.0)
+        })
+        v = sub.view(np.array([4000.0, 0.0]), 1.0)
+        pinned = ExecutionPlan(x=np.array([[1.0, 0.0], [0.5, 0.5]]),
+                               y=np.array([0.5, 0.5]))
+        rerouted = ExecutionPlan(x=np.array([[0.0, 1.0], [0.5, 0.5]]),
+                                 y=np.array([0.5, 0.5]))
+        cfg = SimConfig(barriers=BARRIERS_GGL, chunk_mb=100.0)
+        frozen = simulate(v, pinned, cfg).makespan
+        eng = open_schedule([(v, pinned, cfg)], substrate=sub)
+        eng.run_until(5.0)
+        eng.swap_plan(0, rerouted)
+        online = eng.run().jobs[0].makespan
+        assert online < frozen * 0.2
+
+    def test_swap_before_release_replaces_plan_wholesale(self):
+        sub = pair_substrate()
+        v = sub.view(np.array([1000.0, 1000.0]), 1.0)
+        cfg = SimConfig(barriers=BARRIERS_GGL, start_time=50.0)
+        better = ExecutionPlan(x=np.array([[1.0, 0.0], [0.0, 1.0]]),
+                               y=np.array([0.5, 0.5]))
+        eng = open_schedule([(v, uniform_plan(v), cfg)], substrate=sub)
+        eng.run_until(10.0)
+        eng.swap_plan(0, better)
+        res = eng.run()
+        ref = simulate(v, better, cfg)
+        assert res.jobs[0].phases() == ref.phases()
+
+    def test_swap_shape_mismatch_raises(self):
+        sub = pair_substrate()
+        v = sub.view(np.array([1000.0, 1000.0]), 1.0)
+        eng = open_schedule([(v, uniform_plan(v))], substrate=sub)
+        with pytest.raises(ValueError, match="do not match"):
+            eng.swap_plan(0, ExecutionPlan(x=np.ones((3, 3)) / 3,
+                                           y=np.ones(3) / 3))
+
+    def test_inject_matches_offline_release(self):
+        """Mid-run injection is event-identical to an offline start_time
+        release (the streaming-arrival acceptance invariant)."""
+        sub = pair_substrate()
+        a = sub.view(np.array([2000.0, 1000.0]), 1.0, name="a")
+        b = sub.view(np.array([500.0, 500.0]), 1.0, name="b")
+        cfg = SimConfig(barriers=BARRIERS_GGL, chunk_mb=100.0)
+        late = dataclasses.replace(cfg, start_time=7.3)
+        ref = simulate_schedule([(a, uniform_plan(a), cfg),
+                                 (b, uniform_plan(b), late)], substrate=sub)
+        eng = open_schedule([(a, uniform_plan(a), cfg)], substrate=sub)
+        eng.run_until(7.3)
+        eng.inject([(b, uniform_plan(b), late)])
+        got = eng.run()
+        for x, y in zip(got.jobs, ref.jobs):
+            assert x.phases() == y.phases()
+
+    def test_inject_at_pending_release_merges_seed_group(self):
+        """An injection landing exactly on another job's release time joins
+        its round-robin seed group, matching the offline grouping (shared
+        links must interleave the jobs' chunks, not serve the newcomer
+        first)."""
+        sub = pair_substrate()
+        a = sub.view(np.array([2000.0, 1000.0]), 1.0, name="held")
+        b = sub.view(np.array([1500.0, 500.0]), 1.0, name="joiner")
+        t0 = 25.0
+        cfg = SimConfig(barriers=BARRIERS_GGL, chunk_mb=50.0, start_time=t0)
+        ref = simulate_schedule([(a, uniform_plan(a), cfg),
+                                 (b, uniform_plan(b), cfg)], substrate=sub)
+        eng = open_schedule([(a, uniform_plan(a), cfg)], substrate=sub)
+        eng.run_until(t0)
+        eng.inject([(b, uniform_plan(b), cfg)])
+        got = eng.run()
+        for x, y in zip(got.jobs, ref.jobs):
+            assert x.phases() == y.phases()
+
+    def test_swap_never_routes_pulled_chunks_to_dead_mapper(self):
+        """The largest-deficit assignment stays inside the eligible set:
+        even when the new plan keeps weight on a dead mapper, pulled chunks
+        go to survivors (no pointless push->recover round trips)."""
+        sub = pair_substrate()
+        v = sub.view(np.array([4000.0, 2000.0]), 1.0)
+        cfg = SimConfig(barriers=BARRIERS_GGL, chunk_mb=50.0,
+                        fail_mapper=(1, 3.0))
+        eng = open_schedule([(v, uniform_plan(v), cfg)], substrate=sub)
+        eng.run_until(3.0, inclusive=True)  # the worker is dead now
+        recovered_at_fail = eng.runs[0].recovered
+        # committed = transfers already in service toward the dead mapper
+        in_service = sum(
+            1 for row in eng.push_links for link in row
+            if link.current is not None
+            and link.current.fn == "push_arrive"
+            and link.current.args[2] == 1
+        )
+        # new plan still puts 70% on the dead mapper — the swap must ignore it
+        eng.swap_plan(0, ExecutionPlan(x=np.array([[0.3, 0.7], [0.3, 0.7]]),
+                                       y=np.array([0.5, 0.5])))
+        # nothing re-routed by the swap is queued toward the dead mapper
+        for i, row in enumerate(eng.push_links):
+            assert not any(tr.fn == "push_arrive" for tr in row[1].queue)
+        res = eng.run()
+        # only the chunks already committed at fail time needed recovery
+        assert res.jobs[0].recovered_chunks == recovered_at_fail + in_service
+        assert np.isfinite(res.jobs[0].makespan)
+
+    def test_replan_routes_around_dead_mapper(self):
+        """JobProgress carries worker liveness and replan() degrades dead
+        mappers' capacity, so the adopted plan moves x mass to survivors."""
+        sub = pair_substrate()
+        v = sub.view(np.array([4000.0, 2000.0]), 1.0)
+        cfg = SimConfig(barriers=BARRIERS_GGL, chunk_mb=50.0,
+                        fail_mapper=(0, 5.0))
+        eng = open_schedule([(v, uniform_plan(v), cfg)], substrate=sub)
+        eng.run_until(5.0, inclusive=True)
+        jp = eng.snapshot().jobs[0]
+        assert jp.map_alive is not None and not jp.map_alive[0]
+        res = replan(sub.view(v.D, v.alpha), uniform_plan(v), progress=jp,
+                     barriers=BARRIERS_GGL, **OPT)
+        assert res.plan is not None
+        # the re-routable residual concentrates on the surviving mapper
+        assert res.plan.x[:, 1].mean() > 0.9
+
+    def test_inject_mismatched_substrate_raises(self):
+        sub = pair_substrate()
+        v = sub.view(np.array([1000.0, 1000.0]), 1.0)
+        eng = open_schedule([(v, uniform_plan(v))], substrate=sub)
+        other = planetlab_platform(2, seed=0)
+        with pytest.raises(ValueError, match="not a view"):
+            eng.inject([(other, uniform_plan(other))])
+
+    def test_open_schedule_empty_raises(self):
+        with pytest.raises(ValueError, match="at least one job"):
+            open_schedule([])
+
+
+# ---------------------------------------------------------------------------
+# warm-started re-planning
+# ---------------------------------------------------------------------------
+
+
+class TestReplan:
+    def test_never_worse_than_incumbent(self):
+        """The incumbent competes: replan returns the incumbent plan object
+        itself when nothing beats it, and never a modeled-worse plan."""
+        sub = pair_substrate()
+        v = sub.view(np.array([2000.0, 1000.0]), 1.0)
+        cm = CostModel(v, BARRIERS_GGL)
+        # a strong incumbent on a static platform: hard to beat
+        strong = GeoJob(v).plan("e2e_multi", barriers=BARRIERS_GGL,
+                                **OPT).planned.plan
+        res = replan(v, strong, barriers=BARRIERS_GGL, **OPT)
+        assert res.makespan <= cm.makespan(strong) + 1e-9
+
+    def test_improves_on_degraded_view(self):
+        """Re-planning against the post-drift view routes the residual
+        around the degraded links (warm-started from the incumbent)."""
+        sub = online_drift_substrate(t_drift=5.0)
+        v = sub.view(np.array([8000.0, 8000.0]), 1.0)
+        # incumbent concentrates shuffle on r0 — optimal nominally, fatal
+        # after the drift
+        incumbent = ExecutionPlan(x=uniform_plan(v).x,
+                                  y=np.array([1.0, 0.0]))
+        cfg = SimConfig(barriers=BARRIERS_GGL, chunk_mb=100.0)
+        eng = open_schedule([(v, incumbent, cfg)], substrate=sub)
+        eng.run_until(60.0)  # past the drift, mid-run
+        jp = eng.snapshot().jobs[0]
+        view = sub.at(60.0).view(v.D, v.alpha)
+        cm = CostModel(view, BARRIERS_GGL)
+        before = cm.residual_makespan(jp, incumbent)
+        res = replan(view, incumbent, progress=jp, barriers=BARRIERS_GGL,
+                     **OPT)
+        assert res.plan is not incumbent
+        assert res.makespan < before * 0.5
+        # the adopted y routes away from the degraded r0 links
+        assert res.plan.y[0] < 0.5
+
+    def test_result_is_residual_priced(self):
+        sub = pair_substrate()
+        v = sub.view(np.array([2000.0, 1000.0]), 1.0)
+        plan = uniform_plan(v)
+        res = replan(v, plan, progress=None, barriers=BARRIERS_GGL, **OPT)
+        cm = CostModel(v, BARRIERS_GGL)
+        assert res.makespan == pytest.approx(
+            cm.residual_makespan(JobProgress.fresh(v), res.plan), abs=1e-9
+        )
+        assert res.mode == "replan"
+
+
+# ---------------------------------------------------------------------------
+# online policies and the closed loop
+# ---------------------------------------------------------------------------
+
+
+def _drift_jobs():
+    sub = online_drift_substrate(t_drift=105.0)
+    steady = GeoJob(sub.view(np.array([8000.0, 8000.0]), 1.0, name="steady"))
+    late = GeoJob(sub.view(np.array([4000.0, 4000.0]), 1.0, name="late"))
+    return sub, steady, late
+
+
+class TestOnlinePolicies:
+    def test_builtin_policies_registered(self):
+        assert {"static", "reactive", "horizon"} <= set(
+            available_online_policies()
+        )
+
+    def test_unknown_policy_raises(self):
+        with pytest.raises(ValueError, match="online policy must be one of"):
+            get_online_policy("no_such_policy")
+
+    def test_duplicate_registration_raises(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_online_policy("static", lambda *a: False)
+
+    def test_policy_semantics(self):
+        static = get_online_policy("static")
+        reactive = get_online_policy("reactive")
+        horizon = get_online_policy("horizon")
+        for kind in ("arrival", "drift", "failure", "tick"):
+            assert static(kind, None) is False
+        assert reactive("drift", None) and reactive("arrival", None)
+        assert reactive("failure", None) and not reactive("tick", None)
+        assert horizon("tick", None) and not horizon("drift", None)
+
+    def test_reactive_beats_frozen_joint_by_15pct(self):
+        """THE acceptance scenario: a backbone link degrades mid-shuffle and
+        a second job arrives mid-map.  The frozen joint plan (clairvoyant
+        about the arrival, blind to the drift) crawls; reactive re-planning
+        recovers >= 15% of the aggregate makespan."""
+        sub, steady, late = _drift_jobs()
+        cfg = SimConfig(barriers=BARRIERS_GGL)
+        t_arrival = 50.0
+
+        # frozen joint: both jobs planned together offline (it even knows
+        # the arrival's release time will be enforced) on nominal capacity
+        frozen = GeoSchedule([steady, late]).plan(
+            "joint", mode="e2e_multi", barriers=BARRIERS_GGL, **OPT
+        )
+        frozen_sim = simulate_schedule(
+            [(steady.platform, frozen.planned.plans[0], cfg),
+             (late.platform, frozen.planned.plans[1],
+              dataclasses.replace(cfg, start_time=t_arrival))],
+            substrate=sub,
+        )
+
+        # reactive: steady planned offline, late streams in at t=50
+        online = GeoSchedule([steady]).plan(
+            "independent", mode="e2e_multi", barriers=BARRIERS_GGL, **OPT
+        ).run_online(
+            policy="reactive",
+            arrivals=[Arrival(GeoJob(late.platform).with_plan(
+                frozen.planned.plans[1], BARRIERS_GGL), t_arrival)],
+            cfg=cfg, **OPT,
+        )
+        assert isinstance(online, OnlineReport)
+        # the drift fired a decision and at least one swap happened
+        assert any(d.event == "drift" for d in online.decisions)
+        assert len(online.swaps) >= 1
+        gain = 1.0 - online.makespan_online / frozen_sim.makespan
+        assert gain >= 0.15, (
+            f"reactive {online.makespan_online:.0f}s vs frozen joint "
+            f"{frozen_sim.makespan:.0f}s — only {gain:.0%}"
+        )
+        # and against its own matched frozen baseline too
+        assert online.improvement >= 0.15
+
+    def test_horizon_policy_recovers_via_ticks(self):
+        sub, steady, late = _drift_jobs()
+        cfg = SimConfig(barriers=BARRIERS_GGL)
+        report = GeoSchedule([steady]).plan(
+            "independent", mode="e2e_multi", barriers=BARRIERS_GGL, **OPT
+        ).run_online(
+            policy="horizon",
+            arrivals=[Arrival(GeoJob(late.platform).with_plan(
+                uniform_plan(late.platform), BARRIERS_GGL), 50.0)],
+            cfg=cfg, replan_dt=40.0, **OPT,
+        )
+        assert any(d.event == "tick" for d in report.decisions)
+        assert report.improvement >= 0.15
+
+    def test_horizon_requires_replan_dt(self):
+        sub, steady, late = _drift_jobs()
+        sched = GeoSchedule([steady]).plan(
+            "independent", mode="uniform", barriers=BARRIERS_GGL
+        )
+        with pytest.raises(ValueError, match="replan_dt"):
+            sched.run_online(policy="horizon",
+                             cfg=SimConfig(barriers=BARRIERS_GGL))
+        with pytest.raises(ValueError, match="replan_dt must be > 0"):
+            sched.run_online(policy="horizon", replan_dt=0.0,
+                             cfg=SimConfig(barriers=BARRIERS_GGL))
+
+    def test_reactive_failure_decision_sees_post_failure_state(self):
+        """The failure decision fires AFTER the worker dies: the snapshot's
+        residual already holds the recovered chunks in flight to surviving
+        mappers, the replan/swap routes around the dead node, and the run
+        completes no slower than the frozen recovery path."""
+        sub = pair_substrate()
+        v = sub.view(np.array([4000.0, 2000.0]), 1.0, name="doomed")
+        cfg = SimConfig(barriers=BARRIERS_GGL, chunk_mb=100.0,
+                        fail_mapper=(0, 10.0))
+        sched = GeoSchedule(
+            [GeoJob(v).with_plan(uniform_plan(v), BARRIERS_GGL)]
+        ).with_plans()
+        report = sched.run_online(policy="reactive", cfg=cfg, **OPT)
+        fails = [d for d in report.decisions if d.event == "failure"]
+        assert len(fails) == 1 and fails[0].time == 10.0
+        assert np.isfinite(report.makespan_online)
+        # static baseline ran the same failure; online never does worse
+        # than frozen by more than noise from re-chunked transfers
+        assert report.makespan_online <= report.makespan_static * 1.05
+
+    def test_custom_policy_plugs_in(self):
+        from repro.core import optimize as O
+
+        seen = []
+
+        @register_online_policy("test_never")
+        def _never(kind, snapshot):
+            seen.append(kind)
+            return False
+
+        try:
+            sub, steady, late = _drift_jobs()
+            report = GeoSchedule([steady]).plan(
+                "independent", mode="uniform", barriers=BARRIERS_GGL
+            ).run_online(
+                policy="test_never",
+                arrivals=[Arrival(GeoJob(late.platform).with_plan(
+                    uniform_plan(late.platform), BARRIERS_GGL), 50.0)],
+                cfg=SimConfig(barriers=BARRIERS_GGL),
+            )
+            assert "drift" in seen and "arrival" in seen
+            assert report.swaps == ()  # declined every decision
+            assert report.makespan_online == report.makespan_static
+        finally:
+            del O._ONLINE_POLICIES["test_never"]
+
+    def test_timeline_and_summary_render(self):
+        sub, steady, late = _drift_jobs()
+        report = GeoSchedule([steady]).plan(
+            "independent", mode="uniform", barriers=BARRIERS_GGL
+        ).run_online(policy="static", cfg=SimConfig(barriers=BARRIERS_GGL))
+        assert "online[static]" in report.summary()
+        assert report.timeline() == "(no decisions)"
+
+
+# ---------------------------------------------------------------------------
+# fairness objective (min-max slowdown)
+# ---------------------------------------------------------------------------
+
+
+def asymmetric_views():
+    sub = Substrate(
+        B_sm=np.array([[10_000.0, 1.0], [10_000.0, 10_000.0]]),
+        B_mr=np.full((2, 2), 10_000.0),
+        C_m=np.array([50.0, 50.0]),
+        C_r=np.array([10_000.0, 10_000.0]),
+        cluster_s=np.array([0, 1]),
+        cluster_m=np.array([0, 1]),
+        cluster_r=np.array([0, 1]),
+        name="contended_pair",
+    )
+    return [sub.view(np.array([40_000.0, 0.0]), 1.0, name="pinned"),
+            sub.view(np.array([0.0, 40_000.0]), 1.0, name="flexible")]
+
+
+class TestFairnessObjective:
+    def max_slowdown(self, views, result, barriers, opts):
+        """Per-job contended makespan over its independent-plan sole-tenant
+        makespan (the same references the joint solver uses)."""
+        indep = optimize_schedule(views, policy="independent",
+                                  barriers=barriers, **opts)
+        refs = np.array([
+            makespan(v, r.plan, barriers=barriers)
+            for v, r in zip(views, indep.results)
+        ])
+        spans = np.array([r.makespan for r in result.results])
+        return float(np.max(spans / np.maximum(refs, 1e-9)))
+
+    def test_fairness_never_increases_max_slowdown(self):
+        """The satellite acceptance: on the asymmetric-access scenario the
+        fairness objective's max slowdown is no worse than joint's."""
+        views = asymmetric_views()
+        opts = dict(mode="e2e_multi", n_restarts=8, steps=250)
+        joint = optimize_schedule(views, policy="joint",
+                                  barriers=BARRIERS_GGL, **opts)
+        fair = optimize_schedule(views, policy="joint",
+                                 barriers=BARRIERS_GGL,
+                                 objective="min_max_slowdown", **opts)
+        sd_joint = self.max_slowdown(views, joint, BARRIERS_GGL, opts)
+        sd_fair = self.max_slowdown(views, fair, BARRIERS_GGL, opts)
+        assert sd_fair <= sd_joint + 1e-9
+        assert fair.objective == "min_max_slowdown"
+        assert joint.objective == "makespan"
+
+    def test_unknown_objective_rejected(self):
+        views = asymmetric_views()
+        with pytest.raises(ValueError, match="objective must be one of"):
+            optimize_schedule(views, policy="joint", objective="bogus")
+
+    def test_objective_requires_policy_support(self):
+        views = asymmetric_views()
+        with pytest.raises(ValueError, match="does not take an objective"):
+            optimize_schedule(views, policy="independent", mode="uniform",
+                              objective="min_max_slowdown")
+
+
+# ---------------------------------------------------------------------------
+# staggered releases under contention (start_time + shared resources)
+# ---------------------------------------------------------------------------
+
+
+class TestStaggeredRelease:
+    def test_no_capacity_consumed_before_release(self):
+        """A job released at t>0 leaves every resource untouched before its
+        release: first service timestamps respect the offset, and the
+        absolute-horizon utilization stays consistent."""
+        sub = pair_substrate()
+        v = sub.view(np.array([2000.0, 1000.0]), 1.0)
+        t0 = 200.0
+        res = simulate_schedule(
+            [(v, uniform_plan(v),
+              SimConfig(barriers=BARRIERS_GGL, start_time=t0))],
+            substrate=sub,
+        )
+        for name, stats in res.resources.items():
+            if stats.n_chunks == 0:
+                continue
+            assert stats.first_busy_s >= t0, name
+            assert stats.busy_s <= res.makespan - t0 + 1e-9, name
+        util = res.utilization()
+        assert all(0.0 <= u <= 1.0 + 1e-9 for u in util.values())
+
+    def test_offset_shifts_solo_run_exactly(self):
+        sub = pair_substrate()
+        v = sub.view(np.array([2000.0, 1000.0]), 1.0)
+        plan = uniform_plan(v)
+        base = simulate(v, plan, SimConfig(barriers=BARRIERS_GGL))
+        late = simulate(v, plan,
+                        SimConfig(barriers=BARRIERS_GGL, start_time=123.0))
+        assert late.makespan == pytest.approx(base.makespan + 123.0,
+                                              rel=1e-12)
+        for stats in simulate_schedule(
+            [(v, plan, SimConfig(barriers=BARRIERS_GGL, start_time=123.0))],
+            substrate=sub,
+        ).resources.values():
+            if stats.n_chunks:
+                assert stats.last_busy_s <= base.makespan + 123.0 + 1e-9
+
+    def test_staggered_contention_orders_service(self):
+        """Two jobs staggered on shared links: the late job never consumes
+        capacity before release, the early job is never delayed by work
+        that has not been released yet."""
+        sub = pair_substrate()
+        a = sub.view(np.array([2000.0, 1000.0]), 1.0, name="early")
+        b = sub.view(np.array([2000.0, 1000.0]), 1.0, name="late")
+        plan_a, plan_b = uniform_plan(a), uniform_plan(b)
+        solo_a = simulate(a, plan_a, SimConfig(barriers=BARRIERS_GGL))
+        t0 = solo_a.makespan + 10.0  # release b after a has fully drained
+        sched = simulate_schedule(
+            [(a, plan_a, SimConfig(barriers=BARRIERS_GGL)),
+             (b, plan_b, SimConfig(barriers=BARRIERS_GGL, start_time=t0))],
+            substrate=sub,
+        )
+        # a sees zero contention; b runs exactly as if alone, offset by t0
+        for phase, want in solo_a.phases().items():
+            assert sched.jobs[0].phases()[phase] == pytest.approx(want)
+        solo_b = simulate(b, plan_b, SimConfig(barriers=BARRIERS_GGL))
+        assert sched.jobs[1].makespan == pytest.approx(
+            solo_b.makespan + t0, rel=1e-12
+        )
+        # resources served both jobs, in order
+        for name, stats in sched.resources.items():
+            if stats.n_chunks:
+                assert stats.first_busy_s < t0
+
+    def test_overlapping_release_contends(self):
+        sub = pair_substrate()
+        a = sub.view(np.array([4000.0, 2000.0]), 1.0, name="early")
+        b = sub.view(np.array([4000.0, 2000.0]), 1.0, name="overlap")
+        plan_a, plan_b = uniform_plan(a), uniform_plan(b)
+        solo_b = simulate(b, plan_b, SimConfig(barriers=BARRIERS_GGL))
+        t0 = 5.0
+        sched = simulate_schedule(
+            [(a, plan_a, SimConfig(barriers=BARRIERS_GGL)),
+             (b, plan_b, SimConfig(barriers=BARRIERS_GGL, start_time=t0))],
+            substrate=sub,
+        )
+        assert len(sched.contended()) > 0
+        assert sched.jobs[1].makespan >= solo_b.makespan + t0 - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# ScheduleSimResult.as_dict (figure / JSON emission parity with SimResult)
+# ---------------------------------------------------------------------------
+
+
+class TestScheduleAsDict:
+    def test_shape_and_content(self):
+        sub = pair_substrate()
+        a = sub.view(np.array([1000.0, 500.0]), 1.0)
+        b = sub.view(np.array([500.0, 1000.0]), 1.0)
+        res = simulate_schedule([(a, uniform_plan(a)), (b, uniform_plan(b))],
+                                substrate=sub)
+        d = res.as_dict()
+        assert set(d) == {"makespan", "jobs", "utilization", "resources"}
+        assert d["makespan"] == res.makespan
+        assert len(d["jobs"]) == 2
+        for job_dict, sim in zip(d["jobs"], res.jobs):
+            assert job_dict == sim.as_dict()
+        assert set(d["utilization"]) == set(sub.resources())
+        assert set(d["resources"]) == set(sub.resources())
+        for stats in d["resources"].values():
+            assert {"busy_s", "waited_s", "volume_mb", "n_chunks",
+                    "n_jobs"} <= set(stats)
+
+    def test_json_serializable(self):
+        import json
+
+        sub = pair_substrate()
+        v = sub.view(np.array([1000.0, 500.0]), 1.0)
+        d = simulate_schedule([(v, uniform_plan(v))], substrate=sub).as_dict()
+        json.dumps(d)  # must not raise
