@@ -6,7 +6,6 @@ plan to mis-estimated α — the "what-if" capability the paper highlights.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.makespan import BARRIERS_ALL_GLOBAL, makespan
 from repro.core.optimize import optimize_plan

@@ -1,0 +1,165 @@
+"""Benchmark-regression gate: compare a ``benchmarks.run --json`` document
+against the committed baseline and fail on drift.
+
+CI runs the quick benchmark suite, then::
+
+    PYTHONPATH=src python -m benchmarks.compare reports/bench-timings.json
+
+which fails (exit 1) when
+
+* any scenario present in the baseline is missing from the current run, or
+* any baseline makespan metric (leaf keys ``makespan`` / ``simulated`` /
+  ``modeled`` inside a scenario's results) deviates from the baseline by
+  more than ``--tolerance`` (relative, default 0.25).
+
+Wall-clock (``wall_s``) and derived ratios are deliberately *not* gated —
+they vary with the host.  The gated metrics are modeled/simulated seconds
+produced by the deterministic cost model and discrete-event executor with
+fixed seeds, so on a pinned toolchain they reproduce closely; the baseline
+records the jax/numpy versions and git SHA it was seeded from (see
+``benchmarks.run._provenance``) so a toolchain-driven mismatch is
+distinguishable from a code regression.
+
+Refreshing after an intentional change::
+
+    PYTHONPATH=src python -m benchmarks.run --quick --skip-roofline \
+        --json reports/bench-timings.json
+    PYTHONPATH=src python -m benchmarks.compare reports/bench-timings.json \
+        --update-baseline
+
+then commit ``benchmarks/baseline.json`` with the change that moved the
+numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+from typing import Dict
+
+#: leaf keys inside a scenario's results that are gated (seconds; emitted by
+#: the deterministic model/executor, not wall clock)
+METRIC_KEYS = frozenset({"makespan", "simulated", "modeled"})
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "baseline.json")
+
+
+def _walk(node, path, out: Dict[str, float]) -> None:
+    if isinstance(node, dict):
+        for key, value in node.items():
+            if key in METRIC_KEYS and isinstance(value, (int, float)) \
+                    and math.isfinite(value):
+                out[f"{path}/{key}"] = float(value)
+            else:
+                _walk(value, f"{path}/{key}", out)
+    elif isinstance(node, list):
+        for idx, value in enumerate(node):
+            _walk(value, f"{path}[{idx}]", out)
+
+
+def extract_metrics(doc: dict) -> Dict[str, float]:
+    """Flatten a ``--json`` timing document (or an already-trimmed
+    baseline) to ``{scenario/.../metric: seconds}``."""
+    if "metrics" in doc:  # a trimmed baseline written by --update-baseline
+        return {k: float(v) for k, v in doc["metrics"].items()}
+    metrics: Dict[str, float] = {}
+    for name, scenario in doc.get("scenarios", {}).items():
+        _walk(scenario.get("results", {}), name, metrics)
+    return metrics
+
+
+def scenario_names(metrics: Dict[str, float]) -> "set[str]":
+    return {path.split("/", 1)[0] for path in metrics}
+
+
+def compare(
+    baseline: Dict[str, float], current: Dict[str, float], tolerance: float
+) -> "list[str]":
+    """Return the list of failures (empty = gate passes)."""
+    failures = []
+    missing_scenarios = scenario_names(baseline) - scenario_names(current)
+    for name in sorted(missing_scenarios):
+        failures.append(f"scenario disappeared: {name}")
+    for path, base in sorted(baseline.items()):
+        if path.split("/", 1)[0] in missing_scenarios:
+            continue  # already reported wholesale
+        if path not in current:
+            failures.append(f"metric disappeared: {path}")
+            continue
+        cur = current[path]
+        # tiny epsilon floor only (the gated metrics are deterministic
+        # model outputs, so sub-second baselines deserve the same relative
+        # gate as hundred-second ones)
+        dev = abs(cur - base) / max(abs(base), 1e-6)
+        if dev > tolerance:
+            failures.append(
+                f"{path}: {cur:.2f}s vs baseline {base:.2f}s "
+                f"({dev:+.0%} > ±{tolerance:.0%})"
+            )
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when benchmark makespans drift from the baseline"
+    )
+    ap.add_argument("current", help="bench-timings.json from benchmarks.run")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="max relative deviation per metric (default 0.25)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from the current run "
+                         "instead of comparing")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        doc = json.load(f)
+    current = extract_metrics(doc)
+    if not current:
+        print("[compare] FAIL: no gated metrics in the current run "
+              f"({args.current})")
+        return 1
+
+    if args.update_baseline:
+        trimmed = {"meta": doc.get("meta", {}), "metrics": current}
+        with open(args.baseline, "w") as f:
+            json.dump(trimmed, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"[compare] baseline refreshed: {len(current)} metrics "
+              f"-> {args.baseline}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"[compare] FAIL: no baseline at {args.baseline} — seed one "
+              "with --update-baseline")
+        return 1
+    with open(args.baseline) as f:
+        base_doc = json.load(f)
+    baseline = extract_metrics(base_doc)
+
+    failures = compare(baseline, current, args.tolerance)
+    new = sorted(set(current) - set(baseline))
+    if new:
+        print(f"[compare] {len(new)} metric(s) not in baseline (not gated; "
+              "run --update-baseline to adopt):")
+        for path in new[:10]:
+            print(f"  + {path} = {current[path]:.2f}s")
+    if failures:
+        print(f"[compare] FAIL: {len(failures)} regression(s) vs "
+              f"{args.baseline} (tolerance ±{args.tolerance:.0%}):")
+        for failure in failures:
+            print(f"  ! {failure}")
+        meta = base_doc.get("meta", {})
+        if meta:
+            print(f"[compare] baseline provenance: {json.dumps(meta)}")
+        return 1
+    print(f"[compare] OK: {len(baseline)} metric(s) within "
+          f"±{args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,8 +21,8 @@ from typing import Dict
 
 import numpy as np
 
-from repro.api import Arrival, GeoJob, GeoSchedule, split_sources
-from repro.core.makespan import BARRIERS_ALL_GLOBAL, BARRIERS_GGL
+from repro.api import Arrival, GeoJob, GeoSchedule, OnlineConfig, split_sources
+from repro.core.makespan import BARRIERS_GGL
 from repro.core.optimize import optimize_plan
 from repro.core.plan import local_push_plan, uniform_plan
 from repro.core.platform import CapacityTrace, Substrate, planetlab_platform
@@ -331,4 +331,122 @@ def schedule_online() -> Dict:
     gap = 1 - out["reactive"]["simulated"] / out["frozen_joint"]["simulated"]
     emit("schedule_online_reactive_vs_frozen", 0.0, f"reduction={gap:.0%}")
     out["reactive_vs_frozen_joint_reduction"] = gap
+    return out
+
+
+def shared_online_substrate(t_drift: float = 110.0) -> Substrate:
+    """The ``schedule_online_shared`` fabric: asymmetric reducer access plus
+    a mid-shuffle compute drift.  The steady job's sources (s0/s1) reach
+    mappers m0/m1, which see both reducers; the late job's sources (s2/s3)
+    reach m2/m3, whose only usable shuffle path is into r1 — the late job
+    is *stuck* on r1, a fact only shared-capacity pricing can see.  The
+    fast reducer r0 degrades 300→40 MB/s at ``t_drift`` (mid-shuffle of
+    the steady job); two later trace steps on dead push links are pure
+    nuisance events — nothing real changes, but event-triggered policies
+    fire, and hysteresis-free re-planning swaps on the solver's epsilon
+    improvements (thrash) while the replan-cost charge rejects them."""
+    return Substrate(
+        B_sm=np.array([
+            [200.0, 200.0, 1.0, 1.0],
+            [200.0, 200.0, 1.0, 1.0],
+            [1.0, 1.0, 200.0, 200.0],
+            [1.0, 1.0, 200.0, 200.0],
+        ]),
+        B_mr=np.array([
+            [200.0, 200.0],
+            [200.0, 200.0],
+            [1.0, 200.0],
+            [1.0, 200.0],
+        ]),
+        C_m=np.array([100.0, 100.0, 100.0, 100.0]),
+        C_r=np.array([300.0, 60.0]),
+        cluster_s=np.array([0, 0, 1, 1]),
+        cluster_m=np.array([0, 0, 1, 1]),
+        cluster_r=np.array([0, 1]),
+        name="online_shared",
+    ).with_traces({
+        "reduce[r0]": CapacityTrace.step(300.0, 40.0, t_drift),
+        "push[s0->m2]": CapacityTrace.step(1.0, 0.9, 150.0),
+        "push[s1->m2]": CapacityTrace.step(1.0, 0.9, 180.0),
+    })
+
+
+def schedule_online_shared() -> Dict:
+    """Shared-capacity residual co-replanning with replan-cost hysteresis
+    (PR 4): overlapping jobs + mid-shuffle drift, where solo-residual
+    re-planning thrashes and co-replanning wins.
+
+    After the drift, the steady job's solo replan balances its residual
+    reduce load against the *raw* capacities (40 vs 60 MB/s) — blind to
+    the late job's 12 GB already stuck on r1 — and spills onto the reducer
+    the other job cannot leave.  ``reactive_shared`` co-replans both
+    residuals through shared pricing, keeps the flexible job on the
+    degraded-but-private r0, and its hysteresis rejects the epsilon swaps
+    the nuisance drift events bait out of hysteresis-free co-replanning."""
+    sub = shared_online_substrate()
+    steady = GeoJob(sub.view(np.array([8000.0, 8000.0, 0.0, 0.0]), 1.0,
+                             name="steady"))
+    late_view = sub.view(np.array([0.0, 0.0, 6000.0, 6000.0]), 1.0,
+                         name="late")
+    cfg = SimConfig(barriers=BARRIERS_GGL)
+    t_arrival = 50.0
+
+    frozen = GeoSchedule([steady, GeoJob(late_view)]).plan(
+        "joint", mode="e2e_multi", barriers=BARRIERS_GGL, **_OPT
+    )
+    frozen_sim = simulate_schedule(
+        [(steady.platform, frozen.planned.plans[0], cfg),
+         (late_view, frozen.planned.plans[1],
+          SimConfig(barriers=BARRIERS_GGL, start_time=t_arrival))],
+        substrate=sub,
+    )
+    out = {"frozen_joint": {"simulated": frozen_sim.makespan,
+                            **frozen_sim.as_dict()}}
+    emit("schedule_online_shared_frozen", 0.0,
+         f"sim={frozen_sim.makespan:.0f}s")
+
+    sched = GeoSchedule([steady]).plan(
+        "independent", mode="e2e_multi", barriers=BARRIERS_GGL, **_OPT
+    )
+    variants = (
+        ("reactive_solo", "reactive", None),
+        ("reactive_shared", "reactive_shared", None),
+        ("shared_no_hysteresis", "reactive_shared",
+         OnlineConfig(shared=True, hysteresis=0.0)),
+    )
+    for name, policy, online in variants:
+        arrival = Arrival(
+            GeoJob(late_view).with_plan(frozen.planned.plans[1],
+                                        BARRIERS_GGL),
+            t_arrival,
+        )
+        us, report = timeit(
+            lambda: sched.run_online(
+                policy=policy, arrivals=[arrival], cfg=cfg, online=online,
+                n_restarts=_OPT["n_restarts"], steps=_OPT["steps"],
+            ),
+            repeats=1,
+        )
+        out[name] = {
+            "simulated": report.makespan_online,
+            "static_baseline": report.makespan_static,
+            "improvement_vs_static": report.improvement,
+            "decisions": len(report.decisions),
+            "swaps": len(report.swaps),
+            "rejected": len(report.rejected),
+            "charged_s": report.charged_s,
+            **report.sim.as_dict(),
+        }
+        emit(f"schedule_online_shared_{name}", us,
+             f"sim={report.makespan_online:.0f}s;"
+             f"swaps={len(report.swaps)};rejected={len(report.rejected)}")
+    gap_frozen = 1 - (out["reactive_shared"]["simulated"]
+                      / out["frozen_joint"]["simulated"])
+    gap_solo = 1 - (out["reactive_shared"]["simulated"]
+                    / out["reactive_solo"]["simulated"])
+    emit("schedule_online_shared_vs_frozen", 0.0,
+         f"reduction={gap_frozen:.0%}")
+    emit("schedule_online_shared_vs_solo", 0.0, f"reduction={gap_solo:.0%}")
+    out["shared_vs_frozen_joint_reduction"] = gap_frozen
+    out["shared_vs_solo_reduction"] = gap_solo
     return out

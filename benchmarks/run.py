@@ -17,6 +17,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import time
 
 from . import paper_figures as F
@@ -29,6 +30,24 @@ def _json_default(o):
     if isinstance(o, (np.floating, np.integer)):
         return float(o)
     return str(o)
+
+
+def _provenance() -> dict:
+    """Library versions + git SHA, so uploaded timing artifacts are
+    comparable across CI runs (and a baseline mismatch can be traced to a
+    toolchain change rather than a code regression)."""
+    import jax
+    import numpy as np
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)), timeout=10,
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    return {"jax": jax.__version__, "numpy": np.__version__,
+            "git_sha": sha}
 
 
 def main() -> None:
@@ -57,6 +76,7 @@ def main() -> None:
         ("fig12", F.fig12_replication),
         ("schedule", F.schedule_contention),
         ("schedule_online", F.schedule_online),
+        ("schedule_online_shared", F.schedule_online_shared),
     ]
 
     results, wall = {}, {}
@@ -86,7 +106,8 @@ def main() -> None:
         doc = {
             "meta": {"quick": bool(args.quick),
                      "opt": {k: int(v) for k, v in F._OPT.items()},
-                     "total_wall_s": sum(wall.values())},
+                     "total_wall_s": sum(wall.values()),
+                     **_provenance()},
             "scenarios": {
                 name: {"wall_s": wall[name], "results": results[name]}
                 for name in results

@@ -20,13 +20,21 @@ snapshots every job's *residual* work, re-plans it against the capacities
 then in force (``Substrate.at(t)``, warm-started from the incumbent plan),
 and swaps the not-yet-committed chunks onto the healthy path.
 
+Part 2 (PR 4) then shows where ``reactive`` itself turns myopic: each
+job's residual is re-planned *solo*, so concurrent jobs spill onto the
+same resources.  ``reactive_shared`` co-replans every live residual
+jointly through shared-capacity pricing and charges each swap its replan
+cost (``OnlineConfig.hysteresis``), beating both the frozen joint plan
+and solo-residual re-planning with fewer accepted swaps than
+hysteresis-free co-replanning.
+
     PYTHONPATH=src python examples/geo_online.py
 """
 import dataclasses
 
 import numpy as np
 
-from repro.api import Arrival, GeoJob, GeoSchedule
+from repro.api import Arrival, GeoJob, GeoSchedule, OnlineConfig
 from repro.core import (
     BARRIERS_GGL,
     CapacityTrace,
@@ -99,9 +107,103 @@ for policy, extra in (("static", {}), ("reactive", {}),
           f"{len(report.swaps)} swaps / {len(report.decisions)} decisions")
 
 reactive = reports["reactive"]
-print(f"\nreactive decision timeline (modeled remaining seconds):")
+print("\nreactive decision timeline (modeled remaining seconds):")
 print(reactive.timeline())
 print(f"\nreactive re-planning beats the frozen joint plan by "
       f"{1 - reactive.makespan_online / frozen_sim.makespan:.0%} "
       f"({frozen_sim.makespan:.0f}s -> {reactive.makespan_online:.0f}s).")
 print(reactive.summary())
+
+# ---------------------------------------------------------------------------
+# part 2: solo-residual re-planning is schedule-myopic — co-replan instead
+# ---------------------------------------------------------------------------
+# Asymmetric reducer access: the steady job's mappers (m0/m1) reach both
+# reducers, the late job's mappers (m2/m3) can only shuffle into r1 — the
+# late job is STUCK on r1, a fact only shared-capacity pricing can see.
+# When the fast reducer r0 degrades mid-shuffle (300 -> 40 MB/s), solo
+# replanning balances the steady job's residual against the raw capacities
+# and spills onto r1, right on top of the stuck job.  The two later trace
+# steps on dead push links change nothing real — they only bait
+# hysteresis-free re-planning into epsilon swaps (thrash).
+shared_sub = Substrate(
+    B_sm=np.array([
+        [200.0, 200.0, 1.0, 1.0],
+        [200.0, 200.0, 1.0, 1.0],
+        [1.0, 1.0, 200.0, 200.0],
+        [1.0, 1.0, 200.0, 200.0],
+    ]),
+    B_mr=np.array([
+        [200.0, 200.0],
+        [200.0, 200.0],
+        [1.0, 200.0],
+        [1.0, 200.0],
+    ]),
+    C_m=np.array([100.0, 100.0, 100.0, 100.0]),
+    C_r=np.array([300.0, 60.0]),
+    cluster_s=np.array([0, 0, 1, 1]),
+    cluster_m=np.array([0, 0, 1, 1]),
+    cluster_r=np.array([0, 1]),
+    name="online_shared",
+).with_traces({
+    "reduce[r0]": CapacityTrace.step(300.0, 40.0, 110.0),
+    "push[s0->m2]": CapacityTrace.step(1.0, 0.9, 150.0),   # nuisance
+    "push[s1->m2]": CapacityTrace.step(1.0, 0.9, 180.0),   # nuisance
+})
+print("\n--- part 2: shared-capacity co-replanning with hysteresis ---")
+print(shared_sub.describe())
+
+steady2 = GeoJob(shared_sub.view(np.array([8000.0, 8000.0, 0.0, 0.0]), 1.0,
+                                 name="steady"))
+stuck_view = shared_sub.view(np.array([0.0, 0.0, 6000.0, 6000.0]), 1.0,
+                             name="late")
+
+frozen2 = GeoSchedule([steady2, GeoJob(stuck_view)]).plan(
+    "joint", mode="e2e_multi", barriers=BARRIERS_GGL, **OPT
+)
+frozen2_sim = simulate_schedule(
+    [(steady2.platform, frozen2.planned.plans[0], cfg),
+     (stuck_view, frozen2.planned.plans[1],
+      dataclasses.replace(cfg, start_time=t_arrival))],
+    substrate=shared_sub,
+)
+print(f"\nfrozen joint plan (clairvoyant offline): "
+      f"{frozen2_sim.makespan:8.0f}s aggregate")
+
+sched2 = GeoSchedule([steady2]).plan(
+    "independent", mode="e2e_multi", barriers=BARRIERS_GGL, **OPT
+)
+print(f"\n{'variant':22s} {'online':>9s} {'vs frozen':>10s}  "
+      "swaps/rejected/decisions")
+reports2 = {}
+for name, policy, online in (
+    ("reactive (solo)", "reactive", None),
+    ("reactive_shared", "reactive_shared", None),
+    ("shared, no hysteresis", "reactive_shared",
+     OnlineConfig(shared=True, hysteresis=0.0)),
+):
+    arrival = Arrival(
+        GeoJob(stuck_view).with_plan(frozen2.planned.plans[1], BARRIERS_GGL),
+        t_arrival,
+    )
+    report = sched2.run_online(policy=policy, arrivals=[arrival], cfg=cfg,
+                               online=online, **OPT)
+    reports2[name] = report
+    gain = 1 - report.makespan_online / frozen2_sim.makespan
+    print(f"{name:22s} {report.makespan_online:8.0f}s {gain:9.0%}  "
+          f"{len(report.swaps)}/{len(report.rejected)}"
+          f"/{len(report.decisions)}")
+
+shared = reports2["reactive_shared"]
+solo = reports2["reactive (solo)"]
+nohyst = reports2["shared, no hysteresis"]
+print("\nreactive_shared decision timeline (modeled remaining seconds):")
+print(shared.timeline())
+print(f"\nco-replanning beats the frozen joint plan by "
+      f"{1 - shared.makespan_online / frozen2_sim.makespan:.0%} and "
+      f"solo-residual reactive by "
+      f"{1 - shared.makespan_online / solo.makespan_online:.0%}, "
+      f"accepting {len(shared.swaps)} swaps vs "
+      f"{len(nohyst.swaps)} without hysteresis "
+      f"({len(shared.rejected)} rejected, "
+      f"{shared.charged_s:.0f}s charged).")
+print(shared.summary())

@@ -10,7 +10,6 @@ every 50 steps — re-running the same command continues from the newest
 committed checkpoint.
 """
 import argparse
-import sys
 
 from repro.launch import train as train_launcher
 

@@ -1,6 +1,7 @@
 #!/usr/bin/env sh
 # Tier-1 verification (see ROADMAP.md): the full test suite, fail-fast.
-# Usage: scripts/test.sh [extra pytest args]
-set -e
-cd "$(dirname "$0")/.."
+# Pass-through args reach pytest, so CI and local runs share one entry
+# point:  scripts/test.sh -k online       scripts/test.sh tests/test_api.py
+cd "$(dirname "$0")/.." || exit 1
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+exit $?

@@ -59,14 +59,18 @@ import numpy as np
 
 from .core.makespan import BARRIERS_GGL, CostModel, attribute_phases
 from .core.optimize import (
+    OnlineConfig,
     PlanResult,
     SchedulePlanResult,
     _shared_schedule_result,
     available_modes,
+    get_online_config,
     get_online_policy,
     optimize_plan,
     optimize_schedule,
     replan,
+    replan_schedule,
+    swap_charge,
 )
 from .core.plan import ExecutionPlan, uniform_plan
 from .core.platform import Platform, Substrate
@@ -82,7 +86,8 @@ from .core.simulate import (
 from .mapreduce.engine import GeoMapReduce, MRApp, PhaseStats, Records
 
 __all__ = ["Arrival", "Decision", "GeoJob", "GeoSchedule", "JobReport",
-           "OnlineReport", "ScheduleReport", "split_sources"]
+           "OnlineConfig", "OnlineReport", "ScheduleReport",
+           "split_sources"]
 
 
 def split_sources(keys: np.ndarray, values: np.ndarray, n_sources: int) -> List[Records]:
@@ -389,17 +394,24 @@ class Decision:
     time: float
     event: str  # "arrival" | "drift" | "failure" | "tick"
     job: int
-    action: str  # "inject" | "swap" | "keep"
+    #: "inject" | "swap" | "keep" | "reject" — "reject" is a candidate swap
+    #: whose modeled savings did not clear its hysteresis-weighted charge
+    action: str
     #: modeled remaining seconds under the incumbent plan at decision time
     modeled_before: float
-    #: modeled remaining seconds under the adopted plan (== before on keep)
+    #: modeled remaining seconds under the adopted plan (== before on
+    #: keep/reject — a rejected candidate is not adopted)
     modeled_after: float
+    #: the replan cost charged against the candidate swap (solver estimate
+    #: + modeled data movement, seconds; 0 outside cost-aware policies)
+    charge: float = 0.0
 
     def __repr__(self):
+        charged = f" charge={self.charge:.1f}s" if self.charge else ""
         return (
             f"Decision(t={self.time:.1f}s {self.event}: job {self.job} "
             f"{self.action} {self.modeled_before:.1f}s->"
-            f"{self.modeled_after:.1f}s)"
+            f"{self.modeled_after:.1f}s{charged})"
         )
 
 
@@ -438,7 +450,19 @@ class OnlineReport:
 
     @property
     def swaps(self) -> Tuple[Decision, ...]:
+        """Accepted swaps — candidate plans actually adopted."""
         return tuple(d for d in self.decisions if d.action == "swap")
+
+    @property
+    def rejected(self) -> Tuple[Decision, ...]:
+        """Candidate swaps the replan-cost hysteresis declined."""
+        return tuple(d for d in self.decisions if d.action == "reject")
+
+    @property
+    def charged_s(self) -> float:
+        """Total replan cost charged against candidate swaps (accepted and
+        rejected), modeled seconds."""
+        return sum(d.charge for d in self.decisions)
 
     def timeline(self) -> str:
         if not self.decisions:
@@ -446,16 +470,21 @@ class OnlineReport:
         return "\n".join(
             f"  t={d.time:8.1f}s  {d.event:8s} job {d.job}: {d.action:6s} "
             f"remaining {d.modeled_before:8.1f}s -> {d.modeled_after:8.1f}s"
+            + (f"  (charged {d.charge:.1f}s)" if d.charge else "")
             for d in self.decisions
         )
 
     def summary(self) -> str:
+        rejected = (
+            f", {len(self.rejected)} rejected" if self.rejected else ""
+        )
         return (
             f"online[{self.policy}] {len(self.sim.jobs)} jobs "
             f"online={self.makespan_online:.1f}s "
             f"static={self.makespan_static:.1f}s "
             f"({self.improvement:+.0%} vs frozen, "
-            f"{len(self.swaps)} swaps/{len(self.decisions)} decisions)"
+            f"{len(self.swaps)} swaps{rejected}/"
+            f"{len(self.decisions)} decisions)"
         )
 
 
@@ -635,6 +664,7 @@ class GeoSchedule:
         n_restarts: int = 8,
         steps: int = 200,
         seed: int = 0,
+        online: Optional[OnlineConfig] = None,
     ) -> OnlineReport:
         """Execute the planned schedule under a closed plan→observe→re-plan
         loop, with ``arrivals`` streaming in after t=0 and any capacity
@@ -645,24 +675,45 @@ class GeoSchedule:
         :func:`repro.core.optimize.register_online_policy` — built in:
         ``static`` (never re-plan: reproduces the frozen offline pipeline
         exactly), ``reactive`` (re-plan on every arrival / failure /
-        capacity-drift event) and ``horizon`` (re-plan every ``replan_dt``
-        seconds).  At each decision point the executor is paused, a
-        :class:`~repro.core.simulate.ProgressSnapshot` is captured, each
-        active job is re-planned over its *residual* work against the
-        capacities then in force (:func:`repro.core.optimize.replan`,
-        warm-started from the incumbent plan), and any improving plan is
-        swapped in for the job's not-yet-committed chunks.
+        capacity-drift event), ``horizon`` (re-plan every ``replan_dt``
+        seconds), and their schedule-aware, cost-aware variants
+        ``reactive_shared`` / ``horizon_shared``.  At each decision point
+        the executor is paused and a
+        :class:`~repro.core.simulate.ProgressSnapshot` captured; how the
+        residuals are then re-planned is the policy's
+        :class:`~repro.core.optimize.OnlineConfig` (overridable via
+        ``online``):
+
+        * solo (default): each active job re-planned alone against the
+          capacities then in force (:func:`repro.core.optimize.replan`,
+          warm-started from the incumbent plan), any improving plan
+          swapped in for the job's not-yet-committed chunks;
+        * ``shared=True``: all live jobs co-replanned *jointly* against
+          shared-capacity residual pricing
+          (:func:`repro.core.optimize.replan_schedule`) — no job grabs a
+          fast link the model knows the others also need;
+        * ``hysteresis > 0``: each candidate swap is charged its replan
+          cost (:func:`repro.core.optimize.swap_charge`: solver estimate +
+          modeled data movement of re-routing its queued bytes) and fires
+          only when modeled savings exceed ``hysteresis ×`` the charge —
+          rejected candidates land in the timeline as ``reject`` entries
+          with the charge that gated them.  ``hysteresis=inf`` never
+          swaps, reproducing ``static`` byte-for-byte.
 
         The returned :class:`OnlineReport` carries the steered execution,
         the frozen-plan baseline run on the *same* arrivals and drift, and
-        the per-decision timeline.
+        the per-decision timeline (with per-swap charge accounting).
         """
         policy_fn = get_online_policy(policy)
+        ocfg = online if online is not None else get_online_config(policy)
+        # hysteresis=inf can never accept a swap: skip the solves entirely
+        # (the run is the frozen pipeline either way)
+        gate_open = bool(np.isfinite(ocfg.hysteresis))
         if replan_dt is not None and replan_dt <= 0:
             raise ValueError(f"replan_dt must be > 0, got {replan_dt}")
-        if policy == "horizon" and replan_dt is None:
+        if policy in ("horizon", "horizon_shared") and replan_dt is None:
             raise ValueError(
-                "policy='horizon' replans only on ticks — pass replan_dt "
+                f"policy={policy!r} replans only on ticks — pass replan_dt "
                 "(seconds between re-planning decisions)"
             )
         result = self.planned
@@ -723,15 +774,94 @@ class GeoSchedule:
                 n_restarts=n_restarts, steps=steps,
                 seed=seed + 977 * n_replans,
             )
-            if res.plan is not g.plan:
+            charge = 0.0
+            if res.plan is g.plan:
+                # the incumbent won: replan() only returns a different
+                # object when it is strictly better in float64
+                action = "keep"
+            elif ocfg.hysteresis == 0.0:
                 eng.swap_plan(jp.job, res.plan)
                 action = "swap"
             else:
-                action = "keep"
+                # cost-aware solo policy: the same hysteresis gate the
+                # shared path applies
+                charge = swap_charge(view, jp, g.plan, res.plan,
+                                     ocfg.solver_cost_s)
+                savings = before - res.makespan
+                if np.isfinite(ocfg.hysteresis) \
+                        and savings > ocfg.hysteresis * charge:
+                    eng.swap_plan(jp.job, res.plan)
+                    action = "swap"
+                else:
+                    action = "reject"
             decisions.append(Decision(
                 time=t, event=kind, job=jp.job, action=action,
-                modeled_before=before, modeled_after=res.makespan,
+                modeled_before=before,
+                modeled_after=(before if action == "reject"
+                               else res.makespan),
+                charge=charge,
             ))
+
+        def co_replan(kind, t, sub_t, snap, fresh=frozenset()):
+            """Schedule-aware decision: co-replan every live job's residual
+            jointly, then adopt the stack **as a unit** iff its aggregate
+            modeled savings clear the hysteresis-weighted total charge.
+            The stack's pricing (and its never-modeled-worse guarantee) is
+            joint, so partial adoption would execute a mix the solver never
+            scored — and a sacrificial swap that worsens one job's own span
+            to cut the bottleneck's must not be vetoed job-by-job.
+            ``fresh`` holds job indices injected at this very instant —
+            their queued bytes have not begun moving, so they contribute no
+            data-movement charge (like the solo arrival path)."""
+            nonlocal n_replans
+            live = snap.residual_view()
+            if not live:
+                return
+            incumbents = [eng.runs[idx].plan for idx, _ in live]
+            progs = [jp for _, jp in live]
+            n_replans += 1
+            res = replan_schedule(
+                sub_t, incumbents, progs,
+                barriers=result.barriers, n_restarts=n_restarts,
+                steps=steps, seed=seed + 977 * n_replans,
+            )
+            # replan_schedule returns either the incumbent objects (the
+            # stack won) or one whole new stack — changed is all-or-nothing
+            changed = [slot for slot in range(len(live))
+                       if res.plans[slot] is not incumbents[slot]]
+            charges = [0.0] * len(live)
+            for slot in changed:
+                idx, jp = live[slot]
+                move = 0.0 if idx in fresh else swap_charge(
+                    sub_t, jp, incumbents[slot], res.plans[slot],
+                    solver_cost_s=0.0,
+                )
+                # one joint solve serves every job: its wall-clock estimate
+                # is charged once, pro-rated across the changed records
+                charges[slot] = move + ocfg.solver_cost_s / len(changed)
+            savings = max(res.before) - res.makespan
+            adopt = bool(
+                changed and np.isfinite(ocfg.hysteresis)
+                and savings > ocfg.hysteresis * sum(charges)
+            )
+            for slot, (idx, jp) in enumerate(live):
+                if slot not in changed:
+                    decisions.append(Decision(
+                        time=t, event=kind, job=idx, action="keep",
+                        modeled_before=res.before[slot],
+                        modeled_after=res.before[slot],
+                    ))
+                    continue
+                if adopt:
+                    eng.swap_plan(idx, res.plans[slot])
+                decisions.append(Decision(
+                    time=t, event=kind, job=idx,
+                    action="swap" if adopt else "reject",
+                    modeled_before=res.before[slot],
+                    modeled_after=(res.after[slot] if adopt
+                                   else res.before[slot]),
+                    charge=charges[slot],
+                ))
 
         ei = 0
         next_tick = replan_dt
@@ -765,14 +895,30 @@ class GeoSchedule:
                                       name=f"{platform.name}@{t_next:g}s")
                     cm_t = CostModel(view, acfg.barriers)
                     plan = frozen
-                    if decide:
+                    arrival_charge, arrival_rejected = 0.0, None
+                    if decide and not ocfg.shared and gate_open:
                         # plan the newcomer against the capacities in force
+                        # (solo path; the shared path injects the frozen
+                        # plan and lets the joint co-replan — which models
+                        # the newcomer's contention — steer it, gated by
+                        # the same hysteresis as everyone else).  The
+                        # newcomer has nothing queued yet, so its charge is
+                        # the solver estimate alone.
                         res = replan(
                             view, frozen, progress=None,
                             barriers=acfg.barriers, n_restarts=n_restarts,
                             steps=steps, seed=seed + 977 * len(decisions),
                         )
-                        plan = res.plan
+                        if res.plan is not frozen:
+                            if (cm_t.makespan(frozen) - res.makespan
+                                    > ocfg.hysteresis * ocfg.solver_cost_s):
+                                plan = res.plan
+                                # charged only under cost-aware gating, so
+                                # hysteresis=0 keeps its zero-charge records
+                                if ocfg.hysteresis > 0:
+                                    arrival_charge = ocfg.solver_cost_s
+                            else:
+                                arrival_rejected = ocfg.solver_cost_s
                     idx = eng.inject([(platform, plan, acfg)])[0]
                     injected.add(idx)
                     before = cm_t.makespan(frozen)
@@ -781,14 +927,29 @@ class GeoSchedule:
                         action="inject", modeled_before=before,
                         modeled_after=(before if plan is frozen
                                        else cm_t.makespan(plan)),
+                        charge=arrival_charge,
                     ))
-            if decide:
+                    if arrival_rejected is not None:
+                        # the gate declined the newcomer's better plan: on
+                        # the record, like any other rejected candidate
+                        decisions.append(Decision(
+                            time=t_next, event="arrival", job=idx,
+                            action="reject", modeled_before=before,
+                            modeled_after=before, charge=arrival_rejected,
+                        ))
+            if decide and gate_open:
                 if injected:
                     snap = eng.snapshot()  # include the newcomers' state
-                for jp in snap.jobs:
-                    if jp.done or jp.job in injected:
-                        continue
-                    replan_job(jp, kind, t_next, sub_t)
+                if ocfg.shared:
+                    # newcomers are NOT skipped here: the joint residual
+                    # objective prices their contention alongside everyone
+                    # else's, which is the point of co-replanning
+                    co_replan(kind, t_next, sub_t, snap, fresh=injected)
+                else:
+                    for jp in snap.jobs:
+                        if jp.done or jp.job in injected:
+                            continue
+                        replan_job(jp, kind, t_next, sub_t)
 
         sim = eng.run()
         return OnlineReport(

@@ -29,12 +29,15 @@ from .makespan import (
 from .optimize import (
     MODES,
     SCHEDULE_OBJECTIVES,
+    OnlineConfig,
     PlanResult,
     SchedulePlanResult,
+    ScheduleReplanResult,
     available_modes,
     available_online_policies,
     available_policies,
     brute_force_plan,
+    get_online_config,
     get_online_policy,
     get_planner,
     get_schedule_planner,
@@ -44,6 +47,9 @@ from .optimize import (
     register_planner,
     register_schedule_planner,
     replan,
+    replan_schedule,
+    score_residual_shared,
+    swap_charge,
 )
 from .plan import ExecutionPlan, local_push_plan, uniform_plan
 from .platform import (
@@ -74,12 +80,14 @@ __all__ = [
     "ExecutionPlan",
     "JobProgress",
     "MODES",
+    "OnlineConfig",
     "Platform",
     "PlanResult",
     "ProgressSnapshot",
     "ResourceStats",
     "SCHEDULE_OBJECTIVES",
     "SchedulePlanResult",
+    "ScheduleReplanResult",
     "ScheduleSimResult",
     "SimConfig",
     "SimResult",
@@ -88,6 +96,7 @@ __all__ = [
     "available_online_policies",
     "available_policies",
     "brute_force_plan",
+    "get_online_config",
     "get_online_policy",
     "get_planner",
     "get_schedule_planner",
@@ -103,7 +112,10 @@ __all__ = [
     "phase_breakdown",
     "planetlab_platform",
     "replan",
+    "replan_schedule",
     "residual_volumes",
+    "score_residual_shared",
+    "swap_charge",
     "shared_effective_volumes",
     "simulate",
     "simulate_schedule",

@@ -21,7 +21,7 @@ schedule consumes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Sequence
 
 import numpy as np
 

@@ -268,6 +268,18 @@ class JobProgress:
             map_alive=np.ones(nM, dtype=bool),
         )
 
+    def reroutable_mb(self) -> Dict[str, float]:
+        """MB an online plan swap would pull back and re-route: push bytes
+        still queued at the sources (steered by a new ``x``) and map-output
+        bytes pooled at the mappers awaiting shuffle (steered by a new
+        ``y``).  Committed/delivered buckets are excluded — a swap cannot
+        move them.  This is the volume the replan-cost hysteresis charges
+        (see :func:`repro.core.optimize.swap_charge`)."""
+        return {
+            "push": float(self.resid_push.sum()),
+            "shuffle": float(self.shuffle_pool.sum()),
+        }
+
     def remaining_mb(self) -> Dict[str, float]:
         """Remaining MB per phase (push/map input; shuffle/reduce output)."""
         push = float(self.resid_push.sum() + self.committed_push.sum())
@@ -487,6 +499,47 @@ class CostModel:
         return max(
             float(out["makespan"])
             for out in self.price_shared(volumes_list, barriers)
+        )
+
+    def price_residual_shared(
+        self, progress_list, plans, barriers=None
+    ) -> "list[Dict[str, np.ndarray]]":
+        """Price N concurrent jobs' *remaining* work jointly on the shared
+        substrate: each job's residual volumes under its candidate plan
+        (:func:`residual_volumes`) are inflated by the other jobs' residual
+        demand on every resource it touches (:func:`shared_effective_volumes`,
+        hard gate) and priced through the identical float64 phase equations.
+        This is what schedule-aware online re-planning optimizes — the
+        multi-job analogue of :meth:`price_residual`, and with fresh
+        zero-progress snapshots it reproduces :meth:`price_shared` of the
+        plans' analytic volumes exactly (a fresh schedule is the special
+        case of an untouched residual)."""
+        if len(progress_list) != len(plans):
+            raise ValueError(
+                f"one plan per progress, got {len(progress_list)} progresses "
+                f"and {len(plans)} plans"
+            )
+        vols = [
+            residual_volumes(
+                pr.resid_push, pr.committed_push, pr.at_mapper,
+                pr.shuffle_pool, pr.committed_shuffle, pr.at_reducer,
+                pr.alpha, np.asarray(plan.x), np.asarray(plan.y), xp=np,
+            )
+            for pr, plan in zip(progress_list, plans)
+        ]
+        eff = shared_effective_volumes(vols, kappa=0.0, xp=np)
+        return [self.price_volumes(*v, barriers=barriers) for v in eff]
+
+    def residual_schedule_makespan(
+        self, progress_list, plans, barriers=None
+    ) -> float:
+        """Aggregate (max over jobs) modeled seconds to finish the observed
+        jobs' residuals under their candidate plans, with shared-capacity
+        contention."""
+        return max(
+            float(out["makespan"])
+            for out in self.price_residual_shared(progress_list, plans,
+                                                  barriers)
         )
 
 

@@ -42,7 +42,7 @@ import dataclasses
 import functools
 import inspect
 import itertools
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +52,7 @@ from .makespan import (
     BARRIERS_ALL_GLOBAL,
     CostModel,
     JobProgress,
+    _np_hard_ops,
     analytic_volumes,
     attribute_phases,
     hard_ops,
@@ -69,12 +70,15 @@ from .platform import Platform, Substrate
 __all__ = [
     "MODES",
     "SCHEDULE_OBJECTIVES",
+    "OnlineConfig",
     "PlanResult",
     "SchedulePlanResult",
+    "ScheduleReplanResult",
     "available_modes",
     "available_online_policies",
     "available_policies",
     "brute_force_plan",
+    "get_online_config",
     "get_online_policy",
     "get_planner",
     "get_schedule_planner",
@@ -84,6 +88,9 @@ __all__ = [
     "register_planner",
     "register_schedule_planner",
     "replan",
+    "replan_schedule",
+    "score_residual_shared",
+    "swap_charge",
 ]
 
 #: The paper's built-in planner modes (kept as a tuple for backwards
@@ -992,11 +999,353 @@ def replan(
     )
 
 
+# ---------------------------------------------------------------------------
+# schedule-aware online re-planning: joint residual optimization
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleReplanResult:
+    """The outcome of one joint residual co-replan over all live jobs.
+
+    ``plans`` holds one plan per input job (the incumbent object itself for
+    done jobs, and for every job when keeping the whole incumbent stack
+    won); ``before``/``after`` are the per-job modeled remaining seconds
+    under shared-capacity residual pricing for the incumbent stack and the
+    returned stack respectively.  The incumbent stack competes as a
+    candidate, so ``makespan`` (the aggregate ``max(after)``) is never
+    modeled worse than ``max(before)``."""
+
+    plans: Tuple[ExecutionPlan, ...]
+    before: Tuple[float, ...]
+    after: Tuple[float, ...]
+    makespan: float
+    barriers: Tuple[str, str, str]
+
+    @property
+    def improvement(self) -> float:
+        """Aggregate modeled seconds the co-replan removed (>= 0)."""
+        return max(self.before, default=0.0) - self.makespan
+
+
+@functools.partial(jax.jit, static_argnames=("barriers", "steps", "kappa"))
+def _solve_residual_shared_batch(
+    resid_stack,  # 6-tuple stacked over jobs: (J,nS) (J,nS,nM) (J,nM)
+                  #                            (J,nM) (J,nM,nR) (J,nR)
+    caps_stack,  # 4-tuple stacked over jobs (dead mappers degraded per job)
+    alpha_stack,  # (J,)
+    logits_x0,  # (R, J, nS, nM)
+    logits_y0,  # (R, J, nR)
+    scale,
+    kappa: float,  # static — smooth-usage-gate width, MB
+    barriers: Tuple[str, str, str],
+    steps: int,
+    lr: float = 0.08,
+    tau0_frac: float = 0.3,
+    tau1_frac: float = 1e-3,
+):
+    """Anneal ``R`` restarts of the *joint* residual objective: every live
+    job's remaining work under its candidate plan, contention-inflated by
+    the other jobs' residual demand (:func:`shared_effective_volumes`) and
+    priced through the shared phase equations — the schedule analogue of
+    :func:`_solve_residual_batch`."""
+    J = logits_x0.shape[1]
+
+    def aggregate(x, y, mx, pmax, kap):
+        vols = [
+            residual_volumes(*(r[g] for r in resid_stack), alpha_stack[g],
+                             x[g], y[g], xp=jnp)
+            for g in range(J)
+        ]
+        eff = shared_effective_volumes(vols, kappa=kap, xp=jnp)
+        spans = jnp.stack([
+            volume_model(*eff[g], *(c[g] for c in caps_stack), barriers,
+                         mx, pmax, xp=jnp)["makespan"]
+            for g in range(J)
+        ])
+        return mx(spans)
+
+    def loss(params, tau):
+        mx, pmax = smooth_ops(tau)
+        x = jax.nn.softmax(params["x"], axis=-1)
+        y = jax.nn.softmax(params["y"], axis=-1)
+        return aggregate(x, y, mx, pmax, kappa) / scale
+
+    def one_restart(lx0, ly0):
+        params = _adam_anneal(
+            loss, {"x": lx0, "y": ly0}, steps, scale, lr, tau0_frac, tau1_frac
+        )
+        x = jax.nn.softmax(params["x"], axis=-1)
+        y = jax.nn.softmax(params["y"], axis=-1)
+        mx, pmax = hard_ops()
+        # hard max, smooth usage gate; final selection re-prices in f64
+        exact = aggregate(x, y, mx, pmax, kappa)
+        return x, y, exact
+
+    return jax.vmap(one_restart)(logits_x0, logits_y0)
+
+
+def _degraded_caps(substrate, progress: JobProgress):
+    """Per-job capacity arrays with this job's dead mappers collapsed 1000x
+    (same rationale as :func:`replan`: liveness is a capacity fact traces
+    cannot express; not zero because softmax plans keep epsilon mass)."""
+    B_sm, B_mr = substrate.B_sm, substrate.B_mr
+    C_m, C_r = substrate.C_m, substrate.C_r
+    if progress.map_alive is not None and not progress.map_alive.all():
+        alive = progress.map_alive.astype(bool)
+        C_m = np.where(alive, C_m, C_m * 1e-3)
+        B_sm = np.where(alive[None, :], B_sm, B_sm * 1e-3)
+    return B_sm, B_mr, C_m, C_r
+
+
+def _score_residual_stack(caps_list, progresses, plans, barriers):
+    """float64 shared-residual pricing of one candidate stack: per-job
+    residual volumes, hard-gate contention inflation, exact phase equations
+    with each job's (possibly liveness-degraded) capacities."""
+    vols = [
+        residual_volumes(
+            pr.resid_push, pr.committed_push, pr.at_mapper, pr.shuffle_pool,
+            pr.committed_shuffle, pr.at_reducer, pr.alpha,
+            np.asarray(plan.x), np.asarray(plan.y), xp=np,
+        )
+        for pr, plan in zip(progresses, plans)
+    ]
+    eff = shared_effective_volumes(vols, kappa=0.0, xp=np)
+    mx, pmax = _np_hard_ops()
+    return [
+        float(volume_model(
+            np.asarray(v[0], dtype=np.float64),
+            np.asarray(v[1], dtype=np.float64),
+            np.asarray(v[2], dtype=np.float64),
+            np.asarray(v[3], dtype=np.float64),
+            *caps, barriers, mx, pmax, xp=np,
+        )["makespan"])
+        for v, caps in zip(eff, caps_list)
+    ]
+
+
+def score_residual_shared(
+    substrate, progresses, plans,
+    barriers: Tuple[str, str, str] = BARRIERS_ALL_GLOBAL,
+) -> "list[float]":
+    """Per-job modeled remaining seconds of ``plans`` under shared-capacity
+    residual pricing (float64, hard gate, per-job dead mappers degraded) —
+    the exact selection metric :func:`replan_schedule` uses.  Exposed so a
+    caller that adopts only *part* of a co-replanned stack (hysteresis may
+    reject individual swaps) can re-price the mix it actually executes."""
+    caps_list = [_degraded_caps(substrate, pr) for pr in progresses]
+    return _score_residual_stack(caps_list, progresses, plans,
+                                 tuple(barriers))
+
+
+def replan_schedule(
+    substrate,
+    incumbents: Sequence[ExecutionPlan],
+    progresses,
+    barriers: Tuple[str, str, str] = BARRIERS_ALL_GLOBAL,
+    n_restarts: int = 8,
+    steps: int = 200,
+    seed: int = 0,
+) -> ScheduleReplanResult:
+    """Co-replan **all** live jobs' residuals jointly on their shared
+    substrate — the schedule-aware counterpart of :func:`replan`.
+
+    PR 3's :func:`replan` re-optimizes each job's residual *solo* against
+    the current capacities, re-introducing at the schedule level exactly
+    the myopia the paper's end-to-end argument is about: every job grabs
+    the same fast links because none of them models the others.  Here one
+    annealed optimization steers every live job's stacked ``x``/``y``
+    against :meth:`CostModel.price_residual_shared` — each job's remaining
+    work inflated by the other jobs' residual demand on every resource it
+    touches — warm-started from the stacked incumbent logits.
+
+    ``substrate`` should be the current view of the fabric
+    (:meth:`repro.core.platform.Substrate.at` folds drift in);
+    ``progresses`` is a sequence of :class:`JobProgress` (or a
+    :class:`repro.core.simulate.ProgressSnapshot`, whose ``jobs`` are
+    used), parallel to ``incumbents``.  Done jobs pass through untouched
+    with zero residual spans; every candidate stack is re-priced in
+    float64 and the incumbent stack competes, so the returned aggregate is
+    never modeled worse than keeping every plan (and the plan *objects*
+    are the incumbents when keeping wins).
+    """
+    barriers = tuple(barriers)
+    if hasattr(progresses, "jobs"):  # a ProgressSnapshot
+        progresses = list(progresses.jobs)
+    progresses = list(progresses)
+    incumbents = list(incumbents)
+    if len(progresses) != len(incumbents):
+        raise ValueError(
+            f"one incumbent per progress, got {len(incumbents)} incumbents "
+            f"and {len(progresses)} progresses"
+        )
+    live = [g for g, pr in enumerate(progresses) if not pr.done]
+    n = len(progresses)
+    plans_out: List[ExecutionPlan] = list(incumbents)
+    before_out = [0.0] * n
+    after_out = [0.0] * n
+    if not live:
+        return ScheduleReplanResult(
+            plans=tuple(plans_out), before=tuple(before_out),
+            after=tuple(after_out), makespan=0.0, barriers=barriers,
+        )
+
+    live_prog = [progresses[g] for g in live]
+    live_inc = [incumbents[g] for g in live]
+    caps_list = [_degraded_caps(substrate, pr) for pr in live_prog]
+    before = _score_residual_stack(caps_list, live_prog, live_inc, barriers)
+    scale = max(max(before), 1e-6)
+
+    J, nS, nM, nR = len(live), substrate.nS, substrate.nM, substrate.nR
+    eps = 1e-9
+    rng = np.random.default_rng(seed)
+    inc_x = np.stack([np.log(np.asarray(p.x) + eps) for p in live_inc])
+    inc_y = np.stack([np.log(np.asarray(p.y) + eps) for p in live_inc])
+    lx = [inc_x, np.zeros((J, nS, nM))]
+    ly = [inc_y, np.zeros((J, nR))]
+    # anti-affinity rotations, as in the offline joint policy: bias
+    # different jobs toward different substrate entries
+    greedy_x = np.log(substrate.B_sm / substrate.B_sm.max() + eps)
+    greedy_y = np.log(substrate.C_r / substrate.C_r.max() + eps)
+    lx.append(np.stack([np.roll(greedy_x, g, axis=1) for g in range(J)]))
+    ly.append(np.stack([np.roll(greedy_y, g) for g in range(J)]))
+    while len(lx) < n_restarts:
+        sigma = rng.uniform(0.3, 3.0)
+        lx.append(rng.normal(0.0, sigma, size=(J, nS, nM)))
+        ly.append(rng.normal(0.0, sigma, size=(J, nR)))
+    logits_x = jnp.asarray(np.stack(lx[:n_restarts]), jnp.float32)
+    logits_y = jnp.asarray(np.stack(ly[:n_restarts]), jnp.float32)
+
+    resid_stack = tuple(
+        jnp.asarray(np.stack([getattr(pr, f) for pr in live_prog]),
+                    jnp.float32)
+        for f in ("resid_push", "committed_push", "at_mapper",
+                  "shuffle_pool", "committed_shuffle", "at_reducer")
+    )
+    caps_stack = tuple(
+        jnp.asarray(np.stack([caps[c] for caps in caps_list]), jnp.float32)
+        for c in range(4)
+    )
+    alpha_stack = jnp.asarray(
+        np.array([pr.alpha for pr in live_prog]), jnp.float32
+    )
+    total_resid = float(sum(
+        pr.remaining_mb()["reduce"] for pr in live_prog
+    ))
+    kappa = max(1e-3 * total_resid / max(nM, 1), 1e-9)
+    # kappa is a static jit arg (shared_effective_volumes branches on it):
+    # quantize to half-decade buckets so successive decision points with
+    # shrinking residuals reuse the compiled solver instead of re-tracing
+    kappa = float(10.0 ** (round(np.log10(kappa) * 2.0) / 2.0))
+    xs, ys, _ = _solve_residual_shared_batch(
+        resid_stack, caps_stack, alpha_stack, logits_x, logits_y,
+        jnp.float32(scale), kappa=float(kappa), barriers=barriers,
+        steps=steps,
+    )
+
+    best_live, best_after, best_score = live_inc, before, max(before)
+    for r in range(int(xs.shape[0])):
+        cand = _normalized_plans(np.asarray(xs[r]), np.asarray(ys[r]),
+                                 "replan_shared")
+        spans = _score_residual_stack(caps_list, live_prog, cand, barriers)
+        if max(spans) < best_score:
+            best_live, best_after, best_score = cand, spans, max(spans)
+
+    for slot, g in enumerate(live):
+        plans_out[g] = best_live[slot]
+        before_out[g] = before[slot]
+        after_out[g] = best_after[slot]
+    return ScheduleReplanResult(
+        plans=tuple(plans_out), before=tuple(before_out),
+        after=tuple(after_out), makespan=best_score, barriers=barriers,
+    )
+
+
+# ---------------------------------------------------------------------------
+# replan-cost hysteresis: pricing the swap itself
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OnlineConfig:
+    """How an online policy re-plans when it fires.
+
+    ``shared=True`` co-replans all live jobs jointly through
+    :func:`replan_schedule` (shared-capacity residual pricing) instead of
+    each job solo through :func:`replan`.
+
+    ``hysteresis`` is the replan-cost damping factor: a candidate swap is
+    charged :func:`swap_charge` (solver wall-clock estimate plus the
+    modeled data movement of re-routing its queued bytes) and fires only
+    when its modeled savings exceed ``hysteresis ×`` that charge.  ``0``
+    swaps on any modeled improvement (PR 3's behavior); ``inf`` never
+    swaps, reproducing the ``static`` policy byte-for-byte.
+
+    ``solver_cost_s`` is the charged wall-clock estimate of one re-planning
+    solve — an estimate, not a measurement, so decisions stay
+    deterministic and host-independent."""
+
+    shared: bool = False
+    hysteresis: float = 0.0
+    solver_cost_s: float = 1.0
+
+    def __post_init__(self):
+        if not (self.hysteresis >= 0.0):  # rejects negatives and NaN
+            raise ValueError(
+                f"hysteresis must be >= 0 (inf allowed), got "
+                f"{self.hysteresis}"
+            )
+        if not (self.solver_cost_s >= 0.0):
+            raise ValueError(
+                f"solver_cost_s must be >= 0, got {self.solver_cost_s}"
+            )
+
+
+def swap_charge(
+    platform,
+    progress: JobProgress,
+    incumbent: ExecutionPlan,
+    candidate: ExecutionPlan,
+    solver_cost_s: float = 1.0,
+) -> float:
+    """Modeled cost (seconds) of swapping ``incumbent`` for ``candidate``
+    on a running job — what replan-cost hysteresis charges a swap before
+    it may fire.
+
+    The charge is the solver wall-clock estimate plus the data-movement
+    cost of re-routing the job's committed-but-queued bytes: push MB still
+    queued at the sources move ``0.5·Σᵢ resid_push[i]·‖x'ᵢ − xᵢ‖₁`` (the MB
+    whose destination actually changes) and pooled shuffle MB move
+    ``0.5·Σⱼ pool[j]·‖y' − y‖₁``, each priced at the fabric's mean link
+    bandwidth.  The executor itself re-queues pulled-back chunks for free —
+    this is a *modeled* control charge (connection churn, re-registration,
+    coordination) that damps thrash, per the communication-pattern modeling
+    argument that re-planning overhead must be priced rather than assumed
+    free."""
+    x0, x1 = np.asarray(incumbent.x), np.asarray(candidate.x)
+    y0, y1 = np.asarray(incumbent.y), np.asarray(candidate.y)
+    moved_push = 0.5 * float(
+        (progress.resid_push * np.abs(x1 - x0).sum(axis=1)).sum()
+    )
+    moved_shuf = 0.5 * float(
+        (progress.shuffle_pool * np.abs(y1 - y0).sum()).sum()
+    )
+    return (
+        float(solver_cost_s)
+        + moved_push / max(float(np.mean(platform.B_sm)), 1e-9)
+        + moved_shuf / max(float(np.mean(platform.B_mr)), 1e-9)
+    )
+
+
 #: name -> fn(kind, snapshot) -> bool (replan now?)
 _ONLINE_POLICIES: Dict[str, Callable] = {}
 
+#: name -> the OnlineConfig the policy registered with (default when absent)
+_ONLINE_CONFIGS: Dict[str, OnlineConfig] = {}
 
-def register_online_policy(name: str, fn: Optional[Callable] = None):
+
+def register_online_policy(
+    name: str, fn: Optional[Callable] = None, *,
+    config: Optional[OnlineConfig] = None,
+):
     """Register an online re-planning policy under ``name`` (decorator or
     direct call, mirroring :func:`register_planner`).  A policy is called
     at every candidate decision point of
@@ -1004,12 +1353,19 @@ def register_online_policy(name: str, fn: Optional[Callable] = None):
     ``kind`` one of ``"arrival"`` / ``"drift"`` / ``"failure"`` /
     ``"tick"``, ``snapshot`` the executor's
     :class:`repro.core.simulate.ProgressSnapshot` at that instant — and
-    returns whether to re-plan the active jobs now."""
+    returns whether to re-plan the active jobs now.
+
+    ``config`` attaches an :class:`OnlineConfig` describing *how* the
+    policy re-plans when it fires (solo vs shared co-replanning, the
+    replan-cost hysteresis factor); it defaults to PR 3's behavior (solo,
+    no hysteresis) and callers of ``run_online`` may override it per run."""
     if fn is None:
-        return lambda f: register_online_policy(name, f)
+        return lambda f: register_online_policy(name, f, config=config)
     if name in _ONLINE_POLICIES:
         raise ValueError(f"online policy {name!r} is already registered")
     _ONLINE_POLICIES[name] = fn
+    if config is not None:
+        _ONLINE_CONFIGS[name] = config
     return fn
 
 
@@ -1026,6 +1382,13 @@ def get_online_policy(name: str) -> Callable:
 def available_online_policies() -> Tuple[str, ...]:
     """Names of every registered online re-planning policy."""
     return tuple(_ONLINE_POLICIES)
+
+
+def get_online_config(name: str) -> OnlineConfig:
+    """The :class:`OnlineConfig` policy ``name`` registered with (the
+    default — solo re-planning, no hysteresis — when it registered none)."""
+    get_online_policy(name)  # validate the name
+    return _ONLINE_CONFIGS.get(name, OnlineConfig())
 
 
 @register_online_policy("static")
@@ -1046,6 +1409,28 @@ def _reactive_online_policy(kind, snapshot):
 def _horizon_online_policy(kind, snapshot):
     """Re-plan on a fixed cadence (every ``replan_dt`` tick), ignoring
     event triggers — the rolling-horizon control baseline."""
+    return kind == "tick"
+
+
+@register_online_policy(
+    "reactive_shared",
+    config=OnlineConfig(shared=True, hysteresis=1.0),
+)
+def _reactive_shared_policy(kind, snapshot):
+    """``reactive``'s triggers, but schedule-aware and cost-aware: every
+    firing co-replans all live jobs' residuals jointly against
+    shared-capacity pricing (:func:`replan_schedule`), and each per-job
+    swap must beat its :func:`swap_charge` under hysteresis 1.0."""
+    return kind in ("arrival", "failure", "drift")
+
+
+@register_online_policy(
+    "horizon_shared",
+    config=OnlineConfig(shared=True, hysteresis=1.0),
+)
+def _horizon_shared_policy(kind, snapshot):
+    """``horizon``'s fixed cadence with shared co-replanning and
+    replan-cost hysteresis (see :data:`OnlineConfig`)."""
     return kind == "tick"
 
 

@@ -411,6 +411,19 @@ class ProgressSnapshot:
         """Jobs with remaining work (released or not)."""
         return tuple(j for j in self.jobs if not j.done)
 
+    def residual_view(self) -> Tuple[Tuple[int, JobProgress], ...]:
+        """The multi-job residual view a schedule-aware re-planner
+        consumes: ``(job_index, progress)`` for every job with remaining
+        work, in job order.  These are the residuals
+        :func:`repro.core.optimize.replan_schedule` co-optimizes jointly
+        (the indices key :meth:`_MultiSim.swap_plan`)."""
+        return tuple((j.job, j) for j in self.jobs if not j.done)
+
+    def backlog_mb(self) -> float:
+        """Total MB queued across every substrate resource — one scalar a
+        policy can threshold on."""
+        return float(sum(self.backlog.values()))
+
 
 # ---------------------------------------------------------------------------
 # the engine

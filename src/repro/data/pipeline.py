@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Dict, Iterator, Optional, Sequence
+from typing import Dict, Iterator, Optional
 
 import numpy as np
 

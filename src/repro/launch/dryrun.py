@@ -26,13 +26,12 @@ Usage::
     python -m repro.launch.dryrun --all --multi-pod both --out reports/
 """
 import argparse
-import dataclasses
 import functools
 import json
 import re
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -40,11 +39,11 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import (
-    ARCHS, SHAPES, cache_specs, cells, get_config, input_specs, padded_for_tp,
+    SHAPES, cache_specs, cells, get_config, input_specs, padded_for_tp,
 )
 from repro.launch.mesh import batch_axes, make_production_mesh
 from repro.models import model as M
-from repro.models.sharding import DEFAULT_RULES, axis_rules, spec_for
+from repro.models.sharding import DEFAULT_RULES, axis_rules
 from repro.train.train_step import TrainConfig, init_state, make_train_step, state_shardings
 
 __all__ = ["run_cell", "collective_bytes_from_hlo"]

@@ -18,7 +18,7 @@ sharding rules, so a 16-pod 4096-chip job only changes the shape tuple.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 

@@ -27,7 +27,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, padded_for_tp
 from repro.core.platform import tpu_pod_platform

@@ -16,7 +16,6 @@ Attention picks one of three evaluation strategies:
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any, Dict, Optional, Tuple
 

@@ -17,7 +17,7 @@ decode path is what the ``decode_32k``/``long_500k`` dry-run cells lower.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ reductions across the data/pod axes are inserted by XLA SPMD; the
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

@@ -1,12 +1,15 @@
 """Shared test setup: make ``python -m pytest`` work from a fresh checkout
 without the ``PYTHONPATH=src`` incantation by prepending ``src/`` to
 ``sys.path`` (mirrors the ``[tool.pytest.ini_options] pythonpath`` entry in
-pyproject.toml, for runners that bypass the ini file)."""
+pyproject.toml, for runners that bypass the ini file).  The repo root is
+added too, so tests can import scenario builders from the ``benchmarks``
+package (e.g. ``tests/test_replan_shared.py``) from any cwd."""
 import os
 import sys
 
-_SRC = os.path.abspath(
-    os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir, "src")
+_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir)
 )
-if _SRC not in sys.path:
-    sys.path.insert(0, _SRC)
+for _path in (os.path.join(_ROOT, "src"), _ROOT):
+    if _path not in sys.path:
+        sys.path.insert(0, _path)

@@ -1,11 +1,9 @@
 """Launch-layer tests: collective-traffic parser, analytic attention flops,
 mesh construction, and the fault-tolerant train launcher (kill/resume)."""
 import os
-import shutil
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 

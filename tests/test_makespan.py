@@ -11,7 +11,6 @@ from repro.core.makespan import (
 )
 from repro.core.plan import ExecutionPlan, local_push_plan, uniform_plan
 from repro.core.platform import (
-    Platform,
     planetlab_platform,
     two_cluster_example,
 )

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.makespan import BARRIERS_ALL_GLOBAL, makespan, phase_breakdown
+from repro.core.makespan import makespan, phase_breakdown
 from repro.core.milp import (
     linearization_gap,
     separable_product,

@@ -1,0 +1,408 @@
+"""Tests for schedule-aware, cost-aware online re-planning (PR 4):
+shared-capacity residual pricing, joint residual co-replanning
+(`replan_schedule`), the replan-cost hysteresis (`OnlineConfig` /
+`swap_charge`), the `*_shared` online policies, and the
+`schedule_online_shared` acceptance scenario where solo-residual
+re-planning thrashes and co-replanning wins."""
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.api import Arrival, GeoJob, GeoSchedule, OnlineConfig
+from repro.core.makespan import (
+    BARRIERS_GGL,
+    CostModel,
+    JobProgress,
+    analytic_volumes,
+)
+from repro.core.optimize import (
+    available_online_policies,
+    get_online_config,
+    replan_schedule,
+    swap_charge,
+)
+from repro.core.plan import ExecutionPlan, uniform_plan
+from repro.core.platform import CapacityTrace, Substrate
+from repro.core.simulate import SimConfig, open_schedule, simulate_schedule
+
+ALL_BARRIER_TRIPLES = list(itertools.product("GLP", repeat=3))
+
+OPT = dict(n_restarts=6, steps=150)
+
+
+def pair_substrate(**traces) -> Substrate:
+    sub = Substrate(
+        B_sm=np.array([[200.0, 150.0], [150.0, 200.0]]),
+        B_mr=np.array([[500.0, 100.0], [500.0, 100.0]]),
+        C_m=np.array([100.0, 100.0]),
+        C_r=np.array([2000.0, 2000.0]),
+        cluster_s=np.array([0, 1]),
+        cluster_m=np.array([0, 1]),
+        cluster_r=np.array([0, 1]),
+        name="online_pair",
+    )
+    return sub.with_traces(traces) if traces else sub
+
+
+def two_fresh_jobs(sub):
+    v1 = sub.view(np.array([3000.0, 3000.0]), 1.0, name="a")
+    v2 = sub.view(np.array([1500.0, 1500.0]), 1.5, name="b")
+    return (v1, v2), (uniform_plan(v1), uniform_plan(v2)), (
+        JobProgress.fresh(v1), JobProgress.fresh(v2))
+
+
+# ---------------------------------------------------------------------------
+# shared residual pricing on the one cost model
+# ---------------------------------------------------------------------------
+
+
+class TestPriceResidualShared:
+    @pytest.mark.parametrize("barriers", ALL_BARRIER_TRIPLES,
+                             ids=["".join(b) for b in ALL_BARRIER_TRIPLES])
+    def test_fresh_snapshot_reproduces_price_shared(self, barriers):
+        """The satellite acceptance: with zero-progress snapshots,
+        price_residual_shared agrees with price_shared of the plans'
+        analytic volumes to 1e-9 on every barrier triple — online and
+        offline schedule decisions share one cost model."""
+        sub = pair_substrate()
+        views, plans, fresh = two_fresh_jobs(sub)
+        cm = CostModel(views[0], barriers)
+        got = cm.price_residual_shared(list(fresh), list(plans))
+        vols = [
+            analytic_volumes(v.D, np.asarray(p.x), np.asarray(p.y),
+                             v.alpha, xp=np)
+            for v, p in zip(views, plans)
+        ]
+        want = cm.price_shared(vols)
+        assert len(got) == len(want) == 2
+        for a, b in zip(got, want):
+            assert abs(float(a["makespan"]) - float(b["makespan"])) <= 1e-9
+            np.testing.assert_allclose(a["reduce_end"], b["reduce_end"],
+                                       atol=1e-9)
+
+    def test_single_job_matches_solo_residual(self):
+        """With one job there is nobody to contend with: shared residual
+        pricing degenerates to price_residual exactly."""
+        sub = pair_substrate()
+        v = sub.view(np.array([2000.0, 1000.0]), 1.0)
+        plan = uniform_plan(v)
+        fresh = JobProgress.fresh(v)
+        cm = CostModel(v, BARRIERS_GGL)
+        solo = cm.price_residual(fresh, plan)
+        shared = cm.price_residual_shared([fresh], [plan])
+        assert float(shared[0]["makespan"]) == pytest.approx(
+            float(solo["makespan"]), abs=1e-12
+        )
+
+    def test_contention_inflates_both_jobs(self):
+        sub = pair_substrate()
+        views, plans, fresh = two_fresh_jobs(sub)
+        cm = CostModel(views[0], BARRIERS_GGL)
+        shared = cm.price_residual_shared(list(fresh), list(plans))
+        for v, p, out in zip(views, plans, shared):
+            solo = CostModel(v, BARRIERS_GGL).price_residual(
+                JobProgress.fresh(v), p
+            )
+            assert float(out["makespan"]) > float(solo["makespan"])
+        agg = cm.residual_schedule_makespan(list(fresh), list(plans))
+        assert agg == pytest.approx(
+            max(float(out["makespan"]) for out in shared)
+        )
+
+    def test_length_mismatch_raises(self):
+        sub = pair_substrate()
+        views, plans, fresh = two_fresh_jobs(sub)
+        cm = CostModel(views[0], BARRIERS_GGL)
+        with pytest.raises(ValueError, match="one plan per progress"):
+            cm.price_residual_shared(list(fresh), [plans[0]])
+
+
+# ---------------------------------------------------------------------------
+# joint residual co-replanning
+# ---------------------------------------------------------------------------
+
+
+class TestReplanSchedule:
+    def test_never_modeled_worse_than_incumbents(self):
+        """The incumbent stack competes in float64, so the co-replanned
+        aggregate is never worse than keeping every plan."""
+        sub = pair_substrate()
+        views, plans, fresh = two_fresh_jobs(sub)
+        res = replan_schedule(sub, list(plans), list(fresh),
+                              barriers=BARRIERS_GGL, **OPT)
+        assert res.makespan <= max(res.before) + 1e-9
+        assert res.improvement >= 0.0
+        assert len(res.plans) == len(res.before) == len(res.after) == 2
+
+    def test_improves_contended_uniform_stack(self):
+        """Two uniform plans fighting over the same fast links leave obvious
+        shared-pricing headroom — the joint solver must find some."""
+        sub = pair_substrate()
+        views, plans, fresh = two_fresh_jobs(sub)
+        res = replan_schedule(sub, list(plans), list(fresh),
+                              barriers=BARRIERS_GGL, **OPT)
+        assert res.makespan < max(res.before)
+
+    def test_done_jobs_pass_through(self):
+        sub = pair_substrate()
+        views, plans, fresh = two_fresh_jobs(sub)
+        done = dataclasses.replace(fresh[1], done=True)
+        res = replan_schedule(sub, list(plans), [fresh[0], done],
+                              barriers=BARRIERS_GGL, **OPT)
+        assert res.plans[1] is plans[1]
+        assert res.before[1] == res.after[1] == 0.0
+
+    def test_all_done_returns_incumbents(self):
+        sub = pair_substrate()
+        views, plans, fresh = two_fresh_jobs(sub)
+        done = [dataclasses.replace(pr, done=True) for pr in fresh]
+        res = replan_schedule(sub, list(plans), done,
+                              barriers=BARRIERS_GGL, **OPT)
+        assert res.plans == tuple(plans)
+        assert res.makespan == 0.0
+
+    def test_accepts_progress_snapshot(self):
+        """The executor's ProgressSnapshot is usable directly as the
+        multi-job residual view."""
+        sub = pair_substrate()
+        v = sub.view(np.array([2000.0, 1000.0]), 1.0)
+        plan = uniform_plan(v)
+        cfg = SimConfig(barriers=BARRIERS_GGL, chunk_mb=100.0)
+        eng = open_schedule([(v, plan, cfg)], substrate=sub)
+        eng.run_until(5.0)
+        snap = eng.snapshot()
+        assert len(snap.residual_view()) == 1
+        assert snap.residual_view()[0][0] == 0
+        res = replan_schedule(sub, [plan], snap, barriers=BARRIERS_GGL,
+                              **OPT)
+        assert res.makespan <= max(res.before) + 1e-9
+
+    def test_length_mismatch_raises(self):
+        sub = pair_substrate()
+        views, plans, fresh = two_fresh_jobs(sub)
+        with pytest.raises(ValueError, match="one incumbent per progress"):
+            replan_schedule(sub, [plans[0]], list(fresh))
+
+
+# ---------------------------------------------------------------------------
+# OnlineConfig, swap_charge and the policy registry
+# ---------------------------------------------------------------------------
+
+
+class TestOnlineConfig:
+    def test_shared_variants_registered(self):
+        assert {"reactive_shared", "horizon_shared"} <= set(
+            available_online_policies()
+        )
+        for name in ("reactive_shared", "horizon_shared"):
+            cfg = get_online_config(name)
+            assert cfg.shared and cfg.hysteresis == 1.0
+
+    def test_solo_policies_default_config(self):
+        for name in ("static", "reactive", "horizon"):
+            cfg = get_online_config(name)
+            assert not cfg.shared and cfg.hysteresis == 0.0
+
+    def test_unknown_policy_raises(self):
+        with pytest.raises(ValueError, match="online policy must be one of"):
+            get_online_config("no_such_policy")
+
+    def test_horizon_shared_requires_replan_dt(self):
+        """horizon_shared replans only on ticks, like horizon — without
+        replan_dt it would silently reproduce static, so it must raise."""
+        sub = pair_substrate()
+        v = sub.view(np.array([1000.0, 1000.0]), 1.0)
+        sched = GeoSchedule(
+            [GeoJob(v).with_plan(uniform_plan(v), BARRIERS_GGL)]
+        ).with_plans()
+        with pytest.raises(ValueError, match="replan_dt"):
+            sched.run_online(policy="horizon_shared",
+                             cfg=SimConfig(barriers=BARRIERS_GGL))
+
+    def test_validation(self):
+        assert OnlineConfig(hysteresis=float("inf")).hysteresis == float("inf")
+        with pytest.raises(ValueError, match="hysteresis"):
+            OnlineConfig(hysteresis=-0.5)
+        with pytest.raises(ValueError, match="hysteresis"):
+            OnlineConfig(hysteresis=float("nan"))
+        with pytest.raises(ValueError, match="solver_cost_s"):
+            OnlineConfig(solver_cost_s=-1.0)
+
+
+class TestSwapCharge:
+    def test_identity_swap_costs_solver_only(self):
+        sub = pair_substrate()
+        v = sub.view(np.array([2000.0, 1000.0]), 1.0)
+        plan = uniform_plan(v)
+        fresh = JobProgress.fresh(v)
+        assert swap_charge(sub, fresh, plan, plan, solver_cost_s=2.5) \
+            == pytest.approx(2.5)
+
+    def test_rerouting_queued_bytes_costs_more(self):
+        sub = pair_substrate()
+        v = sub.view(np.array([2000.0, 1000.0]), 1.0)
+        fresh = JobProgress.fresh(v)
+        a = uniform_plan(v)
+        b = ExecutionPlan(x=np.array([[1.0, 0.0], [0.0, 1.0]]),
+                          y=np.array([1.0, 0.0]))
+        charge = swap_charge(sub, fresh, a, b, solver_cost_s=1.0)
+        assert charge > 1.0
+        # monotone in the re-routed volume: nothing queued -> solver only
+        drained = dataclasses.replace(
+            fresh, resid_push=np.zeros(2), shuffle_pool=np.zeros(2)
+        )
+        assert swap_charge(sub, drained, a, b, solver_cost_s=1.0) \
+            == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# hysteresis: inf reproduces static byte-for-byte
+# ---------------------------------------------------------------------------
+
+
+class TestInfiniteHysteresisIsStatic:
+    @pytest.mark.parametrize("barriers", [("G", "G", "L"), ("P", "P", "P"),
+                                          ("L", "G", "P")],
+                             ids=lambda b: "".join(b))
+    def test_reproduces_static_policy(self, barriers):
+        """The satellite acceptance: hysteresis=inf rejects every swap, so
+        the steered run is phase-for-phase the frozen offline pipeline —
+        with an arrival and capacity drift in play."""
+        sub = pair_substrate(**{
+            "shuffle[m0->r0]": CapacityTrace.step(500.0, 2.0, 40.0),
+            "shuffle[m1->r0]": CapacityTrace.step(500.0, 2.0, 40.0),
+        })
+        v1 = sub.view(np.array([3000.0, 3000.0]), 1.0, name="steady")
+        v2 = sub.view(np.array([1500.0, 1500.0]), 1.0, name="late")
+        plan1, plan2 = uniform_plan(v1), uniform_plan(v2)
+        cfg = SimConfig(barriers=barriers, chunk_mb=256.0)
+        t_arrival = 13.7
+        sched = GeoSchedule(
+            [GeoJob(v1).with_plan(plan1, barriers)]
+        ).with_plans()
+        report = sched.run_online(
+            policy="reactive_shared",
+            arrivals=[Arrival(GeoJob(v2).with_plan(plan2, barriers),
+                              t_arrival)],
+            cfg=cfg, n_restarts=2, steps=40,
+            online=OnlineConfig(shared=True, hysteresis=float("inf")),
+        )
+        ref = simulate_schedule(
+            [(v1, plan1, cfg),
+             (v2, plan2, dataclasses.replace(cfg, start_time=t_arrival))],
+            substrate=sub,
+        )
+        for got, want in zip(report.sim.jobs, ref.jobs):
+            for phase, t in want.phases().items():
+                assert abs(got.phases()[phase] - t) <= 1e-9, phase
+        assert abs(report.makespan_online - ref.makespan) <= 1e-9
+        assert report.swaps == ()
+        # the declined candidates are on the record, with their charges
+        assert all(d.charge > 0 for d in report.rejected)
+        assert report.plans[0] is plan1 and report.plans[1] is plan2
+
+
+# ---------------------------------------------------------------------------
+# the acceptance scenario: co-replanning + hysteresis wins
+# ---------------------------------------------------------------------------
+
+
+def shared_scenario():
+    """The `schedule_online_shared` fabric (see
+    benchmarks.paper_figures.shared_online_substrate): the late job is
+    stuck on reducer r1, the fast reducer r0 degrades mid-shuffle of the
+    steady job, and two nuisance trace steps on dead links bait
+    hysteresis-free re-planning into thrashing."""
+    from benchmarks.paper_figures import shared_online_substrate
+
+    sub = shared_online_substrate()
+    steady = GeoJob(sub.view(np.array([8000.0, 8000.0, 0.0, 0.0]), 1.0,
+                             name="steady"))
+    late_view = sub.view(np.array([0.0, 0.0, 6000.0, 6000.0]), 1.0,
+                         name="late")
+    return sub, steady, late_view
+
+
+@pytest.fixture(scope="module")
+def shared_scenario_reports():
+    """Run the acceptance scenario once for all assertions: frozen joint,
+    solo reactive, reactive_shared, and hysteresis-free co-replanning."""
+    sub, steady, late_view = shared_scenario()
+    cfg = SimConfig(barriers=BARRIERS_GGL)
+    t_arrival = 50.0
+    frozen = GeoSchedule([steady, GeoJob(late_view)]).plan(
+        "joint", mode="e2e_multi", barriers=BARRIERS_GGL, **OPT
+    )
+    frozen_sim = simulate_schedule(
+        [(steady.platform, frozen.planned.plans[0], cfg),
+         (late_view, frozen.planned.plans[1],
+          dataclasses.replace(cfg, start_time=t_arrival))],
+        substrate=sub,
+    )
+    sched = GeoSchedule([steady]).plan(
+        "independent", mode="e2e_multi", barriers=BARRIERS_GGL, **OPT
+    )
+    reports = {"frozen_sim": frozen_sim}
+    for name, policy, online in (
+        ("solo", "reactive", None),
+        ("shared", "reactive_shared", None),
+        ("no_hysteresis", "reactive_shared",
+         OnlineConfig(shared=True, hysteresis=0.0)),
+    ):
+        arrival = Arrival(
+            GeoJob(late_view).with_plan(frozen.planned.plans[1],
+                                        BARRIERS_GGL),
+            t_arrival,
+        )
+        reports[name] = sched.run_online(
+            policy=policy, arrivals=[arrival], cfg=cfg, online=online,
+            **OPT,
+        )
+    return reports
+
+
+class TestSharedScenario:
+    def test_shared_beats_frozen_joint(self, shared_scenario_reports):
+        r = shared_scenario_reports
+        gain = 1.0 - r["shared"].makespan_online / r["frozen_sim"].makespan
+        assert gain >= 0.10, (
+            f"reactive_shared {r['shared'].makespan_online:.0f}s vs frozen "
+            f"joint {r['frozen_sim'].makespan:.0f}s — only {gain:.0%}"
+        )
+
+    def test_shared_beats_solo_residual_replanning(
+        self, shared_scenario_reports
+    ):
+        """THE tentpole acceptance: co-replanning sees the late job stuck
+        on r1 and keeps the steady job off it; solo residual re-planning
+        spills onto r1 because each job is priced as a sole tenant."""
+        r = shared_scenario_reports
+        assert r["shared"].makespan_online < r["solo"].makespan_online, (
+            f"shared {r['shared'].makespan_online:.0f}s vs solo "
+            f"{r['solo'].makespan_online:.0f}s"
+        )
+
+    def test_hysteresis_accepts_fewer_swaps(self, shared_scenario_reports):
+        """The nuisance drift events bait epsilon swaps out of
+        hysteresis-free co-replanning; the replan-cost charge rejects
+        them."""
+        r = shared_scenario_reports
+        assert len(r["shared"].swaps) < len(r["no_hysteresis"].swaps)
+        assert len(r["shared"].rejected) >= 1
+        # without losing the big wins: same ballpark makespan
+        assert r["shared"].makespan_online <= \
+            r["no_hysteresis"].makespan_online * 1.10
+
+    def test_decision_accounting(self, shared_scenario_reports):
+        r = shared_scenario_reports
+        report = r["shared"]
+        for d in report.decisions:
+            assert d.action in ("inject", "swap", "keep", "reject")
+            if d.action in ("swap", "reject"):
+                assert d.charge > 0.0
+            assert d.modeled_after >= 0.0
+        assert report.charged_s > 0.0
+        assert "charged" in report.timeline()
+        assert "rejected" in report.summary()

@@ -21,7 +21,7 @@ from repro.core.optimize import (
     register_schedule_planner,
 )
 from repro.core.plan import uniform_plan
-from repro.core.platform import Platform, Substrate, planetlab_platform
+from repro.core.platform import Substrate, planetlab_platform
 from repro.core.simulate import (
     SimConfig,
     simulate,

@@ -3,7 +3,7 @@ semantics, fault tolerance, and the paper's dynamic mechanisms."""
 import numpy as np
 import pytest
 
-from repro.core.makespan import BARRIERS_ALL_GLOBAL, BARRIERS_GGL, makespan
+from repro.core.makespan import BARRIERS_GGL, makespan
 from repro.core.optimize import optimize_plan
 from repro.core.plan import uniform_plan
 from repro.core.platform import planetlab_platform
