@@ -37,11 +37,19 @@ import json
 import math
 import os
 import sys
-from typing import Dict
+from typing import Dict, Optional
 
 #: leaf keys inside a scenario's results that are gated (seconds; emitted by
 #: the deterministic model/executor, not wall clock)
 METRIC_KEYS = frozenset({"makespan", "simulated", "modeled"})
+
+#: per-scenario tolerance overrides (relative; scenarios absent here use
+#: ``--tolerance``).  Annealed-solver scenarios whose discrete chunk
+#: routing amplifies small plan differences get a wider gate; tighten (or
+#: extend via ``--scenario-tolerance NAME=VAL``) as they prove stable.
+SCENARIO_TOLERANCES = {
+    "pipeline_chain": 0.35,
+}
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "baseline.json")
@@ -76,28 +84,39 @@ def scenario_names(metrics: Dict[str, float]) -> "set[str]":
 
 
 def compare(
-    baseline: Dict[str, float], current: Dict[str, float], tolerance: float
+    baseline: Dict[str, float],
+    current: Dict[str, float],
+    tolerance: float,
+    scenario_tolerances: "Optional[Dict[str, float]]" = None,
 ) -> "list[str]":
-    """Return the list of failures (empty = gate passes)."""
+    """Return the list of failures (empty = gate passes).
+
+    ``scenario_tolerances`` overrides ``tolerance`` per scenario (the
+    metric path's leading component), defaulting to
+    :data:`SCENARIO_TOLERANCES`."""
+    overrides = SCENARIO_TOLERANCES if scenario_tolerances is None \
+        else scenario_tolerances
     failures = []
     missing_scenarios = scenario_names(baseline) - scenario_names(current)
     for name in sorted(missing_scenarios):
         failures.append(f"scenario disappeared: {name}")
     for path, base in sorted(baseline.items()):
-        if path.split("/", 1)[0] in missing_scenarios:
+        scenario = path.split("/", 1)[0]
+        if scenario in missing_scenarios:
             continue  # already reported wholesale
         if path not in current:
             failures.append(f"metric disappeared: {path}")
             continue
         cur = current[path]
+        tol = overrides.get(scenario, tolerance)
         # tiny epsilon floor only (the gated metrics are deterministic
         # model outputs, so sub-second baselines deserve the same relative
         # gate as hundred-second ones)
         dev = abs(cur - base) / max(abs(base), 1e-6)
-        if dev > tolerance:
+        if dev > tol:
             failures.append(
                 f"{path}: {cur:.2f}s vs baseline {base:.2f}s "
-                f"({dev:+.0%} > ±{tolerance:.0%})"
+                f"({dev:+.0%} > ±{tol:.0%})"
             )
     return failures
 
@@ -110,10 +129,24 @@ def main() -> int:
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="max relative deviation per metric (default 0.25)")
+    ap.add_argument("--scenario-tolerance", action="append", default=[],
+                    metavar="NAME=VAL",
+                    help="per-scenario tolerance override (repeatable), "
+                         "e.g. --scenario-tolerance pipeline_chain=0.4; "
+                         "adds to the built-in SCENARIO_TOLERANCES")
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the baseline from the current run "
                          "instead of comparing")
     args = ap.parse_args()
+    scenario_tolerances = dict(SCENARIO_TOLERANCES)
+    for item in args.scenario_tolerance:
+        name, _, value = item.partition("=")
+        if not name or not value:
+            ap.error(f"--scenario-tolerance expects NAME=VAL, got {item!r}")
+        try:
+            scenario_tolerances[name] = float(value)
+        except ValueError:
+            ap.error(f"bad tolerance value in {item!r}")
 
     with open(args.current) as f:
         doc = json.load(f)
@@ -140,7 +173,8 @@ def main() -> int:
         base_doc = json.load(f)
     baseline = extract_metrics(base_doc)
 
-    failures = compare(baseline, current, args.tolerance)
+    failures = compare(baseline, current, args.tolerance,
+                       scenario_tolerances)
     new = sorted(set(current) - set(baseline))
     if new:
         print(f"[compare] {len(new)} metric(s) not in baseline (not gated; "

@@ -59,6 +59,10 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write machine-readable per-scenario timings "
                          "(modeled/simulated makespans + wall seconds)")
+    ap.add_argument("--scenario", action="append", default=None,
+                    metavar="NAME",
+                    help="run only the named scenario (repeatable) — lets "
+                         "CI and local dev re-run a single scenario")
     ap.add_argument("--out", default="reports")
     args = ap.parse_args()
     if args.quick:
@@ -77,7 +81,15 @@ def main() -> None:
         ("schedule", F.schedule_contention),
         ("schedule_online", F.schedule_online),
         ("schedule_online_shared", F.schedule_online_shared),
+        ("pipeline_chain", F.pipeline_chain),
     ]
+    if args.scenario:
+        known = {name for name, _ in scenarios}
+        unknown = sorted(set(args.scenario) - known)
+        if unknown:
+            ap.error(f"unknown scenario(s) {unknown} — choose from "
+                     f"{sorted(known)}")
+        scenarios = [(n, fn) for n, fn in scenarios if n in args.scenario]
 
     results, wall = {}, {}
     print("name,us_per_call,derived")

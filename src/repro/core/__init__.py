@@ -30,20 +30,25 @@ from .optimize import (
     MODES,
     SCHEDULE_OBJECTIVES,
     OnlineConfig,
+    PipelinePlanResult,
     PlanResult,
     SchedulePlanResult,
     ScheduleReplanResult,
     available_modes,
     available_online_policies,
+    available_pipeline_modes,
     available_policies,
     brute_force_plan,
     get_online_config,
     get_online_policy,
+    get_pipeline_planner,
     get_planner,
     get_schedule_planner,
+    optimize_pipeline,
     optimize_plan,
     optimize_schedule,
     register_online_policy,
+    register_pipeline_planner,
     register_planner,
     register_schedule_planner,
     replan,
@@ -51,6 +56,7 @@ from .optimize import (
     score_residual_shared,
     swap_charge,
 )
+from .pipeline import PipelineSpec, StageSpec, chain_spec
 from .plan import ExecutionPlan, local_push_plan, uniform_plan
 from .platform import (
     CapacityTrace,
@@ -81,9 +87,12 @@ __all__ = [
     "JobProgress",
     "MODES",
     "OnlineConfig",
+    "PipelinePlanResult",
+    "PipelineSpec",
     "Platform",
     "PlanResult",
     "ProgressSnapshot",
+    "StageSpec",
     "ResourceStats",
     "SCHEDULE_OBJECTIVES",
     "SchedulePlanResult",
@@ -94,19 +103,24 @@ __all__ = [
     "Substrate",
     "available_modes",
     "available_online_policies",
+    "available_pipeline_modes",
     "available_policies",
     "brute_force_plan",
+    "chain_spec",
     "get_online_config",
     "get_online_policy",
+    "get_pipeline_planner",
     "get_planner",
     "get_schedule_planner",
     "local_push_plan",
     "open_schedule",
     "register_online_policy",
+    "register_pipeline_planner",
     "register_planner",
     "register_schedule_planner",
     "makespan",
     "makespan_model",
+    "optimize_pipeline",
     "optimize_plan",
     "optimize_schedule",
     "phase_breakdown",

@@ -54,6 +54,7 @@ __all__ = [
     "makespan",
     "makespan_model",
     "phase_breakdown",
+    "replication_matrix",
     "residual_volumes",
     "shared_effective_volumes",
     "volume_model",
@@ -159,14 +160,60 @@ def volume_model(
     }
 
 
-def analytic_volumes(D, x, y, alpha, xp=jnp):
+def analytic_volumes(D, x, y, alpha, xp=jnp, rep=None):
     """Per-phase data volumes (MB) implied by a plan: ``D_i·x_ij`` pushed,
-    ``xᵀD`` mapped, ``α·map_in_j·y_k`` shuffled, ``α·Σmap_in·y`` reduced."""
+    ``xᵀD`` mapped, ``α·map_in_j·y_k`` shuffled, ``α·Σmap_in·y`` reduced.
+
+    ``rep`` is an optional (nM, nM) replica-routing matrix
+    (:func:`replication_matrix`): push volumes are right-multiplied by it,
+    so link ``(i, t)`` carries the original push plus every replica write
+    the executor routes to ``t``.  Map/shuffle/reduce volumes are *not*
+    inflated — replica targets store the bytes but never run map work.
+    """
     V_push = D[:, None] * x  # (nS, nM)
     map_in = x.T @ D  # (nM,)
+    if rep is not None:
+        V_push = V_push @ rep
     V_shuffle = alpha * (map_in[:, None] * y[None, :])  # (nM, nR)
     V_reduce = alpha * xp.sum(map_in) * y  # (nR,)
     return V_push, map_in, V_shuffle, V_reduce
+
+
+def replication_matrix(
+    cluster_m, replication: int = 1, cross_cluster: bool = False
+) -> Optional[np.ndarray]:
+    """The (nM, nM) push-volume routing matrix of ``replication``-way
+    writes: entry ``(j, t)`` is how many copies of a chunk destined for
+    mapper ``j`` the executor writes over the source's link to ``t``
+    (identity + replica fan-out).  Mirrors the executor's deterministic
+    target choice (:meth:`repro.core.simulate._MultiSim._replicate`):
+    replicas of mapper ``j``'s chunks go to the other mappers of ``j``'s
+    cluster (or, with ``cross_cluster``, to other clusters), round-robin
+    from ``j+1``.  ``V_push @ replication_matrix(...)`` is the modeled
+    per-link push traffic including replica writes — the term the cost
+    model was silently missing for ``SimConfig.replication > 1``.
+
+    Returns ``None`` for ``replication == 1`` (no inflation).
+    """
+    if replication <= 1:
+        return None
+    cluster_m = np.asarray(cluster_m)
+    nM = cluster_m.shape[0]
+    R = np.eye(nM)
+    for j in range(nM):
+        if cross_cluster:
+            candidates = [m for m in range(nM)
+                          if cluster_m[m] != cluster_m[j]]
+        else:
+            candidates = [m for m in range(nM)
+                          if cluster_m[m] == cluster_m[j] and m != j]
+        if not candidates:
+            candidates = [m for m in range(nM) if m != j]
+        if not candidates:  # single-mapper substrate: nowhere to replicate
+            continue
+        for r in range(replication - 1):
+            R[j, candidates[(j + r + 1) % len(candidates)]] += 1.0
+    return R
 
 
 def shared_effective_volumes(volumes, kappa: float = 0.0, xp=np):
@@ -307,7 +354,7 @@ class JobProgress:
 
 def residual_volumes(
     resid_push, committed_push, at_mapper, shuffle_pool, committed_shuffle,
-    at_reducer, alpha, x, y, xp=jnp,
+    at_reducer, alpha, x, y, xp=jnp, rep=None,
 ):
     """Per-phase volumes of the *remaining* work under a candidate plan.
 
@@ -316,8 +363,14 @@ def residual_volumes(
     enter as fixed per-resource volumes.  With zero committed/delivered
     buckets this degenerates to ``analytic_volumes(resid_push, x, y,
     alpha)`` — a fresh job is the special case of an untouched residual.
+    ``rep`` (see :func:`replication_matrix`) inflates the re-routable push
+    with its replica writes; committed transfers are already on the wire
+    and enter as-is.
     """
-    V_push = resid_push[:, None] * x + committed_push
+    V_push = resid_push[:, None] * x
+    if rep is not None:
+        V_push = V_push @ rep
+    V_push = V_push + committed_push
     map_in = x.T @ resid_push + at_mapper + xp.sum(committed_push, axis=0)
     out = alpha * map_in + shuffle_pool  # map-output MB leaving each mapper
     V_shuffle = out[:, None] * y[None, :] + committed_shuffle
@@ -398,23 +451,45 @@ class CostModel:
     converted to MB).  Both run the exact hard-max equations in float64, so
     pricing the analytic volumes of a plan reproduces :func:`makespan`
     bit-for-bit.
+
+    ``replication``/``cross_cluster_replication`` mirror the executor's
+    :class:`repro.core.simulate.SimConfig` fields: every *derived* push
+    volume (plan, residual, shared, pipeline pricing) is inflated by the
+    replica-routing matrix (:func:`replication_matrix`), so the model
+    prices the replica writes the executor actually performs.  Explicit
+    volumes passed to :meth:`price_volumes` are taken as-is — measured
+    byte matrices already contain whatever traffic really moved.
     """
 
     platform: Platform
     barriers: Tuple[str, str, str] = BARRIERS_ALL_GLOBAL
+    replication: int = 1
+    cross_cluster_replication: bool = False
 
     def __post_init__(self):
         object.__setattr__(self, "barriers", _check_barriers(self.barriers))
+        if self.replication < 1:
+            raise ValueError(
+                f"replication must be >= 1, got {self.replication}"
+            )
 
     def _barriers(self, barriers) -> Tuple[str, str, str]:
         return self.barriers if barriers is None else _check_barriers(barriers)
 
+    def _rep(self) -> Optional[np.ndarray]:
+        """The replica-routing matrix, ``None`` for replication=1."""
+        return replication_matrix(
+            self.platform.cluster_m, self.replication,
+            self.cross_cluster_replication,
+        )
+
     # -- volume derivation ---------------------------------------------------
     def analytic_volumes(self, plan: ExecutionPlan):
-        """(V_push, V_map, V_shuffle, V_reduce) in MB implied by ``plan``."""
+        """(V_push, V_map, V_shuffle, V_reduce) in MB implied by ``plan``
+        (push inflated by replica writes when ``replication > 1``)."""
         p = self.platform
         return analytic_volumes(p.D, np.asarray(plan.x), np.asarray(plan.y),
-                                p.alpha, xp=np)
+                                p.alpha, xp=np, rep=self._rep())
 
     # -- pricing -------------------------------------------------------------
     def price_volumes(
@@ -454,7 +529,7 @@ class CostModel:
                 progress.at_mapper, progress.shuffle_pool,
                 progress.committed_shuffle, progress.at_reducer,
                 progress.alpha, np.asarray(plan.x), np.asarray(plan.y),
-                xp=np,
+                xp=np, rep=self._rep(),
             ),
             barriers=barriers,
         )
@@ -489,7 +564,17 @@ class CostModel:
         gate) and priced through the identical float64 phase equations.
         ``volumes_list`` holds one ``(V_push, V_map, V_shuffle, V_reduce)``
         tuple per job — analytic or measured, exactly as for
-        :meth:`price_volumes`."""
+        :meth:`price_volumes`.  When the model replicates
+        (``replication > 1``), each job's push volumes are inflated by the
+        replica writes *before* contention — so concurrent jobs contend
+        for the replica traffic too (pass measured volumes through a
+        replication-1 model; they already contain the real traffic)."""
+        rep = self._rep()
+        if rep is not None:
+            volumes_list = [
+                (np.asarray(v[0], dtype=np.float64) @ rep, v[1], v[2], v[3])
+                for v in volumes_list
+            ]
         eff = shared_effective_volumes(volumes_list, kappa=0.0, xp=np)
         return [self.price_volumes(*v, barriers=barriers) for v in eff]
 
@@ -519,11 +604,13 @@ class CostModel:
                 f"one plan per progress, got {len(progress_list)} progresses "
                 f"and {len(plans)} plans"
             )
+        rep = self._rep()
         vols = [
             residual_volumes(
                 pr.resid_push, pr.committed_push, pr.at_mapper,
                 pr.shuffle_pool, pr.committed_shuffle, pr.at_reducer,
                 pr.alpha, np.asarray(plan.x), np.asarray(plan.y), xp=np,
+                rep=rep,
             )
             for pr, plan in zip(progress_list, plans)
         ]
@@ -541,6 +628,60 @@ class CostModel:
             for out in self.price_residual_shared(progress_list, plans,
                                                   barriers)
         )
+
+    # -- pipeline pricing ----------------------------------------------------
+    def price_pipeline(self, spec, plans, barriers=None) -> Dict[str, object]:
+        """Price a stage DAG end to end: chain the identical float64 phase
+        equations across stages, with each downstream stage's ``D`` derived
+        from its upstream stages' shuffle placement
+        (:meth:`repro.core.pipeline.PipelineSpec.derived_D` — the
+        inter-stage coupling flows through the one home of the phase
+        equations) and makespans composed along the DAG's critical path: a
+        stage starts when every upstream stage's reduce output has landed
+        (the inter-stage barrier the executor gates per source; the
+        scalar-start composition here is its tight upper bound).
+
+        Returns ``{"stages": [per-stage price_volumes dicts], "start":
+        [...], "finish": [...], "D": [derived per-stage D], "makespan"}``.
+        A single root stage reproduces :meth:`price_plan` exactly.
+        """
+        barriers = self._barriers(barriers)
+        if len(plans) != spec.n_stages:
+            raise ValueError(
+                f"one plan per stage, got {len(plans)} plans for "
+                f"{spec.n_stages} stages"
+            )
+        D_list = spec.derived_D(plans)
+        sub = spec.substrate
+        rep = self._rep()
+        n = spec.n_stages
+        outs: "list" = [None] * n
+        start = [0.0] * n
+        finish = [0.0] * n
+        mx, pmax = _np_hard_ops()
+        for k in spec.topo_order():
+            stage = spec.stages[k]
+            V = analytic_volumes(
+                D_list[k], np.asarray(plans[k].x), np.asarray(plans[k].y),
+                stage.alpha, xp=np, rep=rep,
+            )
+            outs[k] = volume_model(
+                *V, sub.B_sm, sub.B_mr, sub.C_m, sub.C_r,
+                barriers, mx, pmax, xp=np,
+            )
+            start[k] = max((finish[u] for u in stage.deps), default=0.0)
+            finish[k] = start[k] + float(outs[k]["makespan"])
+        return {
+            "stages": outs,
+            "start": start,
+            "finish": finish,
+            "D": D_list,
+            "makespan": max(finish),
+        }
+
+    def pipeline_makespan(self, spec, plans, barriers=None) -> float:
+        """Modeled end-to-end seconds of the whole stage DAG."""
+        return float(self.price_pipeline(spec, plans, barriers)["makespan"])
 
 
 def makespan(

@@ -53,6 +53,17 @@ class ExecutionPlan:
     def nR(self) -> int:
         return self.y.shape[0]
 
+    @classmethod
+    def renormalized(cls, x, y, meta: str = "") -> "ExecutionPlan":
+        """Build a plan from near-simplex candidates (e.g. float32 softmax
+        output of the annealed solvers): clip negatives and renormalize the
+        rows of ``x`` and ``y`` in float64 so the plan validates exactly."""
+        x = np.clip(np.asarray(x, dtype=np.float64), 0.0, None)
+        x = x / x.sum(axis=1, keepdims=True)
+        y = np.clip(np.asarray(y, dtype=np.float64), 0.0, None)
+        y = y / y.sum()
+        return cls(x=x, y=y, meta=meta)
+
     def x_mr(self) -> np.ndarray:
         """The full (nM, nR) shuffle matrix implied by Equation 3."""
         return np.broadcast_to(self.y[None, :], (self.nM, self.nR)).copy()

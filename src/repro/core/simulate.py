@@ -303,6 +303,25 @@ class _JobRun:
         self.rng = np.random.default_rng(cfg.seed)
         self.seeded = False
 
+        # -- pipeline stage linkage (set via _MultiSim.link_stages) --------
+        #: upstream run indices whose reduce output feeds this run
+        self.stage_deps: Tuple[int, ...] = ()
+        #: upstream run idx -> reduce-output MB per reduce-input MB
+        self.stage_scale: Dict[int, float] = {}
+        #: source idx -> set of upstream run idxs whose output has not yet
+        #: landed there (a source releases when its set empties)
+        self.dep_pending: Dict[int, set] = {}
+        #: per-source MB landed from finalized upstream reducers
+        self.dep_landed = np.zeros(platform.nS)
+        #: reduce-input MB this run has *completed* per reducer (what a
+        #: downstream stage's source receives, times out_scale)
+        self.delivered_out = np.zeros(nR)
+        #: shuffle chunks destined to each reducer, created but not yet
+        #: reduced — zero (with shuffle final) marks the reducer's output
+        #: as landed for downstream stages
+        self.reduce_outstanding = np.zeros(nR, dtype=np.int64)
+        self.reducer_final = np.zeros(nR, dtype=bool)
+
         self.map_alive = np.ones(nM, dtype=bool)
 
         # outstanding counters for gates
@@ -453,6 +472,9 @@ class _MultiSim:
         self._seq = itertools.count()
         self._cid = itertools.count()
         self._started = False
+        #: pipeline linkage: parent run idx -> downstream run idxs whose
+        #: sources consume the parent's reduce output
+        self.stage_children: Dict[int, List[int]] = {}
 
         nS, nM, nR = substrate.nS, substrate.nM, substrate.nR
         trace = substrate.trace_for
@@ -485,17 +507,143 @@ class _MultiSim:
     def _start(self):
         """Schedule the initial seeds and failures (idempotent) — jobs
         sharing a release time seed round-robin (chunk-interleaved bookings
-        approximate fair-share FIFO on contended links)."""
+        approximate fair-share FIFO on contended links).  Stage-linked runs
+        (:meth:`link_stages`) are not seeded here: their sources release as
+        upstream reduce output lands."""
         if self._started:
             return
         self._started = True
-        for start in sorted({g.cfg.start_time for g in self.runs}):
-            group = [g for g in self.runs if g.cfg.start_time == start]
+        roots = [g for g in self.runs if not g.stage_deps]
+        for start in sorted({g.cfg.start_time for g in roots}):
+            group = [g for g in roots if g.cfg.start_time == start]
             self.at(start, "seed_jobs", tuple(g.idx for g in group))
         for g in self.runs:
             if g.cfg.fail_mapper is not None:
                 j, tf = g.cfg.fail_mapper
                 self.at(tf, "fail_mapper", g, j)
+
+    # -- pipeline stage linkage --------------------------------------------
+    def link_stages(
+        self, child: int, parents: Sequence[Tuple[int, float]]
+    ) -> None:
+        """Make run ``child`` a downstream pipeline stage of ``parents``
+        (``(parent_run_idx, out_scale)`` pairs): its push chunks at source
+        node ``s`` release only when every parent's reduce output destined
+        for ``s`` (reducer ``s``, scaled by that parent's ``out_scale``)
+        has landed.  Must be called before the engine starts."""
+        if self._started:
+            raise RuntimeError("link_stages must precede the first event")
+        if self.sub.nS != self.sub.nR:
+            raise ValueError(
+                f"stage linking needs nS == nR (reducer r feeds source r), "
+                f"substrate has nS={self.sub.nS} nR={self.sub.nR}"
+            )
+        g = self.runs[child]
+        if g.stage_deps:
+            raise ValueError(f"run {child} is already stage-linked")
+        parent_idxs = [int(p) for p, _ in parents]
+        if len(set(parent_idxs)) != len(parent_idxs):
+            raise ValueError(f"duplicate parents {parent_idxs}")
+        for p in parent_idxs:
+            if not 0 <= p < len(self.runs) or p == child:
+                raise ValueError(f"bad parent run index {p} for run {child}")
+            # reject cycles: child must not already be upstream of p
+            stack, seen = [p], set()
+            while stack:
+                u = stack.pop()
+                if u == child:
+                    raise ValueError(
+                        f"stage link {p}->{child} would close a cycle"
+                    )
+                if u in seen:
+                    continue
+                seen.add(u)
+                stack.extend(self.runs[u].stage_deps)
+        g.stage_deps = tuple(parent_idxs)
+        g.stage_scale = {int(p): float(s) for p, s in parents}
+        g.dep_pending = {
+            i: set(parent_idxs) for i in range(self.sub.nS)
+        }
+        for p in parent_idxs:
+            self.stage_children.setdefault(p, []).append(child)
+
+    def _maybe_finalize_stage(self, g: _JobRun) -> None:
+        """Mark the reducers of ``g`` whose output can no longer grow as
+        final and hand their landed volume to downstream stage sources.
+        No-op unless ``g`` has stage children."""
+        children = self.stage_children.get(g.idx)
+        if not children or not self._shuffle_final(g):
+            return
+        for k in range(self.sub.nR):
+            if (g.reducer_final[k] or g.shuf_inflight[k] != 0
+                    or g.reduce_outstanding[k] != 0):
+                continue
+            g.reducer_final[k] = True
+            for c in children:
+                child = self.runs[c]
+                waiting = child.dep_pending.get(k)
+                if waiting is None or g.idx not in waiting:
+                    continue
+                child.dep_landed[k] += (
+                    child.stage_scale[g.idx] * g.delivered_out[k]
+                )
+                waiting.discard(g.idx)
+                if not waiting:
+                    del child.dep_pending[k]
+                    self._release_source(child, k)
+
+    def _release_source(self, g: _JobRun, i: int) -> None:
+        """Seed source ``i``'s push chunks of a stage-linked run: the
+        *measured* upstream output that landed there, routed per the run's
+        (possibly swapped-in) plan.  When this was the last pending source,
+        re-check every barrier gate — phases that were held back solely by
+        the pending sources may now proceed."""
+        g.seeded = True
+        amount = float(g.dep_landed[i])
+        if amount > 1e-9:
+            cfg = g.cfg
+            for j in range(self.sub.nM):
+                share = amount * g.plan.x[i, j]
+                if share <= 1e-9:
+                    continue
+                n_chunks = max(int(np.ceil(share / cfg.chunk_mb)), 1)
+                for _ in range(n_chunks):
+                    self._seed_push_chunk(g, i, j, share / n_chunks)
+        if not g.dep_pending:
+            self._recheck_gates(g)
+
+    def _recheck_gates(self, g: _JobRun) -> None:
+        """Open every barrier gate whose condition holds now — called once
+        a stage-linked run becomes fully fed, since the pending-source
+        guards may have held gates shut past their trigger events."""
+        b0, b1, b2 = g.cfg.barriers
+        nM, nR = self.sub.nM, self.sub.nR
+        if b0 == "L":
+            for j in range(nM):
+                if g.push_inflight[j] == 0:
+                    self._open_map_gate(g, j)
+        elif b0 == "G" and g.total_push_inflight == 0:
+            for j in range(nM):
+                self._open_map_gate(g, j)
+        if b1 == "L":
+            for j in range(nM):
+                node = self.mappers[j]
+                if g.map_unfinished[j] == 0 \
+                        and not (node.busy and node.current is g):
+                    self._open_shuffle_gate(g, j)
+        elif b1 == "G" and g.total_map_unfinished == 0 \
+                and g.total_push_inflight == 0:
+            for j in range(nM):
+                self._open_shuffle_gate(g, j)
+        if b2 == "L":
+            for k in range(nR):
+                if g.shuf_inflight[k] == 0 and self._shuffle_final(g):
+                    self._open_reduce_gate(g, k)
+        elif b2 == "G" and g.total_shuf_inflight == 0 \
+                and self._shuffle_final(g):
+            for k in range(nR):
+                self._open_reduce_gate(g, k)
+        self._maybe_finalize_stage(g)
 
     def _dispatch(self):
         t, _, fn, args = heapq.heappop(self._heap)
@@ -586,14 +734,20 @@ class _MultiSim:
                 live = True
                 i, j, size = ops[cursors[slot]]
                 cursors[slot] += 1
-                c = _Chunk(next(self._cid), size, i, owner=j)
-                g.total_map_chunks += 1
-                g.push_inflight[j] += 1
-                g.total_push_inflight += 1
-                g.map_unfinished[j] += 1
-                g.total_map_unfinished += 1
-                self._send_push(g, i, j, c)
-                self._replicate(g, i, j, size)
+                self._seed_push_chunk(g, i, j, size)
+
+    def _seed_push_chunk(self, g: _JobRun, i: int, j: int, size: float):
+        """Create one push chunk (plus its replicas) with its gate
+        counters — the unit of both t=0 seeding and per-source stage
+        release."""
+        c = _Chunk(next(self._cid), size, i, owner=j)
+        g.total_map_chunks += 1
+        g.push_inflight[j] += 1
+        g.total_push_inflight += 1
+        g.map_unfinished[j] += 1
+        g.total_map_unfinished += 1
+        self._send_push(g, i, j, c)
+        self._replicate(g, i, j, size)
 
     def _push_ops(self, g: _JobRun) -> List[Tuple[int, int, float]]:
         """The job's push chunks as (source, mapper, MB) in seeding order."""
@@ -641,6 +795,10 @@ class _MultiSim:
         g.push_inflight[j] -= 1
         g.total_push_inflight -= 1
         b = g.cfg.barriers[0]
+        if g.dep_pending:
+            # a pending stage source may still route data anywhere: every
+            # map gate stays shut until the run is fully fed
+            return
         if b == "L" and g.push_inflight[j] == 0:
             self._open_map_gate(g, j)
         elif b == "G" and g.total_push_inflight == 0:
@@ -664,6 +822,8 @@ class _MultiSim:
             self._pump_map(j)
         else:
             g.map_gated[j].append(c)
+            if g.dep_pending:
+                return  # fully-fed gate checks happen at the last release
             if b == "L" and g.push_inflight[j] == 0:
                 self._open_map_gate(g, j)
             elif b == "G" and g.total_push_inflight == 0:
@@ -711,9 +871,11 @@ class _MultiSim:
         g.map_unfinished[owner] -= 1
         g.total_map_unfinished -= 1
         self._emit_shuffle(g, j, c)
-        if owner != j and g.cfg.barriers[1] == "L" and g.map_unfinished[owner] == 0:
+        if owner != j and g.cfg.barriers[1] == "L" \
+                and g.map_unfinished[owner] == 0 and not g.dep_pending:
             self._open_shuffle_gate(g, owner)
         self._pump_map(j)
+        self._maybe_finalize_stage(g)
 
     def _emit_shuffle(self, g: _JobRun, j: int, c: _Chunk):
         b = g.cfg.barriers[1]
@@ -724,10 +886,13 @@ class _MultiSim:
             sc = _Chunk(next(self._cid), float(amount), j)
             g.shuf_inflight[k] += 1
             g.total_shuf_inflight += 1
+            g.reduce_outstanding[k] += 1
             if b == "P":
                 self._send_shuffle(g, j, k, sc)
             else:
                 g.shuf_gated[j].append((k, sc))
+        if g.dep_pending:
+            return  # pending stage sources will add map work: gates held
         if b == "L" and g.map_unfinished[j] == 0:
             self._open_shuffle_gate(g, j)
         elif b == "G" and g.total_map_unfinished == 0:
@@ -760,8 +925,10 @@ class _MultiSim:
                     self._open_reduce_gate(g, r)
 
     def _shuffle_final(self, g: _JobRun) -> bool:
-        """No more shuffle chunks can appear (all the job's map work done)."""
-        return g.total_map_unfinished == 0 and g.total_push_inflight == 0
+        """No more shuffle chunks can appear (all the job's map work done
+        and, for a stage-linked run, every source fully fed)."""
+        return (g.total_map_unfinished == 0 and g.total_push_inflight == 0
+                and not g.dep_pending)
 
     def _open_reduce_gate(self, g: _JobRun, k: int):
         if g.red_gated[k]:
@@ -793,9 +960,12 @@ class _MultiSim:
         if not sc.done:
             sc.done = True
             g.reduce_end = max(g.reduce_end, self.now)
+            g.delivered_out[k] += sc.size
+            g.reduce_outstanding[k] -= 1
         else:
             g.wasted_mb += sc.size
         self._pump_reduce(k)
+        self._maybe_finalize_stage(g)
 
     # -- dynamics: stealing / speculation ----------------------------------------
     def _idle_mapper(self, j: int):
@@ -849,6 +1019,7 @@ class _MultiSim:
             # another job's in-service chunk must not hold g's gate shut
             victim_node = self.mappers[victim]
             if cfg.barriers[1] == "L" and g.map_unfinished[victim] == 0 \
+                    and not g.dep_pending \
                     and not (victim_node.busy and victim_node.current is g):
                 self._open_shuffle_gate(g, victim)
         else:  # speculation: clone, twin-completion resolved via c.done
@@ -985,6 +1156,12 @@ class _MultiSim:
                         and not node.current_chunk.done:
                     at_reducer[k] += node.current_chunk.size
                 at_reducer[k] += sum(sc.size for sc in g.red_gated[k] if not sc.done)
+            # a stage-linked run's unreleased sources: the upstream output
+            # has not landed yet, so the re-planner sees the *modeled*
+            # volume (the stage platform's derived D) as re-routable —
+            # steering a not-yet-started stage is exactly a push re-route
+            for i in g.dep_pending:
+                resid_push[i] += max(float(g.p.D[i]), float(g.dep_landed[i]))
             prog = JobProgress(
                 job=g.idx, released=True, done=False,
                 resid_push=resid_push, committed_push=committed_push,
@@ -1140,6 +1317,7 @@ class _MultiSim:
                         pool_sent[tr.args[1]] += tr.args[3].size
                         g.shuf_inflight[k] -= 1
                         g.total_shuf_inflight -= 1
+                        g.reduce_outstanding[k] -= 1
                         drained_k.add(k)
                     else:
                         kept.append(tr)
@@ -1150,19 +1328,28 @@ class _MultiSim:
                     pool_gated[j] += sc.size
                     g.shuf_inflight[k] -= 1
                     g.total_shuf_inflight -= 1
+                    g.reduce_outstanding[k] -= 1
                     drained_k.add(k)
                 g.shuf_gated[j].clear()
 
         g.plan = plan  # future emissions (un-mapped chunks) use the new y
 
+        # a finalized reducer's output has already been handed to the
+        # downstream stage sources — routing new volume there would be
+        # silently dropped, so the re-split only spreads over open reducers
+        # (all of them, for runs without stage children)
+        open_r = ~g.reducer_final
         for j in range(nM):
             for amount, gated in ((pool_sent[j], False), (pool_gated[j], True)):
                 if amount <= 1e-9:
                     continue
-                shares = np.where(y > 1e-9, amount * y, 0.0)
+                shares = np.where((y > 1e-9) & open_r, amount * y, 0.0)
                 if shares.sum() <= 0:
-                    shares = np.full(nR, amount / max(nR, 1))
-                shares *= amount / shares.sum()
+                    # all-final is impossible while shuffle volume is still
+                    # pooled (finality requires zero outstanding chunks)
+                    shares = np.where(open_r, amount / max(open_r.sum(), 1),
+                                      0.0)
+                shares *= amount / max(shares.sum(), 1e-12)
                 for k in range(nR):
                     if shares[k] <= 1e-9:
                         continue
@@ -1171,6 +1358,7 @@ class _MultiSim:
                         sc = _Chunk(next(self._cid), shares[k] / n, j)
                         g.shuf_inflight[k] += 1
                         g.total_shuf_inflight += 1
+                        g.reduce_outstanding[k] += 1
                         if gated:
                             g.shuf_gated[j].append((k, sc))
                         else:
@@ -1178,8 +1366,10 @@ class _MultiSim:
 
         # --- gates the moves left satisfiable open now (mirrors the
         # arrival/steal paths; totals are unchanged, so 'G' gates only need
-        # re-checking where a bucket drained to zero)
-        for j in drained_j:
+        # re-checking where a bucket drained to zero).  A stage-linked run
+        # with pending sources keeps its gates shut — the final release
+        # re-checks them all.
+        for j in (drained_j if not g.dep_pending else ()):
             if b0 == "L" and g.push_inflight[j] == 0:
                 self._open_map_gate(g, j)
             node = self.mappers[j]
@@ -1217,6 +1407,7 @@ def _normalize_entries(jobs: Sequence[_JobEntry]):
 def open_schedule(
     jobs: Sequence[_JobEntry],
     substrate: Optional[Substrate] = None,
+    stage_links: Optional[Dict[int, Sequence[Tuple[int, float]]]] = None,
 ) -> _MultiSim:
     """Build (but do not run) the multi-job engine — the entry point of the
     online control plane.  The returned engine supports ``run_until(t)`` /
@@ -1226,7 +1417,10 @@ def open_schedule(
     ``jobs`` is a sequence of ``(platform, plan)`` or ``(platform, plan,
     cfg)`` entries whose platforms must all be views of the same substrate
     (checked via :meth:`Substrate.compatible`); ``substrate`` overrides the
-    inferred one.
+    inferred one.  ``stage_links`` turns entries into pipeline stages:
+    ``{child_idx: [(parent_idx, out_scale), ...]}`` — the child's source
+    ``s`` releases only when every parent's reduce output destined for
+    node ``s`` lands (see :meth:`_MultiSim.link_stages`).
     """
     if not jobs:
         raise ValueError("open_schedule needs at least one job")
@@ -1242,12 +1436,16 @@ def open_schedule(
         _JobRun(idx, platform, plan, cfg, sub.nM, sub.nR)
         for idx, (platform, plan, cfg) in enumerate(entries)
     ]
-    return _MultiSim(sub, runs)
+    eng = _MultiSim(sub, runs)
+    for child, parents in (stage_links or {}).items():
+        eng.link_stages(int(child), list(parents))
+    return eng
 
 
 def simulate_schedule(
     jobs: Sequence[_JobEntry],
     substrate: Optional[Substrate] = None,
+    stage_links: Optional[Dict[int, Sequence[Tuple[int, float]]]] = None,
 ) -> ScheduleSimResult:
     """Execute N jobs concurrently on one shared substrate.
 
@@ -1255,10 +1453,11 @@ def simulate_schedule(
     (``SimConfig.start_time``) — only the link/compute resources are
     shared.  This is :func:`open_schedule` drained to completion with no
     online steering (the frozen-plan baseline of the control plane).
+    ``stage_links`` runs a pipeline: see :func:`open_schedule`.
     """
     if not jobs:
         raise ValueError("simulate_schedule needs at least one job")
-    return open_schedule(jobs, substrate).run()
+    return open_schedule(jobs, substrate, stage_links).run()
 
 
 def simulate(

@@ -1,0 +1,690 @@
+"""Tests for multi-stage pipelines (PR 5): the stage-DAG plan layer,
+cross-stage cost-model pricing, stagewise-vs-end-to-end planning, the
+executor's inter-stage release gating, the GeoPipeline facade (alone and
+inside GeoSchedule / run_online), and the replication-pricing fix."""
+import itertools
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import GeoJob, GeoPipeline, GeoSchedule
+from repro.core.makespan import (
+    BARRIERS_GGL,
+    CostModel,
+    JobProgress,
+    replication_matrix,
+)
+from repro.core.optimize import (
+    available_pipeline_modes,
+    optimize_pipeline,
+    optimize_plan,
+    register_pipeline_planner,
+)
+from repro.core.pipeline import PipelineSpec, StageSpec, chain_spec
+from repro.core.plan import ExecutionPlan, uniform_plan
+from repro.core.platform import (
+    Substrate,
+    planetlab_platform,
+    two_cluster_example,
+)
+from repro.core.simulate import SimConfig, open_schedule, simulate, simulate_schedule
+
+ALL_BARRIER_TRIPLES = list(itertools.product("GLP", repeat=3))
+
+OPT = dict(n_restarts=6, steps=150)
+
+
+def chain_substrate() -> Substrate:
+    """Asymmetric outgoing access: node 0 hosts the fast reducer but its
+    outgoing push links crawl — the stagewise trap."""
+    return Substrate(
+        B_sm=np.array([[4.0, 4.0], [200.0, 200.0]]),
+        B_mr=np.full((2, 2), 200.0),
+        C_m=np.array([100.0, 100.0]),
+        C_r=np.array([300.0, 60.0]),
+        cluster_s=np.array([0, 1]),
+        cluster_m=np.array([0, 1]),
+        cluster_r=np.array([0, 1]),
+        name="chain_pair",
+    )
+
+
+def chain_stages(sub: Substrate):
+    return [
+        GeoJob(sub.view(np.array([0.0, 6000.0]), 1.0, name="ingest")),
+        GeoJob(sub.view(np.zeros(2), 1.0, name="transform")),
+        GeoJob(sub.view(np.zeros(2), 0.5, name="aggregate")),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+
+
+class TestSpecValidation:
+    def test_cycle_rejected(self):
+        sub = chain_substrate()
+        a = StageSpec(sub.view(np.full(2, 10.0), 1.0), deps=(1,))
+        b = StageSpec(sub.view(np.zeros(2), 1.0), deps=(0,))
+        with pytest.raises(ValueError, match="cycle"):
+            PipelineSpec(stages=(a, b))
+
+    def test_self_dep_rejected(self):
+        sub = chain_substrate()
+        with pytest.raises(ValueError, match="itself"):
+            PipelineSpec(stages=(
+                StageSpec(sub.view(np.full(2, 10.0), 1.0), deps=(0,)),
+            ))
+
+    def test_unknown_dep_rejected(self):
+        sub = chain_substrate()
+        with pytest.raises(ValueError, match="unknown stage"):
+            PipelineSpec(stages=(
+                StageSpec(sub.view(np.full(2, 10.0), 1.0), deps=(3,)),
+            ))
+
+    def test_duplicate_deps_rejected(self):
+        sub = chain_substrate()
+        with pytest.raises(ValueError, match="duplicate"):
+            StageSpec(sub.view(np.full(2, 10.0), 1.0), deps=(0, 0))
+
+    def test_negative_out_scale_rejected(self):
+        sub = chain_substrate()
+        with pytest.raises(ValueError, match="out_scale"):
+            StageSpec(sub.view(np.full(2, 10.0), 1.0), out_scale=-0.5)
+
+    def test_dependent_stage_needs_square_substrate(self):
+        sub = Substrate(
+            B_sm=np.full((2, 2), 100.0),
+            B_mr=np.full((2, 3), 100.0),  # nR=3 != nS=2
+            C_m=np.full(2, 100.0),
+            C_r=np.full(3, 100.0),
+            cluster_s=np.zeros(2, dtype=int),
+            cluster_m=np.zeros(2, dtype=int),
+            cluster_r=np.zeros(3, dtype=int),
+        )
+        root = StageSpec(sub.view(np.full(2, 10.0), 1.0))
+        child = StageSpec(sub.view(np.zeros(2), 1.0), deps=(0,))
+        with pytest.raises(ValueError, match="nS"):
+            PipelineSpec(stages=(root, child))
+
+    def test_substrate_mismatch_rejected(self):
+        a = chain_substrate()
+        b = two_cluster_example()
+        with pytest.raises(ValueError, match="substrate"):
+            PipelineSpec(stages=(
+                StageSpec(a.view(np.full(2, 10.0), 1.0)),
+                StageSpec(b, deps=(0,)),
+            ))
+
+    def test_geopipeline_cyclic_edges_rejected(self):
+        sub = chain_substrate()
+        stages = [GeoJob(sub.view(np.full(2, 10.0), 1.0)),
+                  GeoJob(sub.view(np.zeros(2), 1.0))]
+        with pytest.raises(ValueError, match="cycle"):
+            GeoPipeline(stages, edges=[(0, 1), (1, 0)])
+
+    def test_topo_and_sinks(self):
+        sub = chain_substrate()
+        # diamond: 0 -> {1, 2} -> 3
+        spec = PipelineSpec(stages=(
+            StageSpec(sub.view(np.full(2, 10.0), 1.0)),
+            StageSpec(sub.view(np.zeros(2), 1.0), deps=(0,)),
+            StageSpec(sub.view(np.zeros(2), 1.0), deps=(0,)),
+            StageSpec(sub.view(np.zeros(2), 1.0), deps=(1, 2)),
+        ))
+        order = spec.topo_order()
+        assert order.index(0) < order.index(1) < order.index(3)
+        assert order.index(0) < order.index(2) < order.index(3)
+        assert spec.sinks() == (3,)
+        assert spec.children()[0] == (1, 2)
+
+
+# ---------------------------------------------------------------------------
+# derived D + pricing
+# ---------------------------------------------------------------------------
+
+
+class TestDerivedD:
+    def test_chain_derivation_by_hand(self):
+        sub = chain_substrate()
+        spec = chain_spec(
+            [sub.view(np.array([0.0, 6000.0]), 2.0),
+             sub.view(np.zeros(2), 1.0)],
+            out_scales=[0.5, 1.0],
+        )
+        y0 = np.array([0.25, 0.75])
+        plans = [
+            ExecutionPlan(x=uniform_plan(sub.view(np.zeros(2), 1.0)).x,
+                          y=y0),
+            uniform_plan(sub.view(np.zeros(2), 1.0)),
+        ]
+        D = spec.derived_D(plans)
+        # stage 1 source s gets out_scale0 * alpha0 * total0 * y0[s]
+        np.testing.assert_allclose(D[1], 0.5 * 2.0 * 6000.0 * y0)
+        np.testing.assert_allclose(D[0], [0.0, 6000.0])
+
+    def test_diamond_accumulates_both_parents(self):
+        sub = chain_substrate()
+        spec = PipelineSpec(stages=(
+            StageSpec(sub.view(np.array([100.0, 100.0]), 1.0)),
+            StageSpec(sub.view(np.zeros(2), 1.0), deps=(0,), out_scale=1.0),
+            StageSpec(sub.view(np.zeros(2), 2.0), deps=(0,), out_scale=1.0),
+            StageSpec(sub.view(np.zeros(2), 1.0), deps=(1, 2)),
+        ))
+        plans = [uniform_plan(sub.view(np.zeros(2), 1.0)) for _ in range(4)]
+        D = spec.derived_D(plans)
+        # stage 3 gets stage 1's output (200 MB) + stage 2's (alpha=2: 400)
+        np.testing.assert_allclose(D[3].sum(), 200.0 + 400.0)
+
+    def test_single_root_price_pipeline_equals_price_plan(self):
+        p = planetlab_platform(8, alpha=1.0, seed=0)
+        spec = chain_spec([p])
+        plan = uniform_plan(p)
+        cm = CostModel(p, BARRIERS_GGL)
+        out = cm.price_pipeline(spec, [plan])
+        assert out["makespan"] == cm.makespan(plan)
+        assert out["start"] == [0.0]
+
+    def test_composition_is_critical_path(self):
+        sub = chain_substrate()
+        spec = chain_spec([
+            sub.view(np.array([0.0, 6000.0]), 1.0),
+            sub.view(np.zeros(2), 1.0),
+        ])
+        plans = [uniform_plan(sub.view(np.zeros(2), 1.0)) for _ in range(2)]
+        cm = CostModel(sub.view(np.zeros(2), 1.0), BARRIERS_GGL)
+        out = cm.price_pipeline(spec, plans)
+        s0 = float(out["stages"][0]["makespan"])
+        s1 = float(out["stages"][1]["makespan"])
+        assert out["start"][1] == pytest.approx(s0)
+        assert out["makespan"] == pytest.approx(s0 + s1)
+
+
+# ---------------------------------------------------------------------------
+# planners
+# ---------------------------------------------------------------------------
+
+
+class TestPipelinePlanners:
+    def test_registry(self):
+        assert "stagewise" in available_pipeline_modes()
+        assert "end_to_end" in available_pipeline_modes()
+        with pytest.raises(ValueError, match="pipeline mode"):
+            optimize_pipeline(
+                chain_spec([planetlab_platform(4, seed=0)]), mode="nope"
+            )
+        with pytest.raises(ValueError, match="already registered"):
+            register_pipeline_planner(
+                "stagewise", lambda *a, **k: None
+            )
+
+    def test_single_stage_stagewise_matches_optimize_plan(self):
+        p = planetlab_platform(4, alpha=1.0, seed=0)
+        res = optimize_pipeline(
+            chain_spec([p]), mode="stagewise", barriers=BARRIERS_GGL, **OPT
+        )
+        solo = optimize_plan(p, "e2e_multi", barriers=BARRIERS_GGL, **OPT)
+        np.testing.assert_array_equal(res.plans[0].x, solo.plan.x)
+        np.testing.assert_array_equal(res.plans[0].y, solo.plan.y)
+        assert res.makespan == pytest.approx(solo.makespan, abs=1e-9)
+
+    def test_end_to_end_never_modeled_worse_than_stagewise(self):
+        sub = chain_substrate()
+        for seed in (0, 1, 2):
+            spec = chain_spec([
+                sub.view(np.array([0.0, 6000.0]), 1.0),
+                sub.view(np.zeros(2), 1.0),
+                sub.view(np.zeros(2), 0.5),
+            ])
+            sw = optimize_pipeline(spec, "stagewise",
+                                   barriers=BARRIERS_GGL, seed=seed, **OPT)
+            e2e = optimize_pipeline(spec, "end_to_end",
+                                    barriers=BARRIERS_GGL, seed=seed, **OPT)
+            assert e2e.makespan <= sw.makespan + 1e-9
+
+    def test_end_to_end_beats_stagewise_on_chain_scenario(self):
+        """The acceptance scenario: >= 20% simulated reduction (modeled and
+        simulated both gated)."""
+        sub = chain_substrate()
+        sims = {}
+        for mode in ("stagewise", "end_to_end"):
+            report = (
+                GeoPipeline(chain_stages(sub), name=mode)
+                .plan(mode, barriers=BARRIERS_GGL, **OPT)
+                .simulate()
+            )
+            sims[mode] = report
+        assert (sims["end_to_end"].makespan_modeled
+                <= sims["stagewise"].makespan_modeled + 1e-9)
+        assert (1 - sims["end_to_end"].makespan_sim
+                / sims["stagewise"].makespan_sim) >= 0.20
+        assert (1 - sims["end_to_end"].makespan_modeled
+                / sims["stagewise"].makespan_modeled) >= 0.20
+
+    def test_result_repr_and_fields(self):
+        sub = chain_substrate()
+        spec = chain_spec([sub.view(np.array([0.0, 1000.0]), 1.0),
+                           sub.view(np.zeros(2), 1.0)])
+        res = optimize_pipeline(spec, "stagewise", barriers=BARRIERS_GGL,
+                                **OPT)
+        assert len(res.plans) == 2
+        assert res.finishes[1] == pytest.approx(res.makespan)
+        assert "PipelinePlanResult" in repr(res)
+        assert res.stage_D[1].sum() == pytest.approx(1000.0)
+
+
+# ---------------------------------------------------------------------------
+# executor: inter-stage release gating
+# ---------------------------------------------------------------------------
+
+
+class TestPipelineExecution:
+    def test_single_stage_pipeline_is_simulate_exactly(self):
+        """A one-stage pipeline must reproduce simulate() <= 1e-9 per
+        phase, for every barrier triple."""
+        sub = chain_substrate()
+        p = sub.view(np.array([3000.0, 3000.0]), 1.0, name="solo")
+        plan = uniform_plan(p)
+        for barriers in ALL_BARRIER_TRIPLES:
+            cfg = SimConfig(barriers=barriers)
+            solo = simulate(p, plan, cfg)
+            job = GeoJob(p).with_plan(plan, barriers)
+            rep = GeoPipeline([job]).with_plans().simulate(cfg)
+            a, b = solo.phases(), rep.sims[0].phases()
+            for phase in a:
+                assert abs(a[phase] - b[phase]) <= 1e-9, (barriers, phase)
+            assert abs(rep.makespan_sim - solo.makespan) <= 1e-9
+
+    def test_downstream_waits_for_upstream_reducer(self):
+        """With all of stage 1's output on reducer 0, stage 2's push links
+        out of node 0 must stay idle until stage 1 fully completes."""
+        sub = chain_substrate()
+        p0 = sub.view(np.array([0.0, 4000.0]), 1.0)
+        plan0 = ExecutionPlan(
+            x=np.array([[0.5, 0.5], [0.5, 0.5]]), y=np.array([1.0, 0.0])
+        )
+        p1 = sub.view(np.array([4000.0, 0.0]), 1.0)
+        plan1 = uniform_plan(p1)
+        cfg = SimConfig(barriers=BARRIERS_GGL)
+        sim = simulate_schedule(
+            [(p0, plan0, cfg), (p1, plan1, cfg)],
+            substrate=sub, stage_links={1: [(0, 1.0)]},
+        )
+        stage1, stage2 = sim.jobs
+        for j in range(2):
+            stats = sim.resources[f"push[s0->m{j}]"]
+            if stats.n_chunks:
+                assert stats.first_busy_s >= stage1.reduce_end - 1e-9
+        assert stage2.reduce_end > stage1.reduce_end
+
+    def test_measured_volume_flows_downstream(self):
+        """Stage 2 pushes exactly out_scale x alpha x stage-1 input."""
+        sub = chain_substrate()
+        p0 = sub.view(np.array([0.0, 4000.0]), 2.0)
+        p1 = sub.view(np.array([0.0, 0.0]), 1.0)
+        plan = uniform_plan(p0)
+        cfg = SimConfig(barriers=BARRIERS_GGL)
+        sim = simulate_schedule(
+            [(p0, plan, cfg), (p1, plan, cfg)],
+            substrate=sub, stage_links={1: [(0, 0.5)]},
+        )
+        pushed = sum(
+            sim.resources[f"push[s{i}->m{j}]"].volume_mb
+            for i in range(2) for j in range(2)
+        )
+        # stage1 pushes 4000; stage2 pushes 0.5 * 2.0 * 4000 = 4000
+        assert pushed == pytest.approx(8000.0, rel=1e-6)
+
+    def test_zero_out_scale_child_completes_empty(self):
+        sub = chain_substrate()
+        p0 = sub.view(np.array([0.0, 1000.0]), 1.0)
+        p1 = sub.view(np.zeros(2), 1.0)
+        plan = uniform_plan(p0)
+        cfg = SimConfig(barriers=BARRIERS_GGL)
+        sim = simulate_schedule(
+            [(p0, plan, cfg), (p1, plan, cfg)],
+            substrate=sub, stage_links={1: [(0, 0.0)]},
+        )
+        assert sim.jobs[1].makespan == 0.0
+        assert sim.makespan == pytest.approx(sim.jobs[0].makespan)
+
+    def test_chain_completes_under_every_barrier_triple(self):
+        sub = chain_substrate()
+        p0 = sub.view(np.array([0.0, 2000.0]), 1.0)
+        p1 = sub.view(np.zeros(2), 1.0)
+        plan = uniform_plan(p0)
+        for barriers in ALL_BARRIER_TRIPLES:
+            cfg = SimConfig(barriers=barriers)
+            sim = simulate_schedule(
+                [(p0, plan, cfg), (p1, plan, cfg)],
+                substrate=sub, stage_links={1: [(0, 1.0)]},
+            )
+            assert sim.jobs[1].reduce_end >= sim.jobs[0].reduce_end
+            assert sim.makespan == pytest.approx(sim.jobs[1].reduce_end)
+
+    def test_three_stage_diamond_executes(self):
+        sub = chain_substrate()
+        root = sub.view(np.array([0.0, 2000.0]), 1.0)
+        mid = sub.view(np.zeros(2), 1.0)
+        plan = uniform_plan(root)
+        cfg = SimConfig(barriers=BARRIERS_GGL)
+        sim = simulate_schedule(
+            [(root, plan, cfg), (mid, plan, cfg), (mid, plan, cfg),
+             (mid, plan, cfg)],
+            substrate=sub,
+            stage_links={1: [(0, 1.0)], 2: [(0, 1.0)], 3: [(1, 1.0),
+                                                           (2, 1.0)]},
+        )
+        assert sim.jobs[3].reduce_end >= max(sim.jobs[1].reduce_end,
+                                             sim.jobs[2].reduce_end)
+
+    def test_link_stages_validation(self):
+        sub = chain_substrate()
+        p = sub.view(np.array([100.0, 100.0]), 1.0)
+        plan = uniform_plan(p)
+        cfg = SimConfig(barriers=BARRIERS_GGL)
+        with pytest.raises(ValueError, match="cycle"):
+            open_schedule(
+                [(p, plan, cfg), (p, plan, cfg)], substrate=sub,
+                stage_links={1: [(0, 1.0)], 0: [(1, 1.0)]},
+            )
+        with pytest.raises(ValueError, match="bad parent"):
+            open_schedule(
+                [(p, plan, cfg)], substrate=sub, stage_links={0: [(5, 1.0)]},
+            )
+        eng = open_schedule(
+            [(p, plan, cfg), (p, plan, cfg)], substrate=sub,
+            stage_links={1: [(0, 1.0)]},
+        )
+        eng.run_until(0.0)
+        with pytest.raises(RuntimeError, match="precede"):
+            eng.link_stages(0, [(1, 1.0)])
+
+    def test_snapshot_exposes_pending_stage_volume(self):
+        """An unreleased downstream stage's modeled D shows up as
+        re-routable push residual — what run_online steers."""
+        sub = chain_substrate()
+        p0 = sub.view(np.array([0.0, 4000.0]), 1.0)
+        p1 = sub.view(np.array([2000.0, 2000.0]), 1.0)  # derived/modeled D
+        plan = uniform_plan(p0)
+        cfg = SimConfig(barriers=BARRIERS_GGL)
+        eng = open_schedule(
+            [(p0, plan, cfg), (p1, plan, cfg)],
+            substrate=sub, stage_links={1: [(0, 1.0)]},
+        )
+        eng.run_until(5.0)
+        snap = eng.snapshot()
+        child = snap.jobs[1]
+        assert not child.done
+        assert child.resid_push.sum() == pytest.approx(4000.0)
+        # swapping the unreleased stage's plan steers its future seeding
+        eng.swap_plan(1, ExecutionPlan(
+            x=np.array([[0.0, 1.0], [0.0, 1.0]]), y=np.array([0.0, 1.0])
+        ))
+        sim = eng.run()
+        # the swapped x routes everything to m1: s0's link to m0 never used
+        assert sim.resources["push[s0->m0]"].n_chunks == 0
+        assert sim.resources["push[s0->m1]"].n_chunks > 0
+
+    def test_swap_never_routes_shuffle_onto_finalized_reducer(self):
+        """Once a parent reducer's output has been handed to the
+        downstream stage, a plan swap must not re-route still-queued
+        shuffle volume onto it — that delivery window is closed, and the
+        data must reach the child through the still-open reducers."""
+        sub = Substrate(
+            B_sm=np.full((2, 2), 200.0),
+            # shuffle into r1 crawls, so its chunks queue (re-routable)
+            # long after the fast r0 has drained and finalized
+            B_mr=np.array([[500.0, 5.0], [500.0, 5.0]]),
+            C_m=np.array([100.0, 100.0]),
+            C_r=np.array([2000.0, 2000.0]),
+            cluster_s=np.array([0, 1]),
+            cluster_m=np.array([0, 1]),
+            cluster_r=np.array([0, 1]),
+            name="late_swap",
+        )
+        p0 = sub.view(np.array([0.0, 2000.0]), 1.0)
+        p1 = sub.view(np.array([1000.0, 1000.0]), 1.0)
+        plan0 = ExecutionPlan(
+            x=np.array([[0.5, 0.5], [0.5, 0.5]]), y=np.array([0.5, 0.5])
+        )
+        cfg = SimConfig(barriers=BARRIERS_GGL)
+        eng = open_schedule(
+            [(p0, plan0, cfg), (p1, uniform_plan(p1), cfg)],
+            substrate=sub, stage_links={1: [(0, 1.0)]},
+        )
+        # by t=40 the parent's r0 side is reduced and finalized (child
+        # source 0 released) while r1-bound chunks still sit queued
+        eng.run_until(40.0)
+        parent = eng.runs[0]
+        assert parent.reducer_final[0] and not parent.reducer_final[1]
+        snap = eng.snapshot()
+        assert snap.jobs[0].shuffle_pool.sum() > 0  # re-routable volume
+        # swap the parent's y entirely onto the finalized r0
+        eng.swap_plan(0, ExecutionPlan(x=plan0.x, y=np.array([1.0, 0.0])))
+        sim = eng.run()
+        # conservation: the child still receives the parent's full output
+        # (2000 MB parent push + 2000 MB child push over all push links)
+        pushed = sum(
+            sim.resources[f"push[s{i}->m{j}]"].volume_mb
+            for i in range(2) for j in range(2)
+        )
+        assert pushed == pytest.approx(4000.0, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# facade
+# ---------------------------------------------------------------------------
+
+
+class TestGeoPipelineFacade:
+    def test_plan_adopts_stage_jobs(self):
+        sub = chain_substrate()
+        stages = chain_stages(sub)
+        pipe = GeoPipeline(stages, name="c").plan(
+            "stagewise", barriers=BARRIERS_GGL, **OPT
+        )
+        for k, job in enumerate(stages):
+            assert job.planned.plan is pipe.planned.plans[k]
+        # derived D adopted into the stage platforms
+        assert stages[1].platform.D.sum() == pytest.approx(6000.0)
+        assert stages[2].platform.D.sum() == pytest.approx(6000.0)
+
+    def test_unplanned_raises(self):
+        pipe = GeoPipeline(chain_stages(chain_substrate()))
+        with pytest.raises(RuntimeError, match="no plan"):
+            pipe.planned
+
+    def test_report_as_dict_roundtrips(self):
+        sub = chain_substrate()
+        rep = (
+            GeoPipeline(chain_stages(sub))
+            .plan("stagewise", barriers=BARRIERS_GGL, **OPT)
+            .simulate()
+        )
+        doc = rep.as_dict()
+        again = json.loads(json.dumps(doc))
+        assert again == doc
+        assert again["makespan"] == pytest.approx(rep.makespan_modeled)
+        assert again["simulated"]["makespan"] == pytest.approx(
+            rep.makespan_sim
+        )
+        assert len(again["stages"]) == 3
+
+    def test_out_scales_mismatch_rejected(self):
+        sub = chain_substrate()
+        with pytest.raises(ValueError, match="out_scale"):
+            GeoPipeline(chain_stages(sub), out_scales=[1.0])
+
+    def test_execute_chains_real_records(self):
+        from repro.mapreduce.apps import generate_documents, word_count
+        from repro.api import split_sources
+
+        p = planetlab_platform(4, alpha=1.0, seed=0)
+        sub = Substrate.of(p)
+        keys, vals = generate_documents(200, 30, seed=7)
+        srcs = split_sources(keys, vals, p.nS)
+        stages = [
+            GeoJob(sub.view(p.D, 1.0), word_count()),
+            GeoJob(sub.view(np.zeros(p.nS), 1.0), word_count()),
+        ]
+        rep = (
+            GeoPipeline(stages, name="wc")
+            .plan("stagewise", barriers=BARRIERS_GGL, **OPT)
+            .execute(srcs)
+        )
+        assert rep.jobs is not None and len(rep.jobs) == 2
+        assert rep.makespan_measured > 0
+        # stage 2 consumed stage 1's reducer outputs
+        assert rep.jobs[1].stats.volumes_mb()[0].sum() > 0
+        doc = json.loads(json.dumps(rep.as_dict()))
+        assert doc["measured"]["makespan"] == pytest.approx(
+            rep.makespan_measured
+        )
+
+    def test_schedule_with_pipeline_and_plain_job(self):
+        sub = chain_substrate()
+        pipe = GeoPipeline([
+            GeoJob(sub.view(np.array([0.0, 4000.0]), 1.0)),
+            GeoJob(sub.view(np.zeros(2), 1.0)),
+        ], name="p")
+        plain = GeoJob(sub.view(np.array([0.0, 1000.0]), 1.0, name="q"))
+        sched = GeoSchedule([pipe, plain]).plan(
+            policy="independent", barriers=BARRIERS_GGL, **OPT
+        )
+        assert len(sched.jobs) == 3  # two stages + the plain job
+        report = sched.simulate()
+        assert len(report.sims) == 3
+        # the pipeline's stage 2 cannot finish before stage 1
+        assert report.sims[1].reduce_end >= report.sims[0].reduce_end
+        # schedule execute() with pipelines is explicitly unsupported
+        with pytest.raises(RuntimeError, match="GeoPipeline.execute"):
+            sched.execute([[], [], []])
+
+    def test_run_online_static_reproduces_frozen_pipeline(self):
+        sub = chain_substrate()
+        pipe = GeoPipeline([
+            GeoJob(sub.view(np.array([0.0, 4000.0]), 1.0)),
+            GeoJob(sub.view(np.zeros(2), 1.0)),
+        ], name="p")
+        sched = GeoSchedule([pipe]).plan(
+            policy="independent", barriers=BARRIERS_GGL, **OPT
+        )
+        frozen = sched.simulate()
+        rep = sched.run_online(policy="static",
+                               cfg=SimConfig(barriers=BARRIERS_GGL))
+        assert rep.makespan_online == pytest.approx(
+            frozen.makespan_sim, abs=1e-9
+        )
+        assert rep.makespan_static == pytest.approx(
+            frozen.makespan_sim, abs=1e-9
+        )
+
+
+# ---------------------------------------------------------------------------
+# replication pricing (the satellite fix)
+# ---------------------------------------------------------------------------
+
+
+class TestReplicationPricing:
+    def test_matrix_identity_for_replication_one(self):
+        assert replication_matrix(np.array([0, 0, 1, 1]), 1) is None
+
+    def test_matrix_conserves_copies(self):
+        for cross in (False, True):
+            for r in (2, 3):
+                R = replication_matrix(np.array([0, 0, 1, 1]), r, cross)
+                np.testing.assert_allclose(R.sum(axis=1), float(r))
+
+    def test_same_cluster_targets(self):
+        # clusters {0,1} and {2,3}: j=0 replicates to its partner 1
+        R = replication_matrix(np.array([0, 0, 1, 1]), 2,
+                               cross_cluster=False)
+        assert R[0, 1] == 1.0 and R[0, 2] == 0.0 and R[0, 0] == 1.0
+
+    def test_cross_cluster_targets(self):
+        R = replication_matrix(np.array([0, 0, 1, 1]), 2,
+                               cross_cluster=True)
+        assert R[0, 0] == 1.0
+        assert R[0, 2] + R[0, 3] == 1.0 and R[0, 1] == 0.0
+
+    def test_invalid_replication_rejected(self):
+        p = planetlab_platform(4, seed=0)
+        with pytest.raises(ValueError, match="replication"):
+            CostModel(p, BARRIERS_GGL, replication=0)
+
+    @pytest.mark.parametrize("replication,cross", [
+        (1, False), (2, False), (2, True), (3, True),
+    ])
+    def test_model_push_matches_simulation(self, replication, cross):
+        """The regression the fix is for: modeled vs discrete-event push
+        time must agree once replica writes are priced (they were silently
+        unpriced before)."""
+        p = planetlab_platform(4, alpha=1.0, seed=0)
+        plan = uniform_plan(p)
+        cm = CostModel(p, BARRIERS_GGL, replication=replication,
+                       cross_cluster_replication=cross)
+        modeled = float(cm.price_plan(plan)["push_time"])
+        sim = simulate(
+            p, plan,
+            SimConfig(barriers=BARRIERS_GGL, replication=replication,
+                      cross_cluster_replication=cross),
+        )
+        assert sim.push_end == pytest.approx(modeled, rel=1e-6)
+
+    def test_model_makespan_tracks_simulation_with_replication(self):
+        """End-to-end: with the replication term the model's full makespan
+        stays in lockstep with the executor (G push barrier: replicas only
+        stretch the push phase)."""
+        p = planetlab_platform(8, alpha=1.0, seed=0)
+        plan = uniform_plan(p)
+        for r in (2, 3):
+            cm = CostModel(p, BARRIERS_GGL, replication=r,
+                           cross_cluster_replication=True)
+            sim = simulate(
+                p, plan,
+                SimConfig(barriers=BARRIERS_GGL, replication=r,
+                          cross_cluster_replication=True),
+            )
+            assert sim.makespan == pytest.approx(cm.makespan(plan),
+                                                 rel=1e-6)
+
+    def test_unpriced_replication_was_wrong(self):
+        """Sanity that the fix matters: the replication-blind model
+        underprices the simulated push substantially."""
+        p = planetlab_platform(4, alpha=1.0, seed=0)
+        plan = uniform_plan(p)
+        blind = float(CostModel(p, BARRIERS_GGL).price_plan(plan)["push_time"])
+        sim = simulate(
+            p, plan, SimConfig(barriers=BARRIERS_GGL, replication=3,
+                               cross_cluster_replication=True),
+        )
+        assert sim.push_end > 1.5 * blind
+
+    def test_fresh_residual_reproduces_price_plan_with_replication(self):
+        p = planetlab_platform(4, alpha=1.0, seed=0)
+        plan = uniform_plan(p)
+        cm = CostModel(p, BARRIERS_GGL, replication=2)
+        fresh = JobProgress.fresh(p)
+        a = cm.price_plan(plan)
+        b = cm.price_residual(fresh, plan)
+        assert float(a["makespan"]) == pytest.approx(
+            float(b["makespan"]), abs=1e-9
+        )
+
+    def test_shared_pricing_inflates_push(self):
+        p = planetlab_platform(4, alpha=1.0, seed=0)
+        plan = uniform_plan(p)
+        base = CostModel(p, BARRIERS_GGL)
+        repd = CostModel(p, BARRIERS_GGL, replication=2)
+        vols = [base.analytic_volumes(plan)]
+        plain = base.price_shared(
+            [(p.D[:, None] * plan.x, *vols[0][1:])]
+        )[0]
+        inflated = repd.price_shared(
+            [(p.D[:, None] * plan.x, *vols[0][1:])]
+        )[0]
+        assert float(inflated["push_time"]) > float(plain["push_time"])
