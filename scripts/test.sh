@@ -1,7 +1,9 @@
 #!/usr/bin/env sh
-# Tier-1 verification (see ROADMAP.md): the full test suite, fail-fast.
-# Pass-through args reach pytest, so CI and local runs share one entry
-# point:  scripts/test.sh -k online       scripts/test.sh tests/test_api.py
+# Tier-1 verification (see ROADMAP.md): the invariant lint pass, then the
+# full test suite, fail-fast.  Pass-through args reach pytest, so CI and
+# local runs share one entry point:
+#   scripts/test.sh -k online       scripts/test.sh tests/test_api.py
 cd "$(dirname "$0")/.." || exit 1
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis --lint-only || exit 1
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 exit $?

@@ -1,0 +1,30 @@
+"""Repo-specific static analysis and runtime auditing.
+
+Three layers (see ``python -m repro.analysis --help``):
+
+* :mod:`repro.analysis.lint` — AST lint rules no general-purpose linter
+  expresses (float64 pricing purity, event tie-break discipline, registry
+  coverage, ``as_dict`` JSON-ability).
+* :mod:`repro.analysis.audit` — runtime conservation + determinism audits
+  of the discrete-event executor.
+* :mod:`repro.analysis.validate` — structural input validators shared with
+  the core model layers and the :mod:`repro.api` front door.
+
+``validate`` is imported eagerly (it is a numpy-only leaf that
+:mod:`repro.core` itself depends on); ``lint`` and ``audit`` are exposed
+lazily because ``audit`` imports the executor, which would otherwise close
+an import cycle through this package.
+"""
+from __future__ import annotations
+
+from . import validate  # noqa: F401  (leaf; safe eager import)
+
+__all__ = ["audit", "lint", "validate"]
+
+
+def __getattr__(name):
+    if name in ("audit", "lint"):
+        import importlib
+
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

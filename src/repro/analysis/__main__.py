@@ -1,0 +1,59 @@
+"""``python -m repro.analysis`` — lint ``src/`` with the repo-specific
+rules, then audit the executor on the quick scenarios (conservation,
+snapshot sanity, determinism under permuted tie-breaks).  Exits nonzero on
+any finding.  ``repro-analyze`` is the console-script alias.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import audit, lint
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="repro-analyze", description=__doc__
+    )
+    parser.add_argument(
+        "--root", type=Path, default=Path.cwd(),
+        help="repo root holding src/, tests/ and README.md (default: cwd)",
+    )
+    parser.add_argument(
+        "--lint-only", action="store_true", help="skip the runtime audits"
+    )
+    parser.add_argument(
+        "--audit-only", action="store_true", help="skip the lint pass"
+    )
+    parser.add_argument(
+        "-k", "--permutations", type=int, default=5, metavar="K",
+        help="tie-break permutations per determinism audit (default: 5)",
+    )
+    args = parser.parse_args(argv)
+
+    rc = 0
+    if not args.audit_only:
+        findings = lint.lint_project(args.root)
+        for f in findings:
+            print(f)
+        print(f"lint: {len(findings)} finding(s)")
+        rc |= bool(findings)
+
+    if not args.lint_only:
+        report = audit.run_all(k=args.permutations)
+        for line in report.lines():
+            print(line)
+        n_scen = len(audit.QUICK_SCENARIOS)
+        print(
+            f"audit: {n_scen} scenarios + swap path, "
+            f"{args.permutations} tie-break permutations each: "
+            + ("ok" if report.ok else "FAILED")
+        )
+        rc |= not report.ok
+
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

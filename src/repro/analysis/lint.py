@@ -1,0 +1,452 @@
+"""Repo-specific AST lint rules.
+
+General-purpose linters check style; these rules check the invariants this
+reproduction's *results* rest on:
+
+``f64-pricing-purity``
+    Nothing reachable from ``volume_model`` / ``price_*`` may touch
+    ``jax``/``jnp`` or float32, and every call to an ``xp``-parameterized
+    model function must pass ``xp=np`` explicitly (the parameter defaults
+    to jnp for the solver path).  The 1e-9 model-vs-measured parity across
+    all 27 barrier triples depends on the pricing path staying float64
+    numpy end to end.
+
+``no-bare-heappush``
+    Every event insertion must go through ``_MultiSim.at()``, which is the
+    single home of the ``(time, seq)`` tie-break discipline.  A bare
+    ``heapq.heappush`` elsewhere can silently break determinism.
+
+``registry-coverage``
+    Every name registered via ``register_planner`` /
+    ``register_schedule_planner`` / ``register_online_policy`` /
+    ``register_pipeline_planner`` must be referenced in ``tests/`` and in
+    the README — an unregistered-in-docs mode is dead surface area.
+
+``as-dict-json``
+    Public ``as_dict()`` methods feed ``json.dump`` in the benchmark
+    emitters; they must build values from JSON-serializable literals and
+    comprehensions only (no sets, bytes, or raw ndarray constructors).
+
+Findings print as ``file:line: RULE message``.  Waive a single line with a
+``# lint: ignore[rule-name]`` comment (bare ``# lint: ignore`` waives all
+rules on that line).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set
+
+__all__ = [
+    "FILE_RULES",
+    "PROJECT_RULES",
+    "Finding",
+    "LintedFile",
+    "lint_file",
+    "lint_project",
+    "main",
+]
+
+REGISTRY_FNS = (
+    "register_planner",
+    "register_schedule_planner",
+    "register_online_policy",
+    "register_pipeline_planner",
+)
+
+_PRICING_ENTRY = re.compile(r"^(volume_model|price_\w+)$")
+_WAIVER = re.compile(r"#\s*lint:\s*ignore(?:\[([\w,\s-]+)\])?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass
+class LintedFile:
+    """One parsed source file handed to file-scope rules."""
+
+    path: Path
+    rel: str
+    source: str
+    tree: ast.AST
+
+    @classmethod
+    def parse(cls, path: Path, rel: Optional[str] = None) -> "LintedFile":
+        source = path.read_text()
+        return cls(path=path, rel=rel or str(path), source=source,
+                   tree=ast.parse(source, filename=str(path)))
+
+    def lines(self) -> List[str]:
+        return self.source.splitlines()
+
+
+FileRule = Callable[[LintedFile], List[Finding]]
+FILE_RULES: Dict[str, FileRule] = {}
+ProjectRule = Callable[["Project"], List[Finding]]
+PROJECT_RULES: Dict[str, ProjectRule] = {}
+
+
+def _file_rule(name: str):
+    def deco(fn: FileRule) -> FileRule:
+        FILE_RULES[name] = fn
+        return fn
+    return deco
+
+
+def _project_rule(name: str):
+    def deco(fn: ProjectRule) -> ProjectRule:
+        PROJECT_RULES[name] = fn
+        return fn
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# rule: f64-pricing-purity
+# ---------------------------------------------------------------------------
+
+
+def _collect_functions(tree: ast.AST):
+    """(module functions, methods), each keyed by bare name.  Nested
+    functions are deliberately excluded: a call to ``mx``/``pmax`` inside
+    ``volume_model`` targets the *parameter*, not the jax-flavoured nested
+    defs of the same name inside ``smooth_ops``.  Methods are kept separate
+    so ``self.analytic_volumes(...)`` resolves to the method, not the
+    same-named module function."""
+    module_fns: Dict[str, ast.FunctionDef] = {}
+    methods: Dict[str, ast.FunctionDef] = {}
+    for node in getattr(tree, "body", []):
+        if isinstance(node, ast.FunctionDef):
+            module_fns.setdefault(node.name, node)
+        elif isinstance(node, ast.ClassDef):
+            for item in node.body:
+                if isinstance(item, ast.FunctionDef):
+                    methods.setdefault(item.name, item)
+    return module_fns, methods
+
+
+def _param_names(fn: ast.FunctionDef) -> Set[str]:
+    a = fn.args
+    names = {p.arg for p in a.args + a.kwonlyargs + a.posonlyargs}
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    return names
+
+
+def _callee_name(call: ast.Call) -> Optional[str]:
+    """Bare name of a call target: ``f(...)``, ``self.f(...)``, ``M.f(...)``."""
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def _body_walk(fn: ast.FunctionDef) -> Iterable[ast.AST]:
+    """Every node in the function *body* — excludes the signature (arg
+    defaults and annotations), where ``xp=jnp`` defaults legitimately live,
+    and the decorator list."""
+    for stmt in fn.body:
+        yield from ast.walk(stmt)
+
+
+def _takes_xp(fn: ast.FunctionDef) -> bool:
+    a = fn.args
+    return any(p.arg == "xp" for p in a.args + a.kwonlyargs + a.posonlyargs)
+
+
+@_file_rule("f64-pricing-purity")
+def _rule_pricing_purity(file: LintedFile) -> List[Finding]:
+    module_fns, methods = _collect_functions(file.tree)
+
+    def resolve(call: ast.Call, shadowed: Set[str]):
+        """(key, FunctionDef) for a same-file call target, else (None, None).
+        ``self.f(...)``/``cls.f(...)`` resolves to the method; a bare name
+        to the module function, unless a parameter shadows it."""
+        f = call.func
+        if isinstance(f, ast.Name):
+            if f.id not in shadowed and f.id in module_fns:
+                return f.id, module_fns[f.id]
+        elif isinstance(f, ast.Attribute):
+            if (isinstance(f.value, ast.Name)
+                    and f.value.id in ("self", "cls")
+                    and f.attr in methods):
+                return f"method:{f.attr}", methods[f.attr]
+        return None, None
+
+    entries = {
+        **{n: fn for n, fn in module_fns.items() if _PRICING_ENTRY.match(n)},
+        **{f"method:{n}": fn for n, fn in methods.items()
+           if _PRICING_ENTRY.match(n)},
+    }
+    if not entries:
+        return []
+
+    # call-graph closure over same-file functions, body-only
+    reachable: Dict[str, ast.FunctionDef] = {}
+    work = list(entries.items())
+    while work:
+        key, fn = work.pop()
+        if key in reachable:
+            continue
+        reachable[key] = fn
+        shadowed = _param_names(fn)
+        for node in _body_walk(fn):
+            if isinstance(node, ast.Call):
+                ckey, cfn = resolve(node, shadowed)
+                if ckey is not None and ckey not in reachable:
+                    work.append((ckey, cfn))
+
+    findings: List[Finding] = []
+
+    def flag(node: ast.AST, msg: str) -> None:
+        findings.append(Finding(file.rel, getattr(node, "lineno", 0),
+                                "f64-pricing-purity", msg))
+
+    for key in sorted(reachable):
+        fn = reachable[key]
+        name = fn.name
+        shadowed = _param_names(fn)
+        for node in _body_walk(fn):
+            if isinstance(node, ast.Name) and node.id in ("jax", "jnp"):
+                flag(node, f"`{node.id}` used in `{name}`, which is "
+                     "reachable from the float64 pricing path")
+            elif isinstance(node, ast.Name) and node.id == "float32":
+                flag(node, f"float32 used in pricing-reachable `{name}`")
+            elif isinstance(node, ast.Attribute) and node.attr == "float32":
+                flag(node, f"float32 used in pricing-reachable `{name}`")
+            elif (isinstance(node, ast.Constant)
+                  and node.value == "float32"):
+                flag(node, f"'float32' dtype literal in pricing-reachable "
+                     f"`{name}`")
+            elif isinstance(node, ast.Call):
+                _, cfn = resolve(node, shadowed)
+                if cfn is not None and _takes_xp(cfn):
+                    xp_kw = next(
+                        (kw for kw in node.keywords if kw.arg == "xp"), None
+                    )
+                    if xp_kw is None:
+                        flag(node, f"`{name}` calls `{cfn.name}` without "
+                             "pinning xp=np — the backend defaults to jnp")
+                    else:
+                        v = xp_kw.value
+                        ok = (isinstance(v, ast.Name)
+                              and v.id in ("np", "numpy"))
+                        if not ok:
+                            flag(node, f"`{name}` calls `{cfn.name}` with "
+                                 "a non-numpy xp backend")
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# rule: no-bare-heappush
+# ---------------------------------------------------------------------------
+
+
+@_file_rule("no-bare-heappush")
+def _rule_no_bare_heappush(file: LintedFile) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def is_heappush(call: ast.Call) -> bool:
+        f = call.func
+        if isinstance(f, ast.Name):
+            return f.id == "heappush"
+        return (isinstance(f, ast.Attribute) and f.attr == "heappush"
+                and isinstance(f.value, ast.Name) and f.value.id == "heapq")
+
+    def visit(node: ast.AST, inside_at: bool) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            inside_at = node.name == "at"
+        if isinstance(node, ast.Call) and is_heappush(node) and not inside_at:
+            findings.append(Finding(
+                file.rel, node.lineno, "no-bare-heappush",
+                "event pushed outside `at()` — all insertions must go "
+                "through the `(time, seq)` tie-break in `_MultiSim.at()`"))
+        for child in ast.iter_child_nodes(node):
+            visit(child, inside_at)
+
+    visit(file.tree, False)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# rule: as-dict-json
+# ---------------------------------------------------------------------------
+
+_JSON_CASTS = {"float", "int", "str", "bool", "list", "dict", "tuple",
+               "sorted", "len", "abs", "round", "min", "max", "sum"}
+_JSON_METHODS = {"tolist", "item", "as_dict", "phases", "utilization",
+                 "items", "keys", "values", "get", "join", "format"}
+_BANNED_CALLS = {"set", "frozenset", "bytes", "bytearray", "complex"}
+_NDARRAY_CTORS = {"asarray", "array", "zeros", "ones", "full", "arange",
+                  "atleast_1d", "atleast_2d"}
+
+
+@_file_rule("as-dict-json")
+def _rule_as_dict_json(file: LintedFile) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def flag(node: ast.AST, msg: str) -> None:
+        findings.append(Finding(file.rel, getattr(node, "lineno", 0),
+                                "as-dict-json", msg))
+
+    def check(node: ast.AST, wrapped: bool) -> None:
+        """``wrapped`` = inside a JSON-coercing conversion (float()/list()/
+        .tolist()/...), where an ndarray intermediate is fine."""
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            flag(node, "set is not JSON-serializable")
+        elif isinstance(node, ast.Constant) and isinstance(node.value, bytes):
+            flag(node, "bytes literal is not JSON-serializable")
+        elif isinstance(node, ast.Call):
+            callee = _callee_name(node)
+            if isinstance(node.func, ast.Name) and callee in _BANNED_CALLS:
+                flag(node, f"`{callee}(...)` is not JSON-serializable")
+            elif (isinstance(node.func, ast.Attribute)
+                  and isinstance(node.func.value, ast.Name)
+                  and node.func.value.id in ("np", "numpy", "jnp")
+                  and callee in _NDARRAY_CTORS and not wrapped):
+                flag(node, f"raw ndarray from `{node.func.value.id}."
+                     f"{callee}(...)` — convert with .tolist() or float()")
+            wrapped = wrapped or (
+                (isinstance(node.func, ast.Name) and callee in _JSON_CASTS)
+                or (isinstance(node.func, ast.Attribute)
+                    and callee in _JSON_METHODS))
+        for child in ast.iter_child_nodes(node):
+            check(child, wrapped)
+
+    for node in ast.walk(file.tree):
+        if (isinstance(node, ast.FunctionDef) and node.name == "as_dict"):
+            for stmt in node.body:
+                check(stmt, False)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# rule: registry-coverage (project scope)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Project:
+    """The whole-tree view handed to project-scope rules."""
+
+    src_files: List[LintedFile]
+    tests_text: str
+    readme_text: str
+
+
+@_project_rule("registry-coverage")
+def _rule_registry_coverage(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for file in project.src_files:
+        for node in ast.walk(file.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _callee_name(node)
+            if callee not in REGISTRY_FNS:
+                continue
+            if not (node.args and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, str)):
+                continue
+            name = node.args[0].value
+            word = re.compile(rf"\b{re.escape(name)}\b")
+            missing = [
+                where for where, text in
+                (("tests/", project.tests_text),
+                 ("README", project.readme_text))
+                if not word.search(text)
+            ]
+            if missing:
+                findings.append(Finding(
+                    file.rel, node.lineno, "registry-coverage",
+                    f"registered mode '{name}' ({callee}) is not "
+                    f"referenced in {' or '.join(missing)}"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def _apply_waivers(findings: List[Finding],
+                   files: Dict[str, LintedFile]) -> List[Finding]:
+    kept = []
+    for f in findings:
+        file = files.get(f.path)
+        if file is not None and 1 <= f.line <= len(file.lines()):
+            m = _WAIVER.search(file.lines()[f.line - 1])
+            if m and (m.group(1) is None
+                      or f.rule in re.split(r"[,\s]+", m.group(1))):
+                continue
+        kept.append(f)
+    return kept
+
+
+def lint_file(path: Path, rel: Optional[str] = None,
+              rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run the file-scope rules (all by default) on one source file."""
+    file = LintedFile.parse(Path(path), rel)
+    findings: List[Finding] = []
+    for name, fn in FILE_RULES.items():
+        if rules is None or name in rules:
+            findings.extend(fn(file))
+    return _apply_waivers(findings, {file.rel: file})
+
+
+def lint_project(root: Path, src: str = "src", tests: str = "tests",
+                 readme: str = "README.md",
+                 rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint every ``.py`` under ``root/src`` with the file rules, then run
+    the project rules against ``root/tests`` + the README."""
+    root = Path(root)
+    files: Dict[str, LintedFile] = {}
+    for path in sorted((root / src).rglob("*.py")):
+        rel = str(path.relative_to(root))
+        files[rel] = LintedFile.parse(path, rel)
+
+    findings: List[Finding] = []
+    for file in files.values():
+        for name, fn in FILE_RULES.items():
+            if rules is None or name in rules:
+                findings.extend(fn(file))
+
+    tests_dir = root / tests
+    tests_text = "\n".join(
+        p.read_text() for p in sorted(tests_dir.rglob("*.py"))
+    ) if tests_dir.is_dir() else ""
+    readme_path = root / readme
+    readme_text = readme_path.read_text() if readme_path.is_file() else ""
+    project = Project(src_files=list(files.values()),
+                      tests_text=tests_text, readme_text=readme_text)
+    for name, fn in PROJECT_RULES.items():
+        if rules is None or name in rules:
+            findings.extend(fn(project))
+
+    findings = _apply_waivers(findings, files)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def main(root: Path, quiet: bool = False) -> int:
+    findings = lint_project(root)
+    for f in findings:
+        print(f)
+    if not quiet:
+        n_files = len(list((Path(root) / "src").rglob("*.py")))
+        rules = sorted(set(FILE_RULES) | set(PROJECT_RULES))
+        print(f"lint: {len(findings)} finding(s) across {n_files} files "
+              f"({', '.join(rules)})")
+    return 1 if findings else 0

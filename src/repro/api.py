@@ -57,6 +57,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .analysis.validate import validate_plan_shapes
 from .core.makespan import BARRIERS_GGL, CostModel, attribute_phases
 from .core.optimize import (
     OnlineConfig,
@@ -200,6 +201,11 @@ class GeoJob:
     ) -> "GeoJob":
         """Adopt an externally built plan (a baseline, a replayed plan, …),
         pricing it through the shared cost model."""
+        validate_plan_shapes(
+            (plan.nS, plan.nM, plan.nR),
+            (self.platform.nS, self.platform.nM, self.platform.nR),
+            context=f"plan {plan.meta or 'external'!r}",
+        )
         cm = CostModel(self.platform, tuple(barriers))
         breakdown = cm.breakdown(plan)
         self._result = PlanResult(

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis.validate import validate_volumes
 from .plan import ExecutionPlan
 from .platform import Platform
 
@@ -498,12 +499,15 @@ class CostModel:
         """Price explicit per-phase volumes (MB); returns the phase-end
         arrays plus the scalar ``makespan`` (seconds)."""
         p = self.platform
+        V_push = np.asarray(V_push, dtype=np.float64)
+        V_map = np.asarray(V_map, dtype=np.float64)
+        V_shuffle = np.asarray(V_shuffle, dtype=np.float64)
+        V_reduce = np.asarray(V_reduce, dtype=np.float64)
+        validate_volumes(V_push, V_map, V_shuffle, V_reduce,
+                         dims=(p.nS, p.nM, p.nR))
         mx, pmax = _np_hard_ops()
         return volume_model(
-            np.asarray(V_push, dtype=np.float64),
-            np.asarray(V_map, dtype=np.float64),
-            np.asarray(V_shuffle, dtype=np.float64),
-            np.asarray(V_reduce, dtype=np.float64),
+            V_push, V_map, V_shuffle, V_reduce,
             p.B_sm, p.B_mr, p.C_m, p.C_r,
             self._barriers(barriers), mx, pmax, xp=np,
         )

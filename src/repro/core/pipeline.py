@@ -33,6 +33,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..analysis.validate import validate_stage_coupling
 from .plan import ExecutionPlan
 from .platform import Platform, Substrate
 
@@ -96,20 +97,9 @@ class PipelineSpec:
                     f"stage {k} ({stage.platform.name!r}) does not share the "
                     "substrate — build stage platforms with Substrate.view()"
                 )
-            for d in stage.deps:
-                if not 0 <= d < n:
-                    raise ValueError(
-                        f"stage {k} depends on unknown stage {d} "
-                        f"(pipeline has {n} stages)"
-                    )
-                if d == k:
-                    raise ValueError(f"stage {k} depends on itself")
-            if stage.deps and stage.platform.nS != stage.platform.nR:
-                raise ValueError(
-                    f"stage {k} has upstream deps but nS={stage.platform.nS}"
-                    f" != nR={stage.platform.nR} — a dependent stage's "
-                    "sources must be the upstream reducer nodes"
-                )
+            validate_stage_coupling(
+                k, stage.platform.nS, stage.platform.nR, stage.deps, n
+            )
         object.__setattr__(self, "_topo", self._toposort())
 
     # -- structure ---------------------------------------------------------

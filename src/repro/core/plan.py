@@ -19,6 +19,7 @@ from typing import Optional
 
 import numpy as np
 
+from ..analysis.validate import validate_plan_arrays
 from .platform import Platform
 
 __all__ = ["ExecutionPlan", "uniform_plan", "local_push_plan", "validate_plan"]
@@ -78,18 +79,9 @@ class ExecutionPlan:
 
 
 def validate_plan(x: np.ndarray, y: np.ndarray, atol: float = _ATOL) -> None:
-    x = np.asarray(x)
-    y = np.asarray(y)
-    if x.ndim != 2 or y.ndim != 1:
-        raise ValueError(f"bad plan shapes x{x.shape} y{y.shape}")
-    if np.any(x < -atol) or np.any(x > 1 + atol):
-        raise ValueError("x fractions outside [0, 1]")
-    if np.any(y < -atol) or np.any(y > 1 + atol):
-        raise ValueError("y fractions outside [0, 1]")
-    if not np.allclose(x.sum(axis=1), 1.0, atol=atol):
-        raise ValueError(f"x rows do not sum to 1: {x.sum(axis=1)}")
-    if not np.isclose(y.sum(), 1.0, atol=atol):
-        raise ValueError(f"y does not sum to 1: {y.sum()}")
+    """Equations 1–3 plus finiteness — the shared structural checker in
+    :mod:`repro.analysis.validate`, which names the offending entries."""
+    validate_plan_arrays(x, y, atol=atol)
 
 
 def uniform_plan(platform: Platform) -> ExecutionPlan:

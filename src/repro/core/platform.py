@@ -27,6 +27,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from ..analysis.validate import require_finite, require_positive
+
 __all__ = [
     "CapacityTrace",
     "Platform",
@@ -126,11 +128,10 @@ class Substrate:
 
     def __post_init__(self):
         for field in ("B_sm", "B_mr", "C_m", "C_r"):
+            # require_positive also rejects NaN/inf, which `<= 0` lets pass
             object.__setattr__(
-                self, field, np.asarray(getattr(self, field), dtype=np.float64)
+                self, field, require_positive(field, getattr(self, field))
             )
-            if np.any(getattr(self, field) <= 0):
-                raise ValueError(f"{field} must be strictly positive")
         nS, nM = self.B_sm.shape
         nM2, nR = self.B_mr.shape
         if nM != nM2:
@@ -357,11 +358,10 @@ class Platform:
     substrate: Optional[Substrate] = None
 
     def __post_init__(self):
-        D = np.asarray(self.D, dtype=np.float64)
-        object.__setattr__(self, "D", D)
+        object.__setattr__(self, "D", require_finite("D", self.D))
         for field in ("B_sm", "B_mr", "C_m", "C_r"):
             object.__setattr__(
-                self, field, np.asarray(getattr(self, field), dtype=np.float64)
+                self, field, require_positive(field, getattr(self, field))
             )
         nS, nM = self.B_sm.shape
         nM2, nR = self.B_mr.shape
@@ -375,9 +375,6 @@ class Platform:
             raise ValueError(f"C_r shape {self.C_r.shape} != ({nR},)")
         if np.any(self.D < 0):
             raise ValueError("negative data size")
-        for field in ("B_sm", "B_mr", "C_m", "C_r"):
-            if np.any(getattr(self, field) <= 0):
-                raise ValueError(f"{field} must be strictly positive")
         if self.alpha <= 0:
             raise ValueError("alpha must be > 0")
 

@@ -105,6 +105,10 @@ class SimConfig:
     seed: int = 0
     #: release time: the job's sources start pushing at this absolute time.
     start_time: float = 0.0
+    #: runtime sanitizer: check gate-counter sanity after every event and
+    #: byte conservation at completion; violations land on
+    #: :attr:`ScheduleSimResult.violations` (see :mod:`repro.analysis.audit`).
+    audit: bool = False
 
     def __post_init__(self):
         object.__setattr__(self, "barriers", _check_barriers(self.barriers))
@@ -278,7 +282,8 @@ class ComputeResource:
 
 
 class _Chunk:
-    __slots__ = ("cid", "size", "src", "done", "started_copies", "owner", "cloned")
+    __slots__ = ("cid", "size", "src", "done", "started_copies", "owner",
+                 "cloned", "landed")
 
     def __init__(self, cid: int, size: float, src: int, owner: int = -1):
         self.cid = cid
@@ -288,6 +293,7 @@ class _Chunk:
         self.started_copies = 0
         self.owner = owner  # mapper whose gate/progress counters hold it
         self.cloned = False
+        self.landed = False  # push chunk delivered to a live mapper once
 
 
 class _JobRun:
@@ -340,6 +346,17 @@ class _JobRun:
         self.recovered = 0
         self.total_map_chunks = 0
 
+        # byte-conservation ledger (original payload only — replica and
+        # speculative traffic is wasted-work accounting, not job volume):
+        # seeded pushes must land and map exactly once; shuffle emissions
+        # must land and reduce exactly once.  Checked when cfg.audit is on.
+        self.pushed_mb = 0.0
+        self.landed_mb = 0.0
+        self.mapped_mb = 0.0
+        self.shuf_created_mb = 0.0
+        self.shuf_landed_mb = 0.0
+        self.reduced_mb = 0.0
+
         # chunks delivered to mapper j but gated (push/map barrier)
         self.map_gated: List[List[_Chunk]] = [[] for _ in range(nM)]
         # shuffle emissions gated at mapper j (map/shuffle barrier)
@@ -378,6 +395,10 @@ class ScheduleSimResult:
     jobs: List[SimResult]
     makespan: float  # absolute completion time of the last job
     resources: Dict[str, ResourceStats]
+    #: runtime-audit findings (``SimConfig(audit=True)`` jobs only) —
+    #: empty on a conserving, sane execution.  Deliberately excluded from
+    #: :meth:`as_dict` to keep the benchmark JSON schema stable.
+    violations: List[str] = dataclasses.field(default_factory=list)
 
     def utilization(self) -> Dict[str, float]:
         """Busy fraction of the schedule horizon per named resource."""
@@ -475,6 +496,10 @@ class _MultiSim:
         #: pipeline linkage: parent run idx -> downstream run idxs whose
         #: sources consume the parent's reduce output
         self.stage_children: Dict[int, List[int]] = {}
+        #: runtime-audit findings (see :meth:`_audit_step`); bounded so a
+        #: broken invariant cannot balloon memory on a long run
+        self.violations: List[str] = []
+        self._audit = any(g.cfg.audit for g in runs)
 
         nS, nM, nR = substrate.nS, substrate.nM, substrate.nR
         trace = substrate.trace_for
@@ -649,6 +674,76 @@ class _MultiSim:
         t, _, fn, args = heapq.heappop(self._heap)
         self.now = max(self.now, t)
         getattr(self, "_ev_" + fn)(*args)
+        if self._audit:
+            self._audit_step(fn)
+
+    # -- runtime audit -----------------------------------------------------
+    _MAX_VIOLATIONS = 200
+
+    def _violate(self, msg: str) -> None:
+        if len(self.violations) < self._MAX_VIOLATIONS:
+            self.violations.append(f"t={self.now:.6f}: {msg}")
+        elif len(self.violations) == self._MAX_VIOLATIONS:
+            self.violations.append("... further violations suppressed")
+
+    def _audit_step(self, fn: str) -> None:
+        """Post-event sanity: gate counters must stay non-negative and the
+        scalar totals must equal their per-node sums — a drift here means a
+        gate can deadlock shut or open early."""
+        for g in self.runs:
+            if not g.cfg.audit:
+                continue
+            for name, arr in (
+                ("push_inflight", g.push_inflight),
+                ("map_unfinished", g.map_unfinished),
+                ("shuf_inflight", g.shuf_inflight),
+                ("reduce_outstanding", g.reduce_outstanding),
+            ):
+                if np.any(arr < 0):
+                    self._violate(
+                        f"job {g.idx}: after {fn}: {name} negative at "
+                        f"nodes {np.flatnonzero(arr < 0).tolist()}"
+                    )
+            for name, total, arr in (
+                ("push_inflight", g.total_push_inflight, g.push_inflight),
+                ("map_unfinished", g.total_map_unfinished, g.map_unfinished),
+                ("shuf_inflight", g.total_shuf_inflight, g.shuf_inflight),
+            ):
+                if total != int(arr.sum()):
+                    self._violate(
+                        f"job {g.idx}: after {fn}: total_{name}={total} "
+                        f"!= sum({name})={int(arr.sum())}"
+                    )
+
+    def _audit_final(self) -> None:
+        """Byte conservation at completion: every seeded MB lands, maps,
+        shuffles (scaled by alpha) and reduces exactly once."""
+
+        def close(a: float, b: float) -> bool:
+            # rel 1e-6 plus a small absolute floor: shuffle emission skips
+            # sub-1e-9 slivers, so alpha-scaled totals are near- but not
+            # bit-exact
+            return abs(a - b) <= 1e-6 * max(abs(a), abs(b)) + 1e-3
+
+        for g in self.runs:
+            if not g.cfg.audit or not g.seeded:
+                continue
+            checks = (
+                ("landed_mb", g.landed_mb, "pushed_mb", g.pushed_mb),
+                ("mapped_mb", g.mapped_mb, "landed_mb", g.landed_mb),
+                ("shuf_created_mb", g.shuf_created_mb,
+                 "alpha*mapped_mb", g.p.alpha * g.mapped_mb),
+                ("shuf_landed_mb", g.shuf_landed_mb,
+                 "shuf_created_mb", g.shuf_created_mb),
+                ("reduced_mb", g.reduced_mb,
+                 "shuf_landed_mb", g.shuf_landed_mb),
+            )
+            for name_a, a, name_b, b in checks:
+                if not close(a, b):
+                    self._violate(
+                        f"job {g.idx}: conservation: {name_a}={a:.6f} != "
+                        f"{name_b}={b:.6f}"
+                    )
 
     @property
     def finished(self) -> bool:
@@ -673,6 +768,8 @@ class _MultiSim:
         self._start()
         while self._heap:
             self._dispatch()
+        if self._audit:
+            self._audit_final()
         return self.result()
 
     def result(self) -> ScheduleSimResult:
@@ -689,6 +786,7 @@ class _MultiSim:
             jobs=[g.result() for g in self.runs],
             makespan=max((g.reduce_end for g in self.runs), default=0.0),
             resources=resources,
+            violations=list(self.violations),
         )
 
     def _rate(self, g: _JobRun, tier: str, idx: int) -> float:
@@ -742,6 +840,7 @@ class _MultiSim:
         release."""
         c = _Chunk(next(self._cid), size, i, owner=j)
         g.total_map_chunks += 1
+        g.pushed_mb += size
         g.push_inflight[j] += 1
         g.total_push_inflight += 1
         g.map_unfinished[j] += 1
@@ -816,6 +915,9 @@ class _MultiSim:
         if not g.map_alive[j]:
             self._recover_chunk(g, j, c)
             return
+        if not c.landed:
+            c.landed = True
+            g.landed_mb += c.size
         b = g.cfg.barriers[0]
         if b == "P":
             self.mappers[j].enqueue(g, c, self.now)
@@ -867,6 +969,7 @@ class _MultiSim:
             return
         c.done = True
         g.map_end = max(g.map_end, self.now)
+        g.mapped_mb += c.size
         owner = c.owner if c.owner >= 0 else j
         g.map_unfinished[owner] -= 1
         g.total_map_unfinished -= 1
@@ -884,6 +987,7 @@ class _MultiSim:
             if amount <= 1e-9:
                 continue
             sc = _Chunk(next(self._cid), float(amount), j)
+            g.shuf_created_mb += sc.size
             g.shuf_inflight[k] += 1
             g.total_shuf_inflight += 1
             g.reduce_outstanding[k] += 1
@@ -910,6 +1014,7 @@ class _MultiSim:
 
     def _ev_shuffle_arrive(self, g: _JobRun, j: int, k: int, sc: _Chunk):
         g.shuffle_end = max(g.shuffle_end, self.now)
+        g.shuf_landed_mb += sc.size
         g.shuf_inflight[k] -= 1
         g.total_shuf_inflight -= 1
         b = g.cfg.barriers[2]
@@ -960,6 +1065,7 @@ class _MultiSim:
         if not sc.done:
             sc.done = True
             g.reduce_end = max(g.reduce_end, self.now)
+            g.reduced_mb += sc.size
             g.delivered_out[k] += sc.size
             g.reduce_outstanding[k] -= 1
         else:
@@ -1205,6 +1311,7 @@ class _MultiSim:
             g = _JobRun(len(self.runs), platform, plan, cfg,
                         self.sub.nM, self.sub.nR)
             self.runs.append(g)
+            self._audit = self._audit or cfg.audit
             idxs.append(g.idx)
             if cfg.fail_mapper is not None:
                 # raw fail time, exactly as _start() schedules it offline —
@@ -1333,6 +1440,9 @@ class _MultiSim:
                 g.shuf_gated[j].clear()
 
         g.plan = plan  # future emissions (un-mapped chunks) use the new y
+        # the pulled-back pool is re-created below under the new y: net it
+        # out of the conservation ledger so created == landed still holds
+        g.shuf_created_mb -= float(pool_sent.sum() + pool_gated.sum())
 
         # a finalized reducer's output has already been handed to the
         # downstream stage sources — routing new volume there would be
@@ -1356,6 +1466,7 @@ class _MultiSim:
                     n = max(int(np.ceil(shares[k] / g.cfg.chunk_mb)), 1)
                     for _ in range(n):
                         sc = _Chunk(next(self._cid), shares[k] / n, j)
+                        g.shuf_created_mb += sc.size
                         g.shuf_inflight[k] += 1
                         g.total_shuf_inflight += 1
                         g.reduce_outstanding[k] += 1

@@ -1,0 +1,15 @@
+"""as-dict-json: BAD — sets, bytes and a raw ndarray inside ``as_dict()``
+would all blow up (or silently mangle) in ``json.dump``."""
+import numpy as np
+
+
+class Report:
+    def __init__(self, ends):
+        self.ends = ends
+
+    def as_dict(self):
+        return {
+            "ends": np.asarray(self.ends),
+            "tags": {"a", "b"},
+            "blob": b"raw",
+        }

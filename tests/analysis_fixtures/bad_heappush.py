@@ -1,0 +1,7 @@
+"""no-bare-heappush: BAD — an event is pushed outside ``at()``, bypassing
+the single home of the (time, seq) tie-break discipline."""
+import heapq
+
+
+def schedule(heap, t, fn):
+    heapq.heappush(heap, (t, fn))

@@ -1,0 +1,12 @@
+"""f64-pricing-purity: BAD — jnp leaks into the pricing call graph and an
+xp-parameterized helper is called without pinning xp=np."""
+import jax.numpy as jnp
+
+
+def _helper(v, xp=jnp):
+    return xp.cumsum(v)
+
+
+def volume_model(v):
+    ends = _helper(v)  # missing xp=np pin
+    return jnp.max(ends)  # jnp in a pricing-reachable function

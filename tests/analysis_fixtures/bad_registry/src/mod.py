@@ -1,0 +1,13 @@
+"""registry-coverage: BAD — a mode is registered but never referenced in
+the project's tests or README."""
+
+
+def register_planner(name, fn=None):
+    return fn
+
+
+def _ghost(platform):
+    return None
+
+
+register_planner("ghost_mode", _ghost)

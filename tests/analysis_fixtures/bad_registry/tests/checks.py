@@ -1,0 +1,1 @@
+"""Exercises the module without ever naming the registered mode."""

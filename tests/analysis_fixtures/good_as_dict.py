@@ -1,0 +1,14 @@
+"""as-dict-json: GOOD — every value is coerced to a JSON-native form."""
+import numpy as np
+
+
+class Report:
+    def __init__(self, ends):
+        self.ends = ends
+
+    def as_dict(self):
+        return {
+            "ends": np.asarray(self.ends).tolist(),
+            "total": float(np.asarray(self.ends).sum()),
+            "tags": ["a", "b"],
+        }

@@ -1,0 +1,12 @@
+"""no-bare-heappush: GOOD — the only insertion lives inside ``at()``."""
+import heapq
+import itertools
+
+
+class Engine:
+    def __init__(self):
+        self.heap = []
+        self._seq = itertools.count()
+
+    def at(self, t, fn, *args):
+        heapq.heappush(self.heap, (t, next(self._seq), fn, args))

@@ -1,0 +1,1 @@
+"""References the registered mode: ghost_mode."""

@@ -1,0 +1,182 @@
+"""Tests for :mod:`repro.analysis` — the lint rules (against bad/good
+fixtures), the executor conservation/determinism audits, and the shared
+structural validators now wired into the model front doors."""
+import itertools
+import re
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import audit, lint, validate
+from repro.analysis.audit import QUICK_SCENARIOS
+from repro.api import GeoJob
+from repro.core.makespan import CostModel
+from repro.core.platform import planetlab_platform
+from repro.core.simulate import SimConfig, open_schedule
+
+FIXTURES = Path(__file__).parent / "analysis_fixtures"
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# lint: every file rule has a failing and a passing fixture
+# ---------------------------------------------------------------------------
+
+FILE_RULE_CASES = [
+    ("f64-pricing-purity", "bad_pricing.py", "good_pricing.py"),
+    ("no-bare-heappush", "bad_heappush.py", "good_heappush.py"),
+    ("as-dict-json", "bad_as_dict.py", "good_as_dict.py"),
+]
+
+
+@pytest.mark.parametrize(
+    "rule,bad,good", FILE_RULE_CASES, ids=[c[0] for c in FILE_RULE_CASES]
+)
+def test_file_rule_fixtures(rule, bad, good):
+    bad_findings = lint.lint_file(FIXTURES / bad)
+    assert any(f.rule == rule for f in bad_findings), (
+        f"{bad} should trip {rule}, got {bad_findings}"
+    )
+    # findings print as "file:line: RULE message"
+    for f in bad_findings:
+        assert re.fullmatch(r".+:\d+: [\w-]+ .+", str(f), re.DOTALL)
+    assert lint.lint_file(FIXTURES / good) == []
+
+
+def test_pricing_purity_flags_unpinned_xp_call():
+    findings = lint.lint_file(FIXTURES / "bad_pricing.py")
+    msgs = [f.message for f in findings]
+    assert any("without pinning xp=np" in m for m in msgs)
+    assert any("`jnp` used" in m for m in msgs)
+
+
+def test_as_dict_rule_names_each_offender():
+    findings = lint.lint_file(FIXTURES / "bad_as_dict.py")
+    msgs = " ".join(f.message for f in findings)
+    assert "set is not JSON-serializable" in msgs
+    assert "bytes literal" in msgs
+    assert "raw ndarray" in msgs
+
+
+def test_waiver_comment_suppresses_finding():
+    assert lint.lint_file(FIXTURES / "waived_heappush.py") == []
+
+
+def test_registry_coverage_fixture_projects():
+    findings = lint.lint_project(FIXTURES / "bad_registry")
+    assert any(
+        f.rule == "registry-coverage" and "ghost_mode" in f.message
+        for f in findings
+    ), findings
+    assert lint.lint_project(FIXTURES / "good_registry") == []
+
+
+def test_repo_lint_clean():
+    """The repo itself must lint clean — the CI `analyze` job enforces the
+    same invariant via `python -m repro.analysis`."""
+    assert lint.lint_project(REPO_ROOT) == []
+
+
+# ---------------------------------------------------------------------------
+# audit: conservation across every barrier triple + the quick scenarios
+# ---------------------------------------------------------------------------
+
+BARRIER_TRIPLES = list(itertools.product("GLP", repeat=3))
+
+
+@pytest.mark.parametrize(
+    "barriers", BARRIER_TRIPLES, ids=["".join(b) for b in BARRIER_TRIPLES]
+)
+def test_conservation_all_barrier_triples(barriers):
+    p = planetlab_platform(4, alpha=1.7, seed=2)
+    eng = open_schedule(
+        [(p, audit.uniform_plan(p), SimConfig(barriers=barriers, audit=True))]
+    )
+    assert eng.run().violations == []
+
+
+@pytest.mark.parametrize(
+    "name,build", QUICK_SCENARIOS, ids=[n for n, _ in QUICK_SCENARIOS]
+)
+def test_quick_scenario_conservation_and_snapshots(name, build):
+    assert audit.conservation_audit(build) == []
+    assert audit.snapshot_audit(build) == []
+
+
+def test_swap_path_conservation():
+    """The steered path — pull-back + re-split of gated shuffle work — must
+    keep the byte ledger balanced too."""
+    assert audit.swap_conservation_audit() == []
+
+
+# ---------------------------------------------------------------------------
+# audit: determinism under permuted same-timestamp tie-breaks
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "name,build", QUICK_SCENARIOS, ids=[n for n, _ in QUICK_SCENARIOS]
+)
+def test_determinism_under_permuted_tiebreaks(name, build):
+    assert audit.determinism_audit(name, build, k=5, seed=0) == []
+
+
+def test_raced_fixture_is_detected():
+    """Both chunks of the planted fixture land on the one mapper at exactly
+    t=4.0 with different sizes, so the service order — and everything
+    downstream — depends on the tie-break.  The audit must flag it, at the
+    racing timestamp."""
+    divs = audit.determinism_audit("raced", audit.raced_engine, k=5, seed=0)
+    assert divs, "planted race went undetected"
+    assert any(abs(d.time - 4.0) < 1e-9 for d in divs), divs
+    assert "diverges" in str(divs[0])
+
+
+def test_run_all_is_clean():
+    report = audit.run_all(k=2, seed=0)
+    assert report.ok, "\n".join(report.lines())
+
+
+# ---------------------------------------------------------------------------
+# validators shared into the model front doors
+# ---------------------------------------------------------------------------
+
+
+def test_validator_helpers():
+    with pytest.raises(ValueError, match="strictly positive"):
+        validate.require_positive("B", np.array([1.0, 0.0]))
+    with pytest.raises(ValueError, match="non-finite"):
+        validate.require_finite("D", np.array([1.0, np.nan]))
+    with pytest.raises(ValueError, match="do not sum to 1"):
+        validate.require_row_stochastic("x", np.array([[0.5, 0.2]]))
+    with pytest.raises(ValueError, match=r"nS=3 != nR=2"):
+        validate.validate_stage_coupling(1, 3, 2, (0,), 2)
+    with pytest.raises(ValueError, match="V_shuffle shape"):
+        validate.validate_volumes(
+            np.ones((2, 2)), np.ones(2), np.ones((3, 1)), np.ones(1),
+            dims=(2, 2, 1),
+        )
+
+
+def test_with_plan_rejects_foreign_platform_plan():
+    from repro.core.plan import ExecutionPlan
+
+    p = planetlab_platform(4, alpha=1.0, seed=0)  # 8 nodes
+    foreign = ExecutionPlan(  # a valid plan for a 4-source platform
+        x=np.full((4, p.nM), 1.0 / p.nM), y=np.full(p.nR, 1.0 / p.nR)
+    )
+    with pytest.raises(ValueError, match="does not match"):
+        GeoJob(p).with_plan(foreign)
+
+
+def test_price_volumes_rejects_nan_volume():
+    p = planetlab_platform(4, alpha=1.0, seed=0)
+    cm = CostModel(p, ("G", "G", "L"))
+    V_push, V_map, V_shuffle, V_reduce = cm.analytic_volumes(
+        audit.uniform_plan(p)
+    )
+    V_map = np.asarray(V_map, dtype=np.float64).copy()
+    V_map[0] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        cm.price_volumes(V_push, V_map, V_shuffle, V_reduce)
