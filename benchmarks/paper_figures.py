@@ -17,6 +17,7 @@ benchmarks.common.  Numbers to compare against the paper:
 from __future__ import annotations
 
 import itertools
+import time
 from typing import Dict
 
 import numpy as np
@@ -25,7 +26,13 @@ from repro.api import (
     Arrival, GeoJob, GeoPipeline, GeoSchedule, OnlineConfig, split_sources,
 )
 from repro.core.makespan import BARRIERS_GGL
-from repro.core.optimize import optimize_plan
+from repro.core.optimize import (
+    optimize_plan,
+    optimize_plan_batch,
+    replan_batch,
+    reset_solver_cache_stats,
+    solver_cache_stats,
+)
 from repro.core.plan import local_push_plan, uniform_plan
 from repro.core.platform import CapacityTrace, Substrate, planetlab_platform
 from repro.core.simulate import SimConfig, simulate, simulate_schedule
@@ -511,4 +518,91 @@ def schedule_online_shared() -> Dict:
     emit("schedule_online_shared_vs_solo", 0.0, f"reduction={gap_solo:.0%}")
     out["shared_vs_frozen_joint_reduction"] = gap_frozen
     out["shared_vs_solo_reduction"] = gap_solo
+    return out
+
+
+def bench_planner() -> Dict:
+    """Planner-as-a-service throughput (ROADMAP §1): plans/sec for batched
+    same-shape solves, p50/p99 single-solve latency cold vs warm, the
+    incremental-vs-full replan speedup, and the compile counts behind them
+    — all gated by compare.py like any makespan."""
+    n_restarts = _OPT["n_restarts"]
+    # a step budget no other scenario uses: steps is a static jit arg, so
+    # this guarantees the first solve below is a genuinely cold compile
+    # even when the full benchmark suite ran first in this process
+    steps = _OPT["steps"] + 3
+    p = planetlab_platform(8, alpha=1.0, seed=3)
+    opts = dict(n_restarts=n_restarts, steps=steps)
+
+    reset_solver_cache_stats()
+    t0 = time.perf_counter()
+    optimize_plan(p, "e2e_multi", seed=0, **opts)
+    cold_s = time.perf_counter() - t0
+
+    warm_lat = []
+    for s in range(1, 9):
+        t0 = time.perf_counter()
+        optimize_plan(p, "e2e_multi", seed=s, **opts)
+        warm_lat.append(time.perf_counter() - t0)
+    p50_ms = float(np.percentile(warm_lat, 50) * 1e3)
+    p99_ms = float(np.percentile(warm_lat, 99) * 1e3)
+
+    # batched throughput: 8 concurrent same-shape requests, one dispatch
+    views = [planetlab_platform(8, alpha=1.0, seed=s) for s in range(8)]
+    seeds = list(range(10, 18))
+    optimize_plan_batch(views, "e2e_multi", seeds=seeds, **opts)  # warm B=8
+    t0 = time.perf_counter()
+    optimize_plan_batch(views, "e2e_multi", seeds=seeds, **opts)
+    batch_s = time.perf_counter() - t0
+    plans_per_s = len(views) / batch_s
+
+    # incremental replan vs full anneal, each timed warm through the
+    # batched service path run_online actually uses (replan_batch over the
+    # 8 views — one dispatch, so Python/dispatch overhead is amortized the
+    # way it is in production)
+    incumbents = [
+        r.plan for r in optimize_plan_batch(views, "e2e_multi",
+                                            seeds=seeds, **opts)
+    ]
+    # the speedup is measured at the PRODUCTION anneal budget (the library
+    # default run_online uses), not the quick smoke budget — at tiny step
+    # counts the fixed per-request cost (f64 pricing, batch assembly)
+    # swamps the anneal and understates what the online loop gains
+    ropts = dict(n_restarts=n_restarts, steps=500)
+    for incremental in (False, True):
+        replan_batch(views, incumbents, seeds=seeds,
+                     incremental=incremental, **ropts)
+
+    def best_of(incremental, repeats=3):
+        # best-of-N: the min is the least scheduler-noise-polluted sample
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            replan_batch(views, incumbents, seeds=seeds,
+                         incremental=incremental, **ropts)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    full_s = best_of(incremental=False)
+    inc_s = best_of(incremental=True)
+
+    stats = solver_cache_stats()
+    out = {
+        "throughput": {
+            "plans_per_s": plans_per_s,
+            "warm_vs_cold_speedup": cold_s / (p50_ms / 1e3),
+            "incremental_speedup": full_s / inc_s,
+        },
+        "latency": {"cold_s": cold_s, "p50_ms": p50_ms, "p99_ms": p99_ms},
+        "cache": {"compiles": stats["compiles"], "hits": stats["hits"],
+                  "misses": stats["misses"]},
+    }
+    emit("bench_planner_throughput", batch_s * 1e6,
+         f"plans_per_s={plans_per_s:.1f};"
+         f"warm_vs_cold={out['throughput']['warm_vs_cold_speedup']:.0f}x")
+    emit("bench_planner_latency", np.mean(warm_lat) * 1e6,
+         f"cold={cold_s:.2f}s;p50={p50_ms:.0f}ms;p99={p99_ms:.0f}ms")
+    emit("bench_planner_incremental", inc_s * 1e6,
+         f"full={full_s*1e3:.0f}ms;incremental={inc_s*1e3:.0f}ms;"
+         f"speedup={out['throughput']['incremental_speedup']:.1f}x")
     return out

@@ -11,6 +11,10 @@ trajectory.
 
     PYTHONPATH=src python -m benchmarks.run [--skip-roofline] [--quick]
                                             [--json PATH]
+                                            [--planner-json PATH]
+
+The JSON meta header records jax/numpy/git provenance plus the solver
+cache counters (compiles, hits, misses) accumulated over the run.
 """
 from __future__ import annotations
 
@@ -63,6 +67,10 @@ def main() -> None:
                     metavar="NAME",
                     help="run only the named scenario (repeatable) — lets "
                          "CI and local dev re-run a single scenario")
+    ap.add_argument("--planner-json", default=None, metavar="PATH",
+                    help="also write just the bench_planner scenario (plus "
+                         "meta) as its own JSON document — the planner-"
+                         "throughput artifact CI uploads")
     ap.add_argument("--out", default="reports")
     args = ap.parse_args()
     if args.quick:
@@ -82,6 +90,7 @@ def main() -> None:
         ("schedule_online", F.schedule_online),
         ("schedule_online_shared", F.schedule_online_shared),
         ("pipeline_chain", F.pipeline_chain),
+        ("bench_planner", F.bench_planner),
     ]
     if args.scenario:
         known = {name for name, _ in scenarios}
@@ -114,23 +123,46 @@ def main() -> None:
     with open(os.path.join(args.out, "benchmarks.json"), "w") as f:
         json.dump(results, f, indent=1, default=_json_default)
 
+    if args.json or args.planner_json:
+        from repro.core.optimize import solver_cache_stats
+
+        # cumulative solver-cache counters over the whole run: compile-time
+        # vs steady-state throughput is visible in the bench trajectory
+        meta = {"quick": bool(args.quick),
+                "opt": {k: int(v) for k, v in F._OPT.items()},
+                "total_wall_s": sum(wall.values()),
+                "solver_cache": solver_cache_stats(),
+                **_provenance()}
+
+    def _write_json(path, doc):
+        json_dir = os.path.dirname(path)
+        if json_dir:
+            os.makedirs(json_dir, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1, default=_json_default)
+
     if args.json:
-        doc = {
-            "meta": {"quick": bool(args.quick),
-                     "opt": {k: int(v) for k, v in F._OPT.items()},
-                     "total_wall_s": sum(wall.values()),
-                     **_provenance()},
+        _write_json(args.json, {
+            "meta": meta,
             "scenarios": {
                 name: {"wall_s": wall[name], "results": results[name]}
                 for name in results
             },
-        }
-        json_dir = os.path.dirname(args.json)
-        if json_dir:
-            os.makedirs(json_dir, exist_ok=True)
-        with open(args.json, "w") as f:
-            json.dump(doc, f, indent=1, default=_json_default)
+        })
         print(f"[json] machine-readable timings in {args.json}")
+
+    if args.planner_json:
+        if "bench_planner" not in results:
+            ap.error("--planner-json requires the bench_planner scenario "
+                     "to run (drop the --scenario filter or include it)")
+        _write_json(args.planner_json, {
+            "meta": meta,
+            "scenarios": {
+                "bench_planner": {"wall_s": wall["bench_planner"],
+                                  "results": results["bench_planner"]},
+            },
+        })
+        print(f"[json] planner throughput in {args.planner_json}")
 
     print(f"\n[done] results in {args.out}/benchmarks.{{csv,json}}")
 

@@ -27,6 +27,14 @@ reproduction's *results* rest on:
     emitters; they must build values from JSON-serializable literals and
     comprehensions only (no sets, bytes, or raw ndarray constructors).
 
+``solver-compile-counters``
+    Every module-level ``_solve*`` function (the jitted solver kernels)
+    must be decorated with ``_counted_solver`` rather than bare
+    ``jax.jit`` — the shape-keyed cache hit/miss/compile counters feed
+    the cache-semantics tests, ``swap_charge``'s compile-excluded solve
+    timing, and bench provenance; a solver that bypasses them silently
+    corrupts all three.
+
 Findings print as ``file:line: RULE message``.  Waive a single line with a
 ``# lint: ignore[rule-name]`` comment (bare ``# lint: ignore`` waives all
 rules on that line).
@@ -330,6 +338,41 @@ def _rule_as_dict_json(file: LintedFile) -> List[Finding]:
         if (isinstance(node, ast.FunctionDef) and node.name == "as_dict"):
             for stmt in node.body:
                 check(stmt, False)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# rule: solver-compile-counters
+# ---------------------------------------------------------------------------
+
+
+def _decorator_names(fn: ast.FunctionDef) -> Set[str]:
+    """Bare names of a function's decorators: ``@f``, ``@f(...)``,
+    ``@mod.f`` and ``@mod.f(...)`` all yield ``f``."""
+    names: Set[str] = set()
+    for deco in fn.decorator_list:
+        node = deco.func if isinstance(deco, ast.Call) else deco
+        if isinstance(node, ast.Name):
+            names.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            names.add(node.attr)
+    return names
+
+
+@_file_rule("solver-compile-counters")
+def _rule_solver_compile_counters(file: LintedFile) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in getattr(file.tree, "body", []):
+        if not (isinstance(node, ast.FunctionDef)
+                and node.name.startswith("_solve")):
+            continue
+        if "_counted_solver" not in _decorator_names(node):
+            findings.append(Finding(
+                file.rel, node.lineno, "solver-compile-counters",
+                f"solver `{node.name}` is not decorated with "
+                "`_counted_solver` — its compiles/hits would be invisible "
+                "to the cache counters, swap_charge's compile-excluded "
+                "solve timing, and bench provenance"))
     return findings
 
 

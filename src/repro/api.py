@@ -53,6 +53,7 @@ for the chunks not yet committed:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -64,6 +65,7 @@ from .core.optimize import (
     PipelinePlanResult,
     PlanResult,
     SchedulePlanResult,
+    SolveTimeEMA,
     _pipeline_result,
     _shared_schedule_result,
     available_modes,
@@ -73,7 +75,9 @@ from .core.optimize import (
     optimize_plan,
     optimize_schedule,
     replan,
+    replan_batch,
     replan_schedule,
+    solver_cache_stats,
     swap_charge,
 )
 from .core.pipeline import PipelineSpec, StageSpec
@@ -1091,8 +1095,11 @@ class GeoSchedule:
         ``static`` (never re-plan: reproduces the frozen offline pipeline
         exactly), ``reactive`` (re-plan on every arrival / failure /
         capacity-drift event), ``horizon`` (re-plan every ``replan_dt``
-        seconds), and their schedule-aware, cost-aware variants
-        ``reactive_shared`` / ``horizon_shared``.  At each decision point
+        seconds), their schedule-aware, cost-aware variants
+        ``reactive_shared`` / ``horizon_shared``, and
+        ``reactive_incremental`` (shared triggers with warm-started
+        incremental solves charged at measured cost).  At each decision
+        point
         the executor is paused and a
         :class:`~repro.core.simulate.ProgressSnapshot` captured; how the
         residuals are then re-planned is the policy's
@@ -1108,8 +1115,10 @@ class GeoSchedule:
           (:func:`repro.core.optimize.replan_schedule`) — no job grabs a
           fast link the model knows the others also need;
         * ``hysteresis > 0``: each candidate swap is charged its replan
-          cost (:func:`repro.core.optimize.swap_charge`: solver estimate +
-          modeled data movement of re-routing its queued bytes) and fires
+          cost (:func:`repro.core.optimize.swap_charge`: solver wall-clock
+          — a measured EMA of this run's solve times unless the config
+          pins ``solver_cost_s`` — plus the modeled data movement of
+          re-routing its queued bytes) and fires
           only when modeled savings exceed ``hysteresis ×`` the charge —
           rejected candidates land in the timeline as ``reject`` entries
           with the charge that gated them.  ``hysteresis=inf`` never
@@ -1177,47 +1186,86 @@ class GeoSchedule:
                             stage_links=self._links or None)
         decisions: List[Decision] = []
         n_replans = 0
+        # the charged solver cost: a fixed estimate when the config pins
+        # one, otherwise the measured EMA of this run's solve times (cold
+        # compiles excluded — paid once per shape, not per decision)
+        ema = SolveTimeEMA(fixed=ocfg.solver_cost_s)
 
-        def replan_job(jp, kind, t, sub_t):
+        def timed(fn, *args, **kwargs):
+            c0 = solver_cache_stats()["compiles"]
+            t0 = time.perf_counter()
+            out = fn(*args, **kwargs)
+            ema.observe(time.perf_counter() - t0,
+                        compiled=solver_cache_stats()["compiles"] > c0)
+            return out
+
+        def replan_solo(kind, t, sub_t, snap, injected):
+            """Solo decision path: every live job re-planned independently
+            — but solved as ONE batched dispatch (same shapes vmap into a
+            single compiled call), with per-job seeds matching the old
+            sequential loop exactly."""
             nonlocal n_replans
-            g = eng.runs[jp.job]
-            view = sub_t.view(g.p.D, g.p.alpha, name=f"{g.p.name}@{t:g}s")
-            before = CostModel(view, g.cfg.barriers).residual_makespan(
-                jp, g.plan
-            )
-            n_replans += 1
-            res = replan(
-                view, g.plan, progress=jp, barriers=g.cfg.barriers,
-                n_restarts=n_restarts, steps=steps,
-                seed=seed + 977 * n_replans,
-            )
-            charge = 0.0
-            if res.plan is g.plan:
-                # the incumbent won: replan() only returns a different
-                # object when it is strictly better in float64
-                action = "keep"
-            elif ocfg.hysteresis == 0.0:
-                eng.swap_plan(jp.job, res.plan)
-                action = "swap"
-            else:
-                # cost-aware solo policy: the same hysteresis gate the
-                # shared path applies
-                charge = swap_charge(view, jp, g.plan, res.plan,
-                                     ocfg.solver_cost_s)
-                savings = before - res.makespan
-                if np.isfinite(ocfg.hysteresis) \
-                        and savings > ocfg.hysteresis * charge:
+            live = [jp for jp in snap.jobs
+                    if not jp.done and jp.job not in injected]
+            if not live:
+                return
+            runs = [eng.runs[jp.job] for jp in live]
+            views = [
+                sub_t.view(g.p.D, g.p.alpha, name=f"{g.p.name}@{t:g}s")
+                for g in runs
+            ]
+            befores = [
+                CostModel(view, g.cfg.barriers).residual_makespan(jp, g.plan)
+                for view, g, jp in zip(views, runs, live)
+            ]
+            seeds = [seed + 977 * (n_replans + 1 + i)
+                     for i in range(len(live))]
+            n_replans += len(live)
+            results: List[Optional[PlanResult]] = [None] * len(live)
+            by_barriers: Dict[str, List[int]] = {}
+            for i, g in enumerate(runs):
+                by_barriers.setdefault(g.cfg.barriers, []).append(i)
+            for barriers, idxs in by_barriers.items():
+                group = timed(
+                    replan_batch,
+                    [views[i] for i in idxs], [runs[i].plan for i in idxs],
+                    progresses=[live[i] for i in idxs], barriers=barriers,
+                    n_restarts=n_restarts, steps=steps,
+                    seeds=[seeds[i] for i in idxs],
+                    incremental=ocfg.incremental,
+                )
+                for i, res in zip(idxs, group):
+                    results[i] = res
+            for jp, g, view, before, res in zip(
+                live, runs, views, befores, results
+            ):
+                charge = 0.0
+                if res.plan is g.plan:
+                    # the incumbent won: replan only returns a different
+                    # object when it is strictly better in float64
+                    action = "keep"
+                elif ocfg.hysteresis == 0.0:
                     eng.swap_plan(jp.job, res.plan)
                     action = "swap"
                 else:
-                    action = "reject"
-            decisions.append(Decision(
-                time=t, event=kind, job=jp.job, action=action,
-                modeled_before=before,
-                modeled_after=(before if action == "reject"
-                               else res.makespan),
-                charge=charge,
-            ))
+                    # cost-aware solo policy: the same hysteresis gate the
+                    # shared path applies
+                    charge = swap_charge(view, jp, g.plan, res.plan,
+                                         ema.charge_s())
+                    savings = before - res.makespan
+                    if np.isfinite(ocfg.hysteresis) \
+                            and savings > ocfg.hysteresis * charge:
+                        eng.swap_plan(jp.job, res.plan)
+                        action = "swap"
+                    else:
+                        action = "reject"
+                decisions.append(Decision(
+                    time=t, event=kind, job=jp.job, action=action,
+                    modeled_before=before,
+                    modeled_after=(before if action == "reject"
+                                   else res.makespan),
+                    charge=charge,
+                ))
 
         def co_replan(kind, t, sub_t, snap, fresh=frozenset()):
             """Schedule-aware decision: co-replan every live job's residual
@@ -1237,10 +1285,11 @@ class GeoSchedule:
             incumbents = [eng.runs[idx].plan for idx, _ in live]
             progs = [jp for _, jp in live]
             n_replans += 1
-            res = replan_schedule(
-                sub_t, incumbents, progs,
+            res = timed(
+                replan_schedule, sub_t, incumbents, progs,
                 barriers=result.barriers, n_restarts=n_restarts,
                 steps=steps, seed=seed + 977 * n_replans,
+                incremental=ocfg.incremental,
             )
             # replan_schedule returns either the incumbent objects (the
             # stack won) or one whole new stack — changed is all-or-nothing
@@ -1253,9 +1302,9 @@ class GeoSchedule:
                     sub_t, jp, incumbents[slot], res.plans[slot],
                     solver_cost_s=0.0,
                 )
-                # one joint solve serves every job: its wall-clock estimate
-                # is charged once, pro-rated across the changed records
-                charges[slot] = move + ocfg.solver_cost_s / len(changed)
+                # one joint solve serves every job: its wall-clock charge
+                # is counted once, pro-rated across the changed records
+                charges[slot] = move + ema.charge_s() / len(changed)
             savings = max(res.before) - res.makespan
             adopt = bool(
                 changed and np.isfinite(ocfg.hysteresis)
@@ -1321,21 +1370,22 @@ class GeoSchedule:
                         # the same hysteresis as everyone else).  The
                         # newcomer has nothing queued yet, so its charge is
                         # the solver estimate alone.
-                        res = replan(
-                            view, frozen, progress=None,
+                        res = timed(
+                            replan, view, frozen, progress=None,
                             barriers=acfg.barriers, n_restarts=n_restarts,
                             steps=steps, seed=seed + 977 * len(decisions),
+                            incremental=ocfg.incremental,
                         )
                         if res.plan is not frozen:
                             if (cm_t.makespan(frozen) - res.makespan
-                                    > ocfg.hysteresis * ocfg.solver_cost_s):
+                                    > ocfg.hysteresis * ema.charge_s()):
                                 plan = res.plan
                                 # charged only under cost-aware gating, so
                                 # hysteresis=0 keeps its zero-charge records
                                 if ocfg.hysteresis > 0:
-                                    arrival_charge = ocfg.solver_cost_s
+                                    arrival_charge = ema.charge_s()
                             else:
-                                arrival_rejected = ocfg.solver_cost_s
+                                arrival_rejected = ema.charge_s()
                     idx = eng.inject([(platform, plan, acfg)])[0]
                     injected.add(idx)
                     before = cm_t.makespan(frozen)
@@ -1363,10 +1413,7 @@ class GeoSchedule:
                     # else's, which is the point of co-replanning
                     co_replan(kind, t_next, sub_t, snap, fresh=injected)
                 else:
-                    for jp in snap.jobs:
-                        if jp.done or jp.job in injected:
-                            continue
-                        replan_job(jp, kind, t_next, sub_t)
+                    replan_solo(kind, t_next, sub_t, snap, injected)
 
         sim = eng.run()
         return OnlineReport(

@@ -316,6 +316,26 @@ class JobProgress:
             map_alive=np.ones(nM, dtype=bool),
         )
 
+    #: the six residual buckets, in the positional order
+    #: :func:`residual_volumes` (and every residual solver) consumes them
+    RESIDUAL_FIELDS = ("resid_push", "committed_push", "at_mapper",
+                       "shuffle_pool", "committed_shuffle", "at_reducer")
+
+    @classmethod
+    def stack(cls, progresses) -> "Tuple[np.ndarray, ...]":
+        """Stack the six residual buckets of ``progresses`` along a new
+        leading job axis — the ``(J, ...)`` float64 arrays the batched and
+        joint residual solvers consume (one stacking discipline, so the
+        solo-batched, shared, and pricing paths can never disagree on
+        bucket order)."""
+        return tuple(
+            np.stack([
+                np.asarray(getattr(pr, field), dtype=np.float64)
+                for pr in progresses
+            ])
+            for field in cls.RESIDUAL_FIELDS
+        )
+
     def reroutable_mb(self) -> Dict[str, float]:
         """MB an online plan swap would pull back and re-route: push bytes
         still queued at the sources (steered by a new ``x``) and map-output

@@ -88,15 +88,21 @@ __all__ = [
     "get_schedule_planner",
     "optimize_pipeline",
     "optimize_plan",
+    "optimize_plan_batch",
     "optimize_schedule",
     "register_online_policy",
     "register_pipeline_planner",
     "register_planner",
     "register_schedule_planner",
     "replan",
+    "replan_batch",
     "replan_schedule",
+    "reset_solver_cache_stats",
     "score_residual_shared",
+    "solver_cache_stats",
     "swap_charge",
+    "SolveTimeEMA",
+    "SolverService",
 ]
 
 #: The paper's built-in planner modes (kept as a tuple for backwards
@@ -238,16 +244,108 @@ def _adam_anneal(loss, params0, steps: int, scale, lr, tau0_frac, tau1_frac):
     return params
 
 
-@functools.partial(
-    jax.jit, static_argnames=("loss_kind", "barriers", "opt_x", "opt_y", "steps")
+# ---------------------------------------------------------------------------
+# solver service plumbing: shape-keyed executable cache with hit/miss/compile
+# counters
+# ---------------------------------------------------------------------------
+
+#: cumulative counters over every compiled-solver call in this process;
+#: read with :func:`solver_cache_stats`, zero with
+#: :func:`reset_solver_cache_stats`.  The executable cache itself is
+#: jit's own (module-level, so it survives across GeoSchedule /
+#: SolverService instances); these counters make it observable.
+_SOLVER_STATS = {"calls": 0, "hits": 0, "misses": 0, "compiles": 0}
+_SOLVER_KEYS: set = set()
+
+
+def _abstract_leaf(leaf):
+    """A leaf's contribution to the executable cache key: arrays key by
+    shape+dtype only; bare Python scalars are weak-typed traced values
+    under jit, so their *type* keys the executable and their value does
+    not (this is what lets the incremental mode reuse the full-anneal
+    executable when only ``lr``/``tau`` change)."""
+    if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+        return ("arr", tuple(leaf.shape), str(leaf.dtype))
+    return ("weak", type(leaf).__name__)
+
+
+def _counted_solver(static_argnames: Tuple[str, ...] = ()):
+    """``jax.jit`` plus cache accounting: wraps a solver kernel so every
+    call is classified as a hit (an executable keyed by the same
+    shapes/dtypes + static values was requested before) or a miss, and
+    true XLA compiles are counted via the jitted function's own cache
+    size.  The counters feed the cache-semantics tests, the
+    ``bench_planner`` provenance, and the warm/cold split of the measured
+    solver-cost EMA (:class:`SolveTimeEMA`)."""
+    statics = tuple(static_argnames)
+
+    def deco(fn):
+        jitted = jax.jit(fn, static_argnames=statics)
+        sig = inspect.signature(fn)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            bound = sig.bind(*args, **kwargs)
+            bound.apply_defaults()
+            parts: list = [fn.__name__]
+            for pname, val in bound.arguments.items():
+                if pname in statics:
+                    parts.append((pname, "static", val))
+                else:
+                    parts.append((pname, tuple(
+                        _abstract_leaf(leaf) for leaf in jax.tree.leaves(val)
+                    )))
+            key = tuple(parts)
+            _SOLVER_STATS["calls"] += 1
+            if key in _SOLVER_KEYS:
+                _SOLVER_STATS["hits"] += 1
+            else:
+                _SOLVER_STATS["misses"] += 1
+                _SOLVER_KEYS.add(key)
+            size_fn = getattr(jitted, "_cache_size", None)
+            before = size_fn() if callable(size_fn) else None
+            out = jitted(*args, **kwargs)
+            if before is not None:
+                compiled = size_fn() > before
+            else:  # pragma: no cover — jax without _cache_size()
+                compiled = key not in _SOLVER_KEYS
+            if compiled:
+                _SOLVER_STATS["compiles"] += 1
+            return out
+
+        wrapper._jitted = jitted
+        return wrapper
+
+    return deco
+
+
+def solver_cache_stats() -> Dict[str, int]:
+    """Cumulative solver-executable cache counters for this process:
+    ``calls`` (compiled-solver invocations), ``hits``/``misses`` (against
+    the shape+static key), and ``compiles`` (true XLA compilations —
+    a re-trace of a known key, e.g. after a donated-buffer change, counts
+    here but not as a miss)."""
+    return dict(_SOLVER_STATS)
+
+
+def reset_solver_cache_stats() -> None:
+    """Zero the counters (the compiled executables themselves stay
+    cached — this resets accounting, not the cache)."""
+    for k in _SOLVER_STATS:
+        _SOLVER_STATS[k] = 0
+    _SOLVER_KEYS.clear()
+
+
+@_counted_solver(
+    static_argnames=("loss_kind", "barriers", "opt_x", "opt_y", "steps")
 )
-def _solve_batch(
-    arrs,
-    logits_x0,  # (R, nS, nM)
-    logits_y0,  # (R, nR)
-    x_fixed,  # (nS, nM) used when opt_x=False
-    y_fixed,  # (nR,)    used when opt_y=False
-    scale,  # scalar — typical makespan, sets the tau schedule units
+def _solve_batch_many(
+    arrs,  # 6-tuple of (B, ...) arrays: D, B_sm, B_mr, C_m, C_r, alpha
+    logits_x0,  # (B, R, nS, nM)
+    logits_y0,  # (B, R, nR)
+    x_fixed,  # (B, nS, nM) used when opt_x=False
+    y_fixed,  # (B, nR)     used when opt_y=False
+    scale,  # (B,) — typical makespan per request, sets the tau units
     loss_kind: str,
     barriers: Tuple[str, str, str],
     opt_x: bool,
@@ -257,30 +355,38 @@ def _solve_batch(
     tau0_frac: float = 0.3,
     tau1_frac: float = 1e-3,
 ):
-    """Run ``R`` Adam restarts of ``steps`` annealed iterations; return the
-    final (x, y) per restart plus their exact hard-model objective values."""
+    """Run ``B`` independent solve requests × ``R`` Adam restarts of
+    ``steps`` annealed iterations in **one** compiled dispatch (requests
+    vmapped over restarts vmapped over the anneal); return per-request,
+    per-restart final (x, y) plus their exact hard-model objectives."""
     loss_core = _objective_fn(loss_kind, barriers)
 
-    def build(params):
-        x = jax.nn.softmax(params["x"], axis=-1) if opt_x else x_fixed
-        y = jax.nn.softmax(params["y"], axis=-1) if opt_y else y_fixed
-        return x, y
+    def one_request(arrs_b, lx_b, ly_b, xf, yf, sc):
+        def build(params):
+            x = jax.nn.softmax(params["x"], axis=-1) if opt_x else xf
+            y = jax.nn.softmax(params["y"], axis=-1) if opt_y else yf
+            return x, y
 
-    def loss(params, tau):
-        mx, pmax = smooth_ops(tau)
-        x, y = build(params)
-        return loss_core(arrs, x, y, mx, pmax) / scale
+        def loss(params, tau):
+            mx, pmax = smooth_ops(tau)
+            x, y = build(params)
+            return loss_core(arrs_b, x, y, mx, pmax) / sc
 
-    def one_restart(lx0, ly0):
-        params = _adam_anneal(
-            loss, {"x": lx0, "y": ly0}, steps, scale, lr, tau0_frac, tau1_frac
-        )
-        x, y = build(params)
-        mx, pmax = hard_ops()
-        exact = loss_core(arrs, x, y, mx, pmax)
-        return x, y, exact
+        def one_restart(lx0, ly0):
+            params = _adam_anneal(
+                loss, {"x": lx0, "y": ly0}, steps, sc, lr, tau0_frac,
+                tau1_frac,
+            )
+            x, y = build(params)
+            mx, pmax = hard_ops()
+            exact = loss_core(arrs_b, x, y, mx, pmax)
+            return x, y, exact
 
-    return jax.vmap(one_restart)(logits_x0, logits_y0)
+        return jax.vmap(one_restart)(lx_b, ly_b)
+
+    return jax.vmap(one_request)(
+        arrs, logits_x0, logits_y0, x_fixed, y_fixed, scale
+    )
 
 
 def _initial_logits(platform: Platform, n_restarts: int, seed: int):
@@ -311,6 +417,74 @@ def _initial_logits(platform: Platform, n_restarts: int, seed: int):
     return jnp.asarray(lx), jnp.asarray(ly)
 
 
+def _run_solver_many(
+    platforms: Sequence[Platform],
+    loss_kind: str,
+    barriers,
+    opt_x: bool,
+    opt_y: bool,
+    x_fixed_list: Optional[Sequence[Optional[np.ndarray]]],
+    y_fixed_list: Optional[Sequence[Optional[np.ndarray]]],
+    n_restarts: int,
+    steps: int,
+    seeds: Sequence[int],
+) -> "list[Tuple[np.ndarray, np.ndarray, float]]":
+    """Solve ``B`` same-shape requests in one vmapped device dispatch.
+
+    Every platform must share ``(nS, nM, nR)`` (callers group by shape —
+    see :func:`optimize_plan_batch`); per-request ``D``/``alpha``/
+    capacities/seeds are free.  Returns one ``(x, y, exact)`` per request,
+    the best restart under the exact hard-max model, float64-renormalized.
+    """
+    B = len(platforms)
+    raw = [p.as_arrays() for p in platforms]
+    arrs = tuple(
+        jnp.asarray(np.stack([np.asarray(r[i], dtype=np.float64)
+                              for r in raw]), jnp.float32)
+        for i in range(6)
+    )
+    if x_fixed_list is None:
+        x_fixed_list = [None] * B
+    if y_fixed_list is None:
+        y_fixed_list = [None] * B
+    xf = np.stack([
+        uniform_plan(p).x if x is None else np.asarray(x)
+        for p, x in zip(platforms, x_fixed_list)
+    ])
+    yf = np.stack([
+        uniform_plan(p).y if y is None else np.asarray(y)
+        for p, y in zip(platforms, y_fixed_list)
+    ])
+    scales = np.array([
+        max(makespan(p, uniform_plan(p), barriers=barriers), 1e-6)
+        for p in platforms
+    ])
+    inits = [_initial_logits(p, n_restarts, s)
+             for p, s in zip(platforms, seeds)]
+    xs, ys, exact = _solve_batch_many(
+        arrs,
+        jnp.stack([lx for lx, _ in inits]),
+        jnp.stack([ly for _, ly in inits]),
+        jnp.asarray(xf, jnp.float32),
+        jnp.asarray(yf, jnp.float32),
+        jnp.asarray(scales, jnp.float32),
+        loss_kind,
+        tuple(barriers),
+        opt_x,
+        opt_y,
+        steps,
+    )
+    exact = np.asarray(exact)
+    out = []
+    for b in range(B):
+        best = int(np.argmin(exact[b]))
+        # renormalize against float32 round-off so the plan validates
+        plan = ExecutionPlan.renormalized(np.asarray(xs[b, best]),
+                                          np.asarray(ys[b, best]))
+        out.append((plan.x, plan.y, float(exact[b, best])))
+    return out
+
+
 def _run_solver(
     platform: Platform,
     loss_kind: str,
@@ -323,36 +497,12 @@ def _run_solver(
     steps: int,
     seed: int,
 ) -> Tuple[np.ndarray, np.ndarray, float]:
-    arrs = tuple(
-        jnp.asarray(a, dtype=jnp.float32) if isinstance(a, np.ndarray) else float(a)
-        for a in platform.as_arrays()
-    )
-    if x_fixed is None:
-        x_fixed = uniform_plan(platform).x
-    if y_fixed is None:
-        y_fixed = uniform_plan(platform).y
-    scale = max(
-        makespan(platform, uniform_plan(platform), barriers=barriers), 1e-6
-    )
-    lx, ly = _initial_logits(platform, n_restarts, seed)
-    xs, ys, exact = _solve_batch(
-        arrs,
-        lx,
-        ly,
-        jnp.asarray(x_fixed, jnp.float32),
-        jnp.asarray(y_fixed, jnp.float32),
-        jnp.float32(scale),
-        loss_kind,
-        tuple(barriers),
-        opt_x,
-        opt_y,
-        steps,
-    )
-    best = int(jnp.argmin(exact))
-    # renormalize against float32 round-off so the plan validates exactly
-    plan = ExecutionPlan.renormalized(np.asarray(xs[best]),
-                                      np.asarray(ys[best]))
-    return plan.x, plan.y, float(exact[best])
+    """One solve request — a batch of one through the vmapped service
+    path, so single plans and batched plans share one executable cache."""
+    return _run_solver_many(
+        [platform], loss_kind, barriers, opt_x, opt_y,
+        [x_fixed], [y_fixed], n_restarts, steps, [seed],
+    )[0]
 
 
 # ---------------------------------------------------------------------------
@@ -458,6 +608,198 @@ def optimize_plan(
         barriers=barriers,
         objective=float(obj),
     )
+
+
+# ---------------------------------------------------------------------------
+# planner-as-a-service: batched concurrent solve requests
+# ---------------------------------------------------------------------------
+
+#: built-in modes whose planner is exactly one `_run_solver` call —
+#: batchable as (loss_kind, opt_x, opt_y).  ``myopic_multi`` (two chained
+#: solves) is batched as two rounds; anything else falls back to a
+#: per-request planner loop.
+_BATCHED_SOLVES = {
+    "myopic_push": ("push", True, False),
+    "e2e_push": ("e2e", True, False),
+    "e2e_shuffle": ("e2e", False, True),
+    "e2e_multi": ("e2e", True, True),
+}
+
+
+def _plan_group(platforms, mode, barriers, n_restarts, steps, seeds,
+                fixed_xs) -> "list[Tuple[ExecutionPlan, float]]":
+    """Plan one same-shape group of requests, batching the solver
+    dispatches where the mode allows; mirrors the built-in planners'
+    construction exactly (same warm starts, seeds, and plan assembly)."""
+    if mode == "myopic_multi":
+        # locally-optimal push, then locally-optimal shuffle given that
+        # push — two batched rounds, round 2 reseeded at seed+1 like the
+        # sequential planner
+        r1 = _run_solver_many(platforms, "push", barriers, True, False,
+                              None, None, n_restarts, steps, seeds)
+        xs = [x for x, _, _ in r1]
+        r2 = _run_solver_many(platforms, "shuffle", barriers, False, True,
+                              xs, None, n_restarts, steps,
+                              [s + 1 for s in seeds])
+        return [
+            (ExecutionPlan(x=x, y=y, meta="myopic_multi"), obj)
+            for x, (_, y, obj) in zip(xs, r2)
+        ]
+    if mode in _BATCHED_SOLVES:
+        loss_kind, opt_x, opt_y = _BATCHED_SOLVES[mode]
+        xf = fixed_xs if not opt_x else [None] * len(platforms)
+        solved = _run_solver_many(platforms, loss_kind, barriers, opt_x,
+                                  opt_y, xf, None, n_restarts, steps, seeds)
+        plans = []
+        for p, fx, (x, y, obj) in zip(platforms, fixed_xs, solved):
+            if not opt_y:
+                y = uniform_plan(p).y
+            if not opt_x:
+                x = uniform_plan(p).x if fx is None else np.asarray(fx)
+            plans.append((ExecutionPlan(x=x, y=y, meta=mode), obj))
+        return plans
+    # heuristic or externally-registered mode: per-request dispatch
+    planner = get_planner(mode)
+    return [
+        planner(p, barriers, n_restarts=n_restarts, steps=steps, seed=s,
+                fixed_x=fx)
+        for p, s, fx in zip(platforms, seeds, fixed_xs)
+    ]
+
+
+def optimize_plan_batch(
+    platforms: Sequence[Platform],
+    mode: str = "e2e_multi",
+    barriers: Tuple[str, str, str] = BARRIERS_ALL_GLOBAL,
+    n_restarts: int = 24,
+    steps: int = 500,
+    seed: int = 0,
+    seeds: Optional[Sequence[int]] = None,
+    fixed_x: Optional[Sequence[Optional[np.ndarray]]] = None,
+) -> "list[PlanResult]":
+    """Plan ``N`` independent jobs in as few compiled dispatches as their
+    shapes allow — the batched front door of the solver service.
+
+    Requests are grouped by ``(nS, nM, nR)``; each same-shape group of a
+    solver-backed mode runs as **one** vmapped dispatch
+    (:func:`_solve_batch_many`), sharing a single cached executable with
+    every other same-shape solve in the process.  ``seeds`` gives one seed
+    per request (default ``seed + 17*g``, matching what the
+    ``independent`` schedule policy always used); ``fixed_x`` one pinned
+    push matrix per request for the shuffle-only modes.  Results are
+    per-request :class:`PlanResult`\\ s, identical (to float32 vmap
+    round-off) to calling :func:`optimize_plan` per request.
+    """
+    platforms = list(platforms)
+    barriers = tuple(barriers)
+    if seeds is None:
+        seeds = [seed + 17 * g for g in range(len(platforms))]
+    seeds = list(seeds)
+    if len(seeds) != len(platforms):
+        raise ValueError(
+            f"one seed per platform, got {len(seeds)} seeds for "
+            f"{len(platforms)} platforms"
+        )
+    if fixed_x is None:
+        fixed_x = [None] * len(platforms)
+    fixed_x = list(fixed_x)
+    if len(fixed_x) != len(platforms):
+        raise ValueError(
+            f"one fixed_x per platform, got {len(fixed_x)} for "
+            f"{len(platforms)} platforms"
+        )
+    get_planner(mode)  # validate the mode before any solve
+    groups: Dict[Tuple[int, int, int], list] = {}
+    for g, p in enumerate(platforms):
+        groups.setdefault((p.nS, p.nM, p.nR), []).append(g)
+    results: "list[Optional[PlanResult]]" = [None] * len(platforms)
+    for idxs in groups.values():
+        planned = _plan_group(
+            [platforms[g] for g in idxs], mode, barriers, n_restarts,
+            steps, [seeds[g] for g in idxs], [fixed_x[g] for g in idxs],
+        )
+        for g, (plan, obj) in zip(idxs, planned):
+            results[g] = PlanResult(
+                plan=plan,
+                makespan=makespan(platforms[g], plan, barriers),
+                breakdown=phase_breakdown(platforms[g], plan, barriers),
+                mode=mode,
+                barriers=barriers,
+                objective=float(obj),
+            )
+    return results  # type: ignore[return-value]
+
+
+class SolverService:
+    """Planner-as-a-service facade: batched same-shape solves, the
+    process-wide shape-keyed executable cache, and its counters.
+
+    The cache itself is module state (jit executables keyed by solver +
+    array shapes/dtypes + static config), so it survives across
+    :class:`SolverService` *and* ``GeoSchedule`` instances — a service
+    object only carries request defaults.  ``plan``/``plan_many`` route
+    through :func:`optimize_plan_batch` (same-shape requests share one
+    vmapped dispatch); ``replan_many`` through :func:`replan_batch`
+    (optionally warm-started incremental re-solves)."""
+
+    def __init__(
+        self,
+        mode: str = "e2e_multi",
+        barriers: Tuple[str, str, str] = BARRIERS_ALL_GLOBAL,
+        n_restarts: int = 24,
+        steps: int = 500,
+    ):
+        self.mode = mode
+        self.barriers = tuple(barriers)
+        self.n_restarts = int(n_restarts)
+        self.steps = int(steps)
+
+    def _defaults(self, overrides: dict) -> dict:
+        kw = dict(mode=self.mode, barriers=self.barriers,
+                  n_restarts=self.n_restarts, steps=self.steps)
+        kw.update(overrides)
+        return kw
+
+    def plan(self, platform: Platform, seed: int = 0,
+             **overrides) -> PlanResult:
+        """One request (a batch of one — still served from the shared
+        executable cache)."""
+        return self.plan_many([platform], seeds=[seed], **overrides)[0]
+
+    def plan_many(self, platforms: Sequence[Platform],
+                  seeds: Optional[Sequence[int]] = None,
+                  **overrides) -> "list[PlanResult]":
+        """N concurrent plan requests, batched per shape group."""
+        return optimize_plan_batch(
+            platforms, seeds=seeds, **self._defaults(overrides)
+        )
+
+    def replan_many(
+        self,
+        platforms: Sequence[Platform],
+        incumbents: Sequence[ExecutionPlan],
+        progresses=None,
+        seeds: Optional[Sequence[int]] = None,
+        incremental: bool = False,
+        **overrides,
+    ) -> "list[PlanResult]":
+        """N concurrent residual re-plan requests, batched per shape
+        group (see :func:`replan_batch`)."""
+        kw = self._defaults(overrides)
+        kw.pop("mode", None)
+        return replan_batch(
+            platforms, incumbents, progresses, seeds=seeds,
+            incremental=incremental, **kw,
+        )
+
+    @staticmethod
+    def stats() -> Dict[str, int]:
+        """The process-wide cache counters (:func:`solver_cache_stats`)."""
+        return solver_cache_stats()
+
+    @staticmethod
+    def reset_stats() -> None:
+        reset_solver_cache_stats()
 
 
 # ---------------------------------------------------------------------------
@@ -637,12 +979,16 @@ def optimize_schedule(
 def _independent_policy(substrate, platforms, barriers, *, mode, n_restarts,
                         steps, seed):
     """Each job planned as if it owned the whole substrate (the per-job
-    myopic baseline the paper's end-to-end argument extends across jobs)."""
-    planner = get_planner(mode)
+    myopic baseline the paper's end-to-end argument extends across jobs).
+    All jobs share one batched solver dispatch per shape group
+    (:func:`optimize_plan_batch`, default per-job seeds ``seed + 17*g``
+    — the seeds this policy always used)."""
     return [
-        planner(p, barriers, n_restarts=n_restarts, steps=steps,
-                seed=seed + 17 * g, fixed_x=None)[0]
-        for g, p in enumerate(platforms)
+        res.plan
+        for res in optimize_plan_batch(
+            platforms, mode=mode, barriers=barriers,
+            n_restarts=n_restarts, steps=steps, seed=seed,
+        )
     ]
 
 
@@ -688,8 +1034,8 @@ def _sequential_policy(substrate, platforms, barriers, *, mode, n_restarts,
 SCHEDULE_OBJECTIVES = ("makespan", "min_max_slowdown")
 
 
-@functools.partial(
-    jax.jit, static_argnames=("barriers", "steps", "kappa", "objective")
+@_counted_solver(
+    static_argnames=("barriers", "steps", "kappa", "objective")
 )
 def _solve_joint_batch(
     D_stack,  # (J, nS)
@@ -864,45 +1210,225 @@ def _joint_policy(substrate, platforms, barriers, *, mode, n_restarts, steps,
 # online re-planning: warm-started residual optimization + policy registry
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("barriers", "steps"))
-def _solve_residual_batch(
-    resid,  # 6-tuple: resid_push, committed_push, at_mapper, shuffle_pool,
-            #          committed_shuffle, at_reducer
-    caps,  # 4-tuple: B_sm, B_mr, C_m, C_r
-    alpha,
-    logits_x0,  # (R, nS, nM)
-    logits_y0,  # (R, nR)
-    scale,
+@_counted_solver(static_argnames=("barriers", "steps"))
+def _solve_residual_batch_many(
+    resid,  # 6-tuple of (B, ...) arrays: resid_push, committed_push,
+            # at_mapper, shuffle_pool, committed_shuffle, at_reducer
+    caps,  # 4-tuple of (B, ...) arrays: B_sm, B_mr, C_m, C_r
+    alpha,  # (B,)
+    logits_x0,  # (B, R, nS, nM)
+    logits_y0,  # (B, R, nR)
+    scale,  # (B,)
     barriers: Tuple[str, str, str],
     steps: int,
     lr: float = 0.08,
     tau0_frac: float = 0.3,
     tau1_frac: float = 1e-3,
 ):
-    """Anneal ``R`` restarts of the *residual* makespan — the remaining
-    work of an observed job (re-routable buckets through candidate x/y,
-    committed buckets fixed) priced by the same phase equations."""
+    """Anneal ``B`` independent jobs' *residual* makespans × ``R``
+    restarts in one compiled dispatch — the remaining work of each
+    observed job (re-routable buckets through candidate x/y, committed
+    buckets fixed) priced by the same phase equations.  Per-request
+    capacities carry each job's own dead-mapper degradation."""
 
-    def residual_span(x, y, mx, pmax):
-        V = residual_volumes(*resid, alpha, x, y, xp=jnp)
-        return volume_model(*V, *caps, barriers, mx, pmax, xp=jnp)["makespan"]
+    def one_request(resid_b, caps_b, alpha_b, lx_b, ly_b, sc):
+        def residual_span(x, y, mx, pmax):
+            V = residual_volumes(*resid_b, alpha_b, x, y, xp=jnp)
+            return volume_model(*V, *caps_b, barriers, mx, pmax,
+                                xp=jnp)["makespan"]
 
-    def loss(params, tau):
-        mx, pmax = smooth_ops(tau)
-        x = jax.nn.softmax(params["x"], axis=-1)
-        y = jax.nn.softmax(params["y"], axis=-1)
-        return residual_span(x, y, mx, pmax) / scale
+        def loss(params, tau):
+            mx, pmax = smooth_ops(tau)
+            x = jax.nn.softmax(params["x"], axis=-1)
+            y = jax.nn.softmax(params["y"], axis=-1)
+            return residual_span(x, y, mx, pmax) / sc
 
-    def one_restart(lx0, ly0):
-        params = _adam_anneal(
-            loss, {"x": lx0, "y": ly0}, steps, scale, lr, tau0_frac, tau1_frac
+        def one_restart(lx0, ly0):
+            params = _adam_anneal(
+                loss, {"x": lx0, "y": ly0}, steps, sc, lr, tau0_frac,
+                tau1_frac,
+            )
+            x = jax.nn.softmax(params["x"], axis=-1)
+            y = jax.nn.softmax(params["y"], axis=-1)
+            mx, pmax = hard_ops()
+            return x, y, residual_span(x, y, mx, pmax)
+
+        return jax.vmap(one_restart)(lx_b, ly_b)
+
+    return jax.vmap(one_request)(
+        resid, caps, alpha, logits_x0, logits_y0, scale
+    )
+
+
+def _incremental_budget(n_restarts: int, steps: int) -> Tuple[int, int]:
+    """The warm-start incremental re-solve budget: at most 4 restarts
+    (the incumbent plus jittered copies — heuristic restarts add nothing
+    when the answer is already near the incumbent) and an eighth of the
+    anneal, floored at 25 steps so Adam can still move mass."""
+    return max(min(n_restarts, 4), 1), max(steps // 8, 25)
+
+
+def _replan_logits(platform, incumbent, n_restarts, seed, incremental):
+    """Warm-start logits for one residual re-solve: the incumbent first
+    (it must compete), then — full mode — the standard heuristic+random
+    restarts, or — incremental mode — small jitters of the incumbent
+    itself (stay in its basin, polish at low temperature)."""
+    eps = 1e-9
+    lx_inc = np.log(np.asarray(incumbent.x) + eps)
+    ly_inc = np.log(np.asarray(incumbent.y) + eps)
+    if incremental:
+        rng = np.random.default_rng(seed)
+        lx, ly = [lx_inc], [ly_inc]
+        while len(lx) < n_restarts:
+            lx.append(lx_inc + rng.normal(0.0, 0.25, size=lx_inc.shape))
+            ly.append(ly_inc + rng.normal(0.0, 0.25, size=ly_inc.shape))
+        return (np.stack(lx[:n_restarts]).astype(np.float32),
+                np.stack(ly[:n_restarts]).astype(np.float32))
+    lx0, ly0 = _initial_logits(platform, max(n_restarts - 1, 1), seed)
+    lx = np.concatenate([lx_inc[None], np.asarray(lx0)])[:n_restarts]
+    ly = np.concatenate([ly_inc[None], np.asarray(ly0)])[:n_restarts]
+    return lx.astype(np.float32), ly.astype(np.float32)
+
+#: low-temperature anneal for incremental re-solves: the tau schedule
+#: starts already almost hard (the incumbent is assumed near-optimal) and
+#: the learning rate is dropped so the polish cannot jump basins.
+_INCREMENTAL_ANNEAL = dict(lr=0.05, tau0_frac=0.02, tau1_frac=1e-3)
+
+
+def _degraded_platform(platform: Platform, progress: JobProgress):
+    """``platform`` with this job's dead mappers collapsed 1000x.  A dead
+    worker is a capacity fact the drift traces cannot express: collapse
+    its compute and ingest links so the solver (and the float64
+    selection) routes the residual around it.  Not zero — softmax plans
+    keep epsilon mass everywhere and the phase equations have no usage
+    gate on push links."""
+    if progress.map_alive is None or progress.map_alive.all():
+        return platform
+    alive = progress.map_alive.astype(bool)
+    return dataclasses.replace(
+        platform,
+        C_m=np.where(alive, platform.C_m, platform.C_m * 1e-3),
+        B_sm=np.where(alive[None, :], platform.B_sm, platform.B_sm * 1e-3),
+    )
+
+
+def replan_batch(
+    platforms: Sequence[Platform],
+    incumbents: Sequence[ExecutionPlan],
+    progresses=None,
+    barriers: Tuple[str, str, str] = BARRIERS_ALL_GLOBAL,
+    n_restarts: int = 8,
+    steps: int = 200,
+    seed: int = 0,
+    seeds: Optional[Sequence[int]] = None,
+    incremental: bool = False,
+) -> "list[PlanResult]":
+    """Re-optimize ``N`` running jobs' plans against their *remaining*
+    work, solo residual pricing per job, batched into one vmapped solver
+    dispatch per shape group — the residual counterpart of
+    :func:`optimize_plan_batch` (and exactly N :func:`replan` calls,
+    minus N-1 dispatches).  ``progresses`` is one
+    :class:`~repro.core.makespan.JobProgress` (or ``None`` = fresh) per
+    job; ``seeds`` one seed per job (default: ``seed`` for all).
+
+    ``incremental=True`` swaps the full anneal for a warm-started polish:
+    at most 4 restarts (incumbent + jitters), an eighth of the steps, and
+    a low-temperature schedule (:data:`_INCREMENTAL_ANNEAL`) — the
+    cheap mode whose measured wall-clock :class:`SolveTimeEMA` feeds into
+    :func:`swap_charge`.  Every candidate is still re-priced in float64
+    and the incumbent still competes, so "never modeled-worse" holds in
+    both modes.
+    """
+    barriers = tuple(barriers)
+    platforms = list(platforms)
+    incumbents = list(incumbents)
+    if progresses is None:
+        progresses = [None] * len(platforms)
+    progresses = [
+        JobProgress.fresh(p) if pr is None else pr
+        for p, pr in zip(platforms, progresses)
+    ]
+    if not (len(platforms) == len(incumbents) == len(progresses)):
+        raise ValueError(
+            f"one incumbent+progress per platform, got {len(platforms)} "
+            f"platforms, {len(incumbents)} incumbents, "
+            f"{len(progresses)} progresses"
         )
-        x = jax.nn.softmax(params["x"], axis=-1)
-        y = jax.nn.softmax(params["y"], axis=-1)
-        mx, pmax = hard_ops()
-        return x, y, residual_span(x, y, mx, pmax)
+    if seeds is None:
+        seeds = [seed] * len(platforms)
+    seeds = list(seeds)
+    n_eff, steps_eff = (
+        _incremental_budget(n_restarts, steps) if incremental
+        else (n_restarts, steps)
+    )
+    anneal = _INCREMENTAL_ANNEAL if incremental else {}
 
-    return jax.vmap(one_restart)(logits_x0, logits_y0)
+    degraded = [
+        _degraded_platform(p, pr) for p, pr in zip(platforms, progresses)
+    ]
+    cms = [CostModel(p, barriers) for p in degraded]
+    inc_outs = [
+        cm.price_residual(pr, inc)
+        for cm, pr, inc in zip(cms, progresses, incumbents)
+    ]
+    inc_spans = [float(out["makespan"]) for out in inc_outs]
+
+    groups: Dict[Tuple[int, int, int], list] = {}
+    for g, p in enumerate(platforms):
+        groups.setdefault((p.nS, p.nM, p.nR), []).append(g)
+    results: "list[Optional[PlanResult]]" = [None] * len(platforms)
+    for idxs in groups.values():
+        logits = [
+            _replan_logits(degraded[g], incumbents[g], n_eff, seeds[g],
+                           incremental)
+            for g in idxs
+        ]
+        resid = tuple(
+            jnp.asarray(a, jnp.float32)
+            for a in JobProgress.stack([progresses[g] for g in idxs])
+        )
+        caps = tuple(
+            jnp.asarray(np.stack([
+                np.asarray(getattr(degraded[g], f), dtype=np.float64)
+                for g in idxs
+            ]), jnp.float32)
+            for f in ("B_sm", "B_mr", "C_m", "C_r")
+        )
+        xs, ys, _ = _solve_residual_batch_many(
+            resid,
+            caps,
+            jnp.asarray(np.array([progresses[g].alpha for g in idxs]),
+                        jnp.float32),
+            jnp.asarray(np.stack([lx for lx, _ in logits])),
+            jnp.asarray(np.stack([ly for _, ly in logits])),
+            jnp.asarray(np.array([max(inc_spans[g], 1e-6) for g in idxs]),
+                        jnp.float32),
+            barriers=barriers,
+            steps=steps_eff,
+            **anneal,
+        )
+        xs, ys = np.asarray(xs), np.asarray(ys)
+        for b, g in enumerate(idxs):
+            best_plan, best_span, best_out = (
+                incumbents[g], inc_spans[g], inc_outs[g]
+            )
+            for r in range(xs.shape[1]):
+                plan = ExecutionPlan.renormalized(xs[b, r], ys[b, r],
+                                                  "replan")
+                out = cms[g].price_residual(progresses[g], plan)
+                if float(out["makespan"]) < best_span:
+                    best_plan, best_span, best_out = (
+                        plan, float(out["makespan"]), out
+                    )
+            results[g] = PlanResult(
+                plan=best_plan,
+                makespan=best_span,
+                breakdown=attribute_phases(best_out),
+                mode="replan",
+                barriers=barriers,
+                objective=best_span,
+            )
+    return results  # type: ignore[return-value]
 
 
 def replan(
@@ -913,6 +1439,7 @@ def replan(
     n_restarts: int = 8,
     steps: int = 200,
     seed: int = 0,
+    incremental: bool = False,
 ) -> PlanResult:
     """Re-optimize a running job's plan against its *remaining* work.
 
@@ -927,71 +1454,21 @@ def replan(
     incumbent itself competes — so the returned plan is never modeled
     worse than keeping it, and is the *same object* when keeping it wins.
 
+    ``incremental=True`` is the cheap warm-started mode (few low-
+    temperature polish steps from the incumbent instead of a full anneal
+    — see :func:`replan_batch`); the never-modeled-worse guarantee is
+    unchanged because the float64 selection is.
+
     The returned :class:`PlanResult`'s ``makespan``/``breakdown`` are the
     modeled **remaining** seconds from the observation instant, not a
-    from-scratch makespan.
+    from-scratch makespan.  This is a batch of one through
+    :func:`replan_batch` — concurrent re-plans share one dispatch there.
     """
-    barriers = tuple(barriers)
-    if progress is None:
-        progress = JobProgress.fresh(platform)
-    if progress.map_alive is not None and not progress.map_alive.all():
-        # a dead worker is a capacity fact the drift traces cannot express:
-        # collapse its compute and ingest links 1000x so the solver (and
-        # the float64 selection) routes the residual around it.  Not zero —
-        # softmax plans keep epsilon mass everywhere and the phase
-        # equations have no usage gate on push links.
-        alive = progress.map_alive.astype(bool)
-        platform = dataclasses.replace(
-            platform,
-            C_m=np.where(alive, platform.C_m, platform.C_m * 1e-3),
-            B_sm=np.where(alive[None, :], platform.B_sm,
-                          platform.B_sm * 1e-3),
-        )
-    cm = CostModel(platform, barriers)
-    inc_out = cm.price_residual(progress, incumbent)
-    inc_span = float(inc_out["makespan"])
-
-    eps = 1e-9
-    lx0, ly0 = _initial_logits(platform, max(n_restarts - 1, 1), seed)
-    lx_inc = jnp.asarray(
-        np.log(np.asarray(incumbent.x) + eps), jnp.float32
-    )[None]
-    ly_inc = jnp.asarray(
-        np.log(np.asarray(incumbent.y) + eps), jnp.float32
-    )[None]
-    logits_x = jnp.concatenate([lx_inc, lx0])[:n_restarts]
-    logits_y = jnp.concatenate([ly_inc, ly0])[:n_restarts]
-
-    resid = tuple(
-        jnp.asarray(a, jnp.float32)
-        for a in (progress.resid_push, progress.committed_push,
-                  progress.at_mapper, progress.shuffle_pool,
-                  progress.committed_shuffle, progress.at_reducer)
-    )
-    caps = tuple(
-        jnp.asarray(a, jnp.float32)
-        for a in (platform.B_sm, platform.B_mr, platform.C_m, platform.C_r)
-    )
-    xs, ys, _ = _solve_residual_batch(
-        resid, caps, float(progress.alpha), logits_x, logits_y,
-        jnp.float32(max(inc_span, 1e-6)), barriers=barriers, steps=steps,
-    )
-
-    best_plan, best_span, best_out = incumbent, inc_span, inc_out
-    for r in range(int(xs.shape[0])):
-        plan = ExecutionPlan.renormalized(np.asarray(xs[r]),
-                                          np.asarray(ys[r]), "replan")
-        out = cm.price_residual(progress, plan)
-        if float(out["makespan"]) < best_span:
-            best_plan, best_span, best_out = plan, float(out["makespan"]), out
-    return PlanResult(
-        plan=best_plan,
-        makespan=best_span,
-        breakdown=attribute_phases(best_out),
-        mode="replan",
-        barriers=barriers,
-        objective=best_span,
-    )
+    return replan_batch(
+        [platform], [incumbent], [progress], barriers=barriers,
+        n_restarts=n_restarts, steps=steps, seed=seed,
+        incremental=incremental,
+    )[0]
 
 
 # ---------------------------------------------------------------------------
@@ -1022,7 +1499,7 @@ class ScheduleReplanResult:
         return max(self.before, default=0.0) - self.makespan
 
 
-@functools.partial(jax.jit, static_argnames=("barriers", "steps", "kappa"))
+@_counted_solver(static_argnames=("barriers", "steps", "kappa"))
 def _solve_residual_shared_batch(
     resid_stack,  # 6-tuple stacked over jobs: (J,nS) (J,nS,nM) (J,nM)
                   #                            (J,nM) (J,nM,nR) (J,nR)
@@ -1140,6 +1617,7 @@ def replan_schedule(
     n_restarts: int = 8,
     steps: int = 200,
     seed: int = 0,
+    incremental: bool = False,
 ) -> ScheduleReplanResult:
     """Co-replan **all** live jobs' residuals jointly on their shared
     substrate — the schedule-aware counterpart of :func:`replan`.
@@ -1162,6 +1640,12 @@ def replan_schedule(
     float64 and the incumbent stack competes, so the returned aggregate is
     never modeled worse than keeping every plan (and the plan *objects*
     are the incumbents when keeping wins).
+
+    ``incremental=True`` is the warm-started cheap mode (mirroring
+    :func:`replan_batch`): at most 4 restarts — the incumbent stack plus
+    jittered copies of it — an eighth of the anneal, and a
+    low-temperature schedule.  The float64 selection (and with it the
+    never-modeled-worse guarantee) is identical in both modes.
     """
     barriers = tuple(barriers)
     if hasattr(progresses, "jobs"):  # a ProgressSnapshot
@@ -1193,28 +1677,38 @@ def replan_schedule(
     J, nS, nM, nR = len(live), substrate.nS, substrate.nM, substrate.nR
     eps = 1e-9
     rng = np.random.default_rng(seed)
+    n_eff, steps_eff = (
+        _incremental_budget(n_restarts, steps) if incremental
+        else (n_restarts, steps)
+    )
+    anneal = _INCREMENTAL_ANNEAL if incremental else {}
     inc_x = np.stack([np.log(np.asarray(p.x) + eps) for p in live_inc])
     inc_y = np.stack([np.log(np.asarray(p.y) + eps) for p in live_inc])
-    lx = [inc_x, np.zeros((J, nS, nM))]
-    ly = [inc_y, np.zeros((J, nR))]
-    # anti-affinity rotations, as in the offline joint policy: bias
-    # different jobs toward different substrate entries
-    greedy_x = np.log(substrate.B_sm / substrate.B_sm.max() + eps)
-    greedy_y = np.log(substrate.C_r / substrate.C_r.max() + eps)
-    lx.append(np.stack([np.roll(greedy_x, g, axis=1) for g in range(J)]))
-    ly.append(np.stack([np.roll(greedy_y, g) for g in range(J)]))
-    while len(lx) < n_restarts:
-        sigma = rng.uniform(0.3, 3.0)
-        lx.append(rng.normal(0.0, sigma, size=(J, nS, nM)))
-        ly.append(rng.normal(0.0, sigma, size=(J, nR)))
-    logits_x = jnp.asarray(np.stack(lx[:n_restarts]), jnp.float32)
-    logits_y = jnp.asarray(np.stack(ly[:n_restarts]), jnp.float32)
+    lx = [inc_x]
+    ly = [inc_y]
+    if incremental:
+        # stay in the incumbent stack's basin: jittered copies only
+        while len(lx) < n_eff:
+            lx.append(inc_x + rng.normal(0.0, 0.25, size=inc_x.shape))
+            ly.append(inc_y + rng.normal(0.0, 0.25, size=inc_y.shape))
+    else:
+        lx.append(np.zeros((J, nS, nM)))
+        ly.append(np.zeros((J, nR)))
+        # anti-affinity rotations, as in the offline joint policy: bias
+        # different jobs toward different substrate entries
+        greedy_x = np.log(substrate.B_sm / substrate.B_sm.max() + eps)
+        greedy_y = np.log(substrate.C_r / substrate.C_r.max() + eps)
+        lx.append(np.stack([np.roll(greedy_x, g, axis=1) for g in range(J)]))
+        ly.append(np.stack([np.roll(greedy_y, g) for g in range(J)]))
+        while len(lx) < n_eff:
+            sigma = rng.uniform(0.3, 3.0)
+            lx.append(rng.normal(0.0, sigma, size=(J, nS, nM)))
+            ly.append(rng.normal(0.0, sigma, size=(J, nR)))
+    logits_x = jnp.asarray(np.stack(lx[:n_eff]), jnp.float32)
+    logits_y = jnp.asarray(np.stack(ly[:n_eff]), jnp.float32)
 
     resid_stack = tuple(
-        jnp.asarray(np.stack([getattr(pr, f) for pr in live_prog]),
-                    jnp.float32)
-        for f in ("resid_push", "committed_push", "at_mapper",
-                  "shuffle_pool", "committed_shuffle", "at_reducer")
+        jnp.asarray(a, jnp.float32) for a in JobProgress.stack(live_prog)
     )
     caps_stack = tuple(
         jnp.asarray(np.stack([caps[c] for caps in caps_list]), jnp.float32)
@@ -1234,7 +1728,7 @@ def replan_schedule(
     xs, ys, _ = _solve_residual_shared_batch(
         resid_stack, caps_stack, alpha_stack, logits_x, logits_y,
         jnp.float32(scale), kappa=float(kappa), barriers=barriers,
-        steps=steps,
+        steps=steps_eff, **anneal,
     )
 
     best_live, best_after, best_score = live_inc, before, max(before)
@@ -1268,19 +1762,31 @@ class OnlineConfig:
     each job solo through :func:`replan`.
 
     ``hysteresis`` is the replan-cost damping factor: a candidate swap is
-    charged :func:`swap_charge` (solver wall-clock estimate plus the
-    modeled data movement of re-routing its queued bytes) and fires only
-    when its modeled savings exceed ``hysteresis ×`` that charge.  ``0``
-    swaps on any modeled improvement (PR 3's behavior); ``inf`` never
-    swaps, reproducing the ``static`` policy byte-for-byte.
+    charged :func:`swap_charge` (solver wall-clock plus the modeled data
+    movement of re-routing its queued bytes) and fires only when its
+    modeled savings exceed ``hysteresis ×`` that charge.  ``0`` swaps on
+    any modeled improvement (PR 3's behavior, independent of the solver
+    cost); ``inf`` never swaps, reproducing the ``static`` policy
+    byte-for-byte (no solve is even attempted).
 
-    ``solver_cost_s`` is the charged wall-clock estimate of one re-planning
-    solve — an estimate, not a measurement, so decisions stay
-    deterministic and host-independent."""
+    ``solver_cost_s`` is the solver wall-clock the charge uses.  ``None``
+    (the default) charges the **measured** cost: a
+    :class:`SolveTimeEMA` of this run's observed solve times — cold
+    compiles excluded, quantized to half-decade buckets for stability —
+    so a cheap incremental re-solve is charged what it actually costs
+    instead of the old hardcoded 1-second guess.  A float pins the charge
+    to that estimate (deterministic and host-independent).
+
+    ``incremental=True`` re-plans in the warm-started incremental mode
+    (few low-temperature steps from the incumbent — see
+    :func:`replan_batch` / :func:`replan_schedule`) instead of a full
+    anneal; paired with measured costs, the hysteresis gate then charges
+    the *small* solve the policy actually runs."""
 
     shared: bool = False
     hysteresis: float = 0.0
-    solver_cost_s: float = 1.0
+    solver_cost_s: Optional[float] = None
+    incremental: bool = False
 
     def __post_init__(self):
         if not (self.hysteresis >= 0.0):  # rejects negatives and NaN
@@ -1288,10 +1794,68 @@ class OnlineConfig:
                 f"hysteresis must be >= 0 (inf allowed), got "
                 f"{self.hysteresis}"
             )
-        if not (self.solver_cost_s >= 0.0):
+        if self.solver_cost_s is not None \
+                and not (self.solver_cost_s >= 0.0):
             raise ValueError(
-                f"solver_cost_s must be >= 0, got {self.solver_cost_s}"
+                f"solver_cost_s must be >= 0 (or None = measured), got "
+                f"{self.solver_cost_s}"
             )
+
+
+class SolveTimeEMA:
+    """Running estimate of one re-planning solve's wall-clock seconds —
+    what :func:`swap_charge` charges as ``solver_cost_s``.
+
+    ``fixed`` pins the charge to a constant (deterministic,
+    host-independent — the pre-measurement behavior); ``None`` tracks an
+    exponential moving average of *observed* solve times.  Samples that
+    triggered a fresh XLA compile are excluded — compile cost is paid
+    once per shape, not per decision, so charging it to one unlucky swap
+    would be wrong in both directions.  The reported charge is quantized
+    to half-decade buckets (1.0, 0.32, 0.1, ...) so the hysteresis gate
+    keys off the solve's order of magnitude, not scheduler noise; before
+    the first warm sample it falls back to ``fallback`` (the historical
+    1-second estimate)."""
+
+    def __init__(self, fixed: Optional[float] = None, beta: float = 0.3,
+                 fallback: float = 1.0):
+        if fixed is not None and not (fixed >= 0.0):
+            raise ValueError(f"fixed must be >= 0 or None, got {fixed}")
+        if not (0.0 < beta <= 1.0):
+            raise ValueError(f"beta must be in (0, 1], got {beta}")
+        self.fixed = fixed
+        self.beta = float(beta)
+        self.fallback = float(fallback)
+        self.ema: Optional[float] = None
+        self.samples = 0
+        self.excluded = 0
+
+    def observe(self, seconds: float, compiled: bool = False) -> None:
+        """Fold one measured solve in; ``compiled=True`` marks a cold
+        sample (excluded from the average)."""
+        if compiled or not np.isfinite(seconds) or seconds <= 0.0:
+            self.excluded += 1
+            return
+        self.samples += 1
+        self.ema = (
+            float(seconds) if self.ema is None
+            else (1.0 - self.beta) * self.ema + self.beta * float(seconds)
+        )
+
+    def charge_s(self) -> float:
+        """The solver cost a swap is charged right now (seconds)."""
+        if self.fixed is not None:
+            return float(self.fixed)
+        if self.ema is None:
+            return self.fallback
+        return float(10.0 ** (round(np.log10(max(self.ema, 1e-9)) * 2.0)
+                              / 2.0))
+
+    def __repr__(self):
+        mode = (f"fixed={self.fixed}" if self.fixed is not None
+                else f"ema={self.ema}")
+        return (f"SolveTimeEMA({mode}, charge_s={self.charge_s():.3g}, "
+                f"samples={self.samples}, excluded={self.excluded})")
 
 
 def swap_charge(
@@ -1427,6 +1991,19 @@ def _horizon_shared_policy(kind, snapshot):
     """``horizon``'s fixed cadence with shared co-replanning and
     replan-cost hysteresis (see :data:`OnlineConfig`)."""
     return kind == "tick"
+
+
+@register_online_policy(
+    "reactive_incremental",
+    config=OnlineConfig(shared=True, hysteresis=1.0, incremental=True),
+)
+def _reactive_incremental_policy(kind, snapshot):
+    """``reactive_shared``'s triggers and shared co-replanning, but each
+    firing runs the warm-started *incremental* solve (few low-temperature
+    anneal steps from the incumbent logits) and the hysteresis gate
+    charges the measured incremental solve time — the cheap-and-frequent
+    corner of the replan-cost trade-off."""
+    return kind in ("arrival", "failure", "drift")
 
 
 # ---------------------------------------------------------------------------
@@ -1615,9 +2192,7 @@ def _stagewise_pipeline(spec, barriers, *, stage_mode, n_restarts, steps,
     )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("topo", "deps", "barriers", "steps")
-)
+@_counted_solver(static_argnames=("topo", "deps", "barriers", "steps"))
 def _solve_pipeline_batch(
     D_roots,  # (K, nS) — root stages' D (zero rows for dependent stages)
     alphas,  # (K,)

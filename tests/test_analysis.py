@@ -27,6 +27,8 @@ FILE_RULE_CASES = [
     ("f64-pricing-purity", "bad_pricing.py", "good_pricing.py"),
     ("no-bare-heappush", "bad_heappush.py", "good_heappush.py"),
     ("as-dict-json", "bad_as_dict.py", "good_as_dict.py"),
+    ("solver-compile-counters",
+     "bad_solver_counter.py", "good_solver_counter.py"),
 ]
 
 
