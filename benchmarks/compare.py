@@ -53,6 +53,7 @@ METRIC_KEYS = frozenset({
     "makespan", "simulated", "modeled",
     "plans_per_s", "p50_ms", "p99_ms",
     "warm_vs_cold_speedup", "incremental_speedup", "compiles",
+    "events_per_s", "speedup_x", "rel_err_pct",
 })
 
 #: per-scenario tolerance overrides (relative; scenarios absent here use
@@ -74,6 +75,11 @@ METRIC_DIRECTIONS = {
     "plans_per_s": "higher",
     "warm_vs_cold_speedup": "higher",
     "incremental_speedup": "higher",
+    # bench_scale: executor throughput and the vectorized-DES speedup may
+    # only fall so far; the fluid-vs-DES rel-error may only grow so far
+    "events_per_s": "higher",
+    "speedup_x": "higher",
+    "rel_err_pct": "lower",
 }
 
 #: per-metric (leaf key) tolerance overrides — these beat the scenario
@@ -88,6 +94,13 @@ METRIC_TOLERANCES = {
     "warm_vs_cold_speedup": 0.6,
     "incremental_speedup": 0.6,
     "compiles": 0.5,
+    # wall-clock-derived, so wide — with the baseline at ~13x the 0.6
+    # floor still enforces the >= 5x vectorized-DES acceptance criterion
+    "events_per_s": 0.75,
+    "speedup_x": 0.6,
+    # baseline rel-err is ~0.07%; 25x headroom keeps the gate under the
+    # documented 2% fluid-mode contract while ignoring float jitter
+    "rel_err_pct": 25.0,
 }
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),

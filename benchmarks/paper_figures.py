@@ -16,6 +16,7 @@ benchmarks.common.  Numbers to compare against the paper:
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import time
 from typing import Dict
@@ -605,4 +606,113 @@ def bench_planner() -> Dict:
     emit("bench_planner_incremental", inc_s * 1e6,
          f"full={full_s*1e3:.0f}ms;incremental={inc_s*1e3:.0f}ms;"
          f"speedup={out['throughput']['incremental_speedup']:.1f}x")
+    return out
+
+
+def bench_scale() -> Dict:
+    """Scale-wall benchmark (ROADMAP §3): the three-tier scale scenario.
+
+    Three gated measurements on the edge->region->backbone substrates of
+    :mod:`repro.core.topology`:
+
+    * **100-node tier** — the same 100-job mix executed by the scalar and
+      the vectorized DES hot path: events/sec for both, the speedup, and
+      a makespan cross-check (the two paths are bit-identical; the
+      vectorized one is gated at >= 5x by the baseline floor).
+    * **rel-error contract** — fluid-mode vs per-chunk DES makespan over
+      all 27 barrier triples at fine chunking (``rel_err_pct`` is gated
+      one-sided: it may only shrink, with headroom up to the documented
+      2% ceiling).
+    * **1000-node tier** — ~10^3 nodes x 100 jobs in fluid mode: the
+      deterministic makespan is gated; wall-clock is reported (CI
+      budget: < 60 s).
+    """
+    from repro.core.simulate import open_schedule
+    from repro.core.topology import scale_job_mix, scale_tier_substrate
+
+    # -- 100-node tier: scalar vs vectorized DES --------------------------
+    sub = scale_tier_substrate(seed=0)  # 4x12 edges + 4x8 maps + 2x6 reds
+    n_nodes = sub.nS + sub.nM + sub.nR
+    entries = scale_job_mix(
+        sub, n_jobs=100, seed=3, base_cfg=SimConfig(chunk_mb=16.0)
+    )
+
+    def run_des(vectorized: bool):
+        jobs = [
+            (p, plan, dataclasses.replace(c, vectorized=vectorized))
+            for p, plan, c in entries
+        ]
+        eng = open_schedule(jobs, substrate=sub)  # build excluded: the
+        t0 = time.perf_counter()                  # hot path is run()
+        res = eng.run()
+        wall = time.perf_counter() - t0
+        events = sum(r.n_chunks for r in res.resources.values())
+        return res, wall, events
+
+    res_s, wall_scalar, events = run_des(vectorized=False)
+    res_v, wall_vec, events_v = run_des(vectorized=True)
+    speedup = wall_scalar / wall_vec
+    ev_per_s_scalar = events / wall_scalar
+    ev_per_s_vec = events_v / wall_vec
+
+    # -- fluid-vs-DES rel-error over the 27 barrier triples ---------------
+    p = planetlab_platform(4, alpha=1.3, seed=5)
+    plan = uniform_plan(p)
+    rel_errs = {}
+    for trip in itertools.product("GLP", repeat=3):
+        b = "".join(trip)
+        des = simulate(p, plan, SimConfig(barriers=b, chunk_mb=4.0,
+                                          vectorized=True, audit=True))
+        fl = simulate(p, plan, SimConfig(barriers=b, mode="fluid",
+                                         audit=True))
+        rel_errs[b] = abs(fl.makespan - des.makespan) / des.makespan
+    rel_err_pct = 100.0 * max(rel_errs.values())
+
+    # -- 1000-node tier: fluid mode ---------------------------------------
+    sub1k = scale_tier_substrate(
+        n_regions=12, edges_per_region=40, mappers_per_region=28,
+        n_backbone=4, reducers_per_backbone=45, seed=1,
+    )
+    n_nodes_1k = sub1k.nS + sub1k.nM + sub1k.nR
+    entries_1k = scale_job_mix(
+        sub1k, n_jobs=100, seed=3, arrival_spread_s=600.0,
+        base_cfg=SimConfig(mode="fluid"),
+    )
+    eng = open_schedule(entries_1k, substrate=sub1k)
+    t0 = time.perf_counter()
+    res_1k = eng.run()
+    wall_1k = time.perf_counter() - t0
+
+    out = {
+        "des_100": {
+            "n_nodes": n_nodes,
+            "events": events,
+            "events_per_s": ev_per_s_vec,
+            "events_per_s_scalar": ev_per_s_scalar,
+            "speedup_x": speedup,
+            "makespan": res_v.makespan,
+            "matches_scalar": bool(
+                abs(res_v.makespan - res_s.makespan) < 1e-9
+            ),
+        },
+        "fluid_vs_des": {
+            "rel_err_pct": rel_err_pct,
+            "worst_triple": max(rel_errs, key=rel_errs.get),
+        },
+        "fluid_1000": {
+            "n_nodes": n_nodes_1k,
+            "n_jobs": len(entries_1k),
+            "makespan": res_1k.makespan,
+            "wall_s": wall_1k,
+        },
+    }
+    emit("scale_tier_des100", wall_vec * 1e6,
+         f"events_per_s={ev_per_s_vec:.0f};speedup={speedup:.1f}x;"
+         f"match={out['des_100']['matches_scalar']}")
+    emit("scale_tier_fluid_relerr", 0.0,
+         f"max_rel_err={rel_err_pct:.3f}%;"
+         f"worst={out['fluid_vs_des']['worst_triple']}")
+    emit("scale_tier_fluid1000", wall_1k * 1e6,
+         f"nodes={n_nodes_1k};jobs={len(entries_1k)};"
+         f"makespan={res_1k.makespan:.0f}s")
     return out

@@ -71,6 +71,11 @@ def main() -> None:
                     help="also write just the bench_planner scenario (plus "
                          "meta) as its own JSON document — the planner-"
                          "throughput artifact CI uploads")
+    ap.add_argument("--profile", action="store_true",
+                    help="run the scenarios under cProfile and write the "
+                         "top-20 cumulative functions next to --json (or "
+                         "into --out) — how the executor hot path was "
+                         "found")
     ap.add_argument("--out", default="reports")
     args = ap.parse_args()
     if args.quick:
@@ -91,6 +96,7 @@ def main() -> None:
         ("schedule_online_shared", F.schedule_online_shared),
         ("pipeline_chain", F.pipeline_chain),
         ("bench_planner", F.bench_planner),
+        ("bench_scale", F.bench_scale),
     ]
     if args.scenario:
         known = {name for name, _ in scenarios}
@@ -100,12 +106,39 @@ def main() -> None:
                      f"{sorted(known)}")
         scenarios = [(n, fn) for n, fn in scenarios if n in args.scenario]
 
+    profiler = None
+    if args.profile:
+        import cProfile
+
+        profiler = cProfile.Profile()
+
     results, wall = {}, {}
     print("name,us_per_call,derived")
     for name, fn in scenarios:
         t0 = time.perf_counter()
-        results[name] = fn()
+        if profiler is not None:
+            results[name] = profiler.runcall(fn)
+        else:
+            results[name] = fn()
         wall[name] = time.perf_counter() - t0
+
+    if profiler is not None:
+        import io
+        import pstats
+
+        buf = io.StringIO()
+        pstats.Stats(profiler, stream=buf).sort_stats(
+            "cumulative").print_stats(20)
+        profile_path = (
+            os.path.splitext(args.json)[0] + "-profile.txt"
+            if args.json else os.path.join(args.out, "profile.txt")
+        )
+        profile_dir = os.path.dirname(profile_path)
+        if profile_dir:
+            os.makedirs(profile_dir, exist_ok=True)
+        with open(profile_path, "w") as f:
+            f.write(buf.getvalue())
+        print(f"[profile] top-20 cumulative in {profile_path}")
 
     if not args.skip_roofline and os.path.isdir(
         os.path.join(args.out, "dryrun")

@@ -707,6 +707,33 @@ class ScheduleReport:
         """Resources that served chunks of more than one job."""
         return self.sim.contended()
 
+    def hotspots(
+        self,
+        utilization_above: Optional[float] = None,
+        backlog_age_above_s: Optional[float] = None,
+    ) -> Dict[str, List[str]]:
+        """Resources whose load crossed a warning threshold (utilization or
+        mean queue delay), with human-readable violations — see
+        :meth:`ScheduleSimResult.hotspots`."""
+        return self.sim.hotspots(utilization_above, backlog_age_above_s)
+
+    def as_dict(self) -> Dict[str, object]:
+        """JSON-pure report of the schedule outcome: barrier configuration,
+        policy, modeled/simulated (and, after execute(), measured)
+        makespans, the full execution accounting, and the load hotspots
+        that crossed the :class:`ResourceStats` warning thresholds."""
+        out: Dict[str, object] = {
+            "policy": str(self.policy),
+            "barriers": "".join(self.barriers),
+            "makespan_modeled": float(self.makespan_modeled),
+            "makespan_sim": float(self.makespan_sim),
+            "sim": self.sim.as_dict(),
+            "hotspots": self.hotspots(),
+        }
+        if self.jobs is not None:
+            out["makespan_measured"] = float(self.makespan_measured)
+        return out
+
     def summary(self) -> str:
         measured = (
             f" measured={self.makespan_measured:.1f}s"

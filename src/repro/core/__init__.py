@@ -10,10 +10,16 @@
 * :mod:`repro.core.simulate` — chunk-granular discrete-event executor with
   the paper's dynamic mechanisms (speculation, stealing) plus stragglers,
   failures and replication.
+* :mod:`repro.core.fluid` — flow-level executor for the scale tier
+  (``SimConfig(mode="fluid")``): continuous flows at shared service
+  rates, same steering surface as the DES.
+* :mod:`repro.core.topology` — 3-tier edge→region→backbone substrate and
+  job-mix generators for the 10²–10³-node scale tiers.
 * :mod:`repro.core.collective_plan` — the technique applied to multi-pod
   gradient aggregation.
 * :mod:`repro.core.moe_plan` — the technique applied to MoE dispatch.
 """
+from .fluid import FluidSim
 from .makespan import (
     BARRIERS_ALL_GLOBAL,
     BARRIERS_ALL_PIPELINED,
@@ -59,6 +65,7 @@ from .optimize import (
     replan_schedule,
     reset_solver_cache_stats,
     score_residual_shared,
+    solver_cache_occupancy,
     solver_cache_stats,
     swap_charge,
 )
@@ -82,6 +89,7 @@ from .simulate import (
     simulate,
     simulate_schedule,
 )
+from .topology import scale_job_mix, scale_tier_substrate
 
 __all__ = [
     "BARRIERS_ALL_GLOBAL",
@@ -90,6 +98,7 @@ __all__ = [
     "CapacityTrace",
     "CostModel",
     "ExecutionPlan",
+    "FluidSim",
     "JobProgress",
     "MODES",
     "OnlineConfig",
@@ -139,7 +148,10 @@ __all__ = [
     "replan_schedule",
     "reset_solver_cache_stats",
     "residual_volumes",
+    "scale_job_mix",
+    "scale_tier_substrate",
     "score_residual_shared",
+    "solver_cache_occupancy",
     "solver_cache_stats",
     "swap_charge",
     "shared_effective_volumes",

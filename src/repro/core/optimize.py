@@ -319,13 +319,62 @@ def _counted_solver(static_argnames: Tuple[str, ...] = ()):
     return deco
 
 
+#: entry count past which :func:`solver_cache_occupancy` raises its
+#: growth warning.  The executable cache is jit's own and has NO
+#: eviction: every distinct (kernel, shapes, statics) key compiled stays
+#: resident for the life of the process.  Paper-sized runs sit in the
+#: low tens; a scale-tier shape population past this bound usually means
+#: a caller is leaking shapes (e.g. ragged batch sizes) rather than
+#: reusing them.
+CACHE_GROWTH_WARN_ENTRIES = 256
+
+
+def _occupancy_label(key) -> str:
+    """Human-readable shape group of one cache key: the kernel name plus
+    its array-leaf shapes (statics and weak scalars don't change the
+    memory profile, so they are folded out of the label)."""
+    dims = []
+    for part in key[1:]:
+        if len(part) == 2:  # (pname, leaf_abstracts)
+            for leaf in part[1]:
+                if leaf[0] == "arr":
+                    dims.append("x".join(map(str, leaf[1])) or "()")
+    return f"{key[0]}[{';'.join(dims)}]" if dims else str(key[0])
+
+
+def solver_cache_occupancy() -> Dict[str, object]:
+    """Per-shape occupancy of the eviction-free executable cache:
+    ``entries`` (total keys), ``by_shape`` (entry count per kernel+shape
+    group — the scale tier's larger shape population made this worth
+    watching), and ``growth_warning`` (a message once ``entries``
+    crosses :data:`CACHE_GROWTH_WARN_ENTRIES`, else ``None``)."""
+    by_shape: Dict[str, int] = {}
+    for key in _SOLVER_KEYS:
+        label = _occupancy_label(key)
+        by_shape[label] = by_shape.get(label, 0) + 1
+    entries = len(_SOLVER_KEYS)
+    warning = None
+    if entries >= CACHE_GROWTH_WARN_ENTRIES:
+        warning = (
+            f"solver executable cache holds {entries} entries across "
+            f"{len(by_shape)} shape groups and never evicts — check for "
+            "shape churn (ragged batch sizes, per-call static values)"
+        )
+    return {"entries": entries, "by_shape": by_shape,
+            "growth_warning": warning}
+
+
 def solver_cache_stats() -> Dict[str, int]:
     """Cumulative solver-executable cache counters for this process:
     ``calls`` (compiled-solver invocations), ``hits``/``misses`` (against
-    the shape+static key), and ``compiles`` (true XLA compilations —
+    the shape+static key), ``compiles`` (true XLA compilations —
     a re-trace of a known key, e.g. after a donated-buffer change, counts
-    here but not as a miss)."""
-    return dict(_SOLVER_STATS)
+    here but not as a miss), plus the cache population: ``entries``
+    (distinct keys alive) and ``shapes`` (distinct kernel+shape groups —
+    see :func:`solver_cache_occupancy` for the full breakdown)."""
+    labels = {_occupancy_label(key) for key in _SOLVER_KEYS}
+    return dict(_SOLVER_STATS, entries=len(_SOLVER_KEYS),
+                shapes=len(labels))
 
 
 def reset_solver_cache_stats() -> None:

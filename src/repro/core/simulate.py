@@ -85,6 +85,13 @@ __all__ = [
 ]
 
 
+#: executor modes: chunk-granular discrete events ("event") or continuous
+#: flow-level simulation ("fluid", see :mod:`repro.core.fluid`).
+SIM_MODES = ("event", "fluid")
+
+_NEG_INF = float("-inf")
+
+
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
     chunk_mb: float = 64.0
@@ -109,6 +116,19 @@ class SimConfig:
     #: byte conservation at completion; violations land on
     #: :attr:`ScheduleSimResult.violations` (see :mod:`repro.analysis.audit`).
     audit: bool = False
+    #: executor mode: "event" (chunk-granular DES, the default) or "fluid"
+    #: (continuous flows at shared service rates — the scale-tier fast
+    #: path, see :mod:`repro.core.fluid`).  Every job of one schedule must
+    #: agree on the mode.
+    mode: str = "event"
+    #: event-mode fast path: an *unsteered* full drain computes the exact
+    #: same execution with batched per-resource service scans instead of
+    #: one Python event per chunk (bit-identical results on scenarios the
+    #: determinism auditor certifies race-free).  Dynamics (speculation,
+    #: stealing, failure, noise, replication) are rejected; steered
+    #: engines (``run_until``/``snapshot``/``swap_plan``/``inject``) fall
+    #: back to the scalar event loop.
+    vectorized: bool = False
 
     def __post_init__(self):
         object.__setattr__(self, "barriers", _check_barriers(self.barriers))
@@ -119,6 +139,10 @@ class SimConfig:
         if self.replication < 1:
             raise ValueError(
                 f"replication must be >= 1, got {self.replication}"
+            )
+        if self.mode not in SIM_MODES:
+            raise ValueError(
+                f"mode must be one of {SIM_MODES}, got {self.mode!r}"
             )
 
 
@@ -186,6 +210,14 @@ class ResourceStats:
         self.first_busy_s = min(self.first_busy_s, start)
         self.last_busy_s = max(self.last_busy_s, start + dur)
 
+    #: default load-warning thresholds (the queueing-delay warning idiom:
+    #: flag a resource before it becomes the bottleneck, not after): a
+    #: resource is a *hotspot* when its busy fraction of the horizon
+    #: exceeds ``UTILIZATION_WARN`` or the mean time a chunk spent queued
+    #: behind earlier bookings exceeds ``BACKLOG_AGE_WARN_S``.
+    UTILIZATION_WARN = 0.85
+    BACKLOG_AGE_WARN_S = 60.0
+
     def utilization(self, horizon: float) -> float:
         """Fraction of ``horizon`` this resource spent serving."""
         return self.busy_s / horizon if horizon > 0 else 0.0
@@ -194,10 +226,41 @@ class ResourceStats:
     def contended(self) -> bool:
         return len(self.jobs) > 1
 
+    @property
+    def mean_wait_s(self) -> float:
+        """Mean per-chunk queue delay (fluid mode: the backlog-age
+        integral per completed flow) — the backlog-age signal behind
+        :meth:`load_warnings`."""
+        return self.waited_s / self.n_chunks if self.n_chunks else 0.0
+
+    def load_warnings(
+        self,
+        horizon: float,
+        utilization_above: Optional[float] = None,
+        backlog_age_above_s: Optional[float] = None,
+    ) -> List[str]:
+        """Threshold violations for this resource over ``horizon`` —
+        empty when healthy.  ``None`` thresholds fall back to the class
+        defaults."""
+        u_th = self.UTILIZATION_WARN if utilization_above is None \
+            else utilization_above
+        b_th = self.BACKLOG_AGE_WARN_S if backlog_age_above_s is None \
+            else backlog_age_above_s
+        warns = []
+        util = self.utilization(horizon)
+        if util > u_th:
+            warns.append(f"utilization {util:.0%} > {u_th:.0%}")
+        if self.mean_wait_s > b_th:
+            warns.append(
+                f"mean queue delay {self.mean_wait_s:.1f}s > {b_th:.0f}s"
+            )
+        return warns
+
     def as_dict(self) -> Dict[str, float]:
         return {
             "busy_s": self.busy_s,
             "waited_s": self.waited_s,
+            "mean_wait_s": float(self.mean_wait_s),
             "volume_mb": self.volume_mb,
             "n_chunks": float(self.n_chunks),
             "n_jobs": float(len(self.jobs)),
@@ -410,6 +473,25 @@ class ScheduleSimResult:
     def contended(self) -> Dict[str, ResourceStats]:
         """Resources that served chunks of more than one job."""
         return {n: s for n, s in self.resources.items() if s.contended}
+
+    def hotspots(
+        self,
+        utilization_above: Optional[float] = None,
+        backlog_age_above_s: Optional[float] = None,
+    ) -> Dict[str, List[str]]:
+        """Resources whose load crossed a warning threshold, mapped to the
+        human-readable threshold violations — the schedule-level view of
+        :meth:`ResourceStats.load_warnings`.  ``None`` thresholds use the
+        :class:`ResourceStats` class defaults (utilization > 85%, mean
+        queue delay > 60 s); empty dict = no hotspots."""
+        out: Dict[str, List[str]] = {}
+        for name, stats in self.resources.items():
+            warns = stats.load_warnings(
+                self.makespan, utilization_above, backlog_age_above_s
+            )
+            if warns:
+                out[name] = warns
+        return out
 
     def as_dict(self) -> Dict[str, object]:
         """Stable nested form mirroring :meth:`SimResult.as_dict` one level
@@ -765,6 +847,9 @@ class _MultiSim:
         self.now = max(self.now, t)
 
     def run(self) -> ScheduleSimResult:
+        if (not self._started and self.runs
+                and all(g.cfg.vectorized for g in self.runs)):
+            return self._run_vectorized()
         self._start()
         while self._heap:
             self._dispatch()
@@ -1496,6 +1581,573 @@ class _MultiSim:
             for k in range(nR):
                 self._open_reduce_gate(g, k)
 
+    # -- vectorized frozen-plan fast path ----------------------------------
+    #
+    # ``run()`` on an engine whose jobs all set ``SimConfig(vectorized=
+    # True)`` bypasses the per-chunk heap entirely: every resource serves
+    # FIFO, so its service times follow the Lindley recursion ``start =
+    # max(prev_end, enqueue)`` and a whole queue replays in one tight scan
+    # evaluating the *same* float expressions as the scalar pump (same
+    # operand order, hence bit-identical results).  The freedom to commute
+    # events is exactly what the determinism audit certifies: on race-free
+    # scenarios any same-timestamp event reordering yields the same
+    # trajectory, and the scan only ever commutes same-timestamp events —
+    # orderings that carry semantics (seed round-robin, gated-release
+    # order, per-resource FIFO, ledger accumulation order) are replicated
+    # exactly.  Barrier gates are not counters here but closed-form times:
+    # each gate opens at the last completion/arrival that could satisfy it
+    # (the scalar engine's trigger event), max-ed with a stage-linked run's
+    # final source release (the scalar ``_recheck_gates`` sweep).  Stage
+    # DAGs process in topological strata; a geometry where a later stage
+    # would enqueue *behind* already-served work on some resource raises
+    # rather than silently mis-ordering (``run_online``-style steering
+    # likewise falls back to the scalar loop — the fast path is for
+    # frozen-plan scoring).
+
+    def _vec_serve(self, res, enq, tie, size, jobv, state, slow=None):
+        """Exact FIFO replay of one resource's whole queue.  ``enq`` /
+        ``tie`` / ``size`` / ``jobv`` (plus per-entry ``slow`` for
+        compute nodes) are parallel arrays already sorted by
+        ``(enq, tie)``.  Completion times come from the Lindley
+        recursion ``end = max(prev_end, enq) + size/rate`` evaluated as
+        numpy left folds over busy segments — ``np.add.accumulate`` is a
+        strict sequential fold, so every float lands bit-identical to
+        the scalar pump.  ``state`` carries ``(avail, last_enq)`` across
+        calls; an entry enqueued before already-served work means the
+        single-scan FIFO assumption broke (cross-stage interleaving) and
+        is a hard error."""
+        avail, last_enq = state.get(res, (0.0, _NEG_INF))
+        n = enq.shape[0]
+        if enq[0] < last_enq:
+            raise RuntimeError(
+                f"vectorized executor: out-of-order enqueue on {res.name} "
+                "(cross-stage interleaving); rerun with "
+                "SimConfig(vectorized=False)"
+            )
+        trace = res.trace
+        starts = np.empty(n)
+        ends = np.empty(n)
+        if trace is None:
+            if slow is not None:
+                durs = size / (res.rate / slow)
+            else:
+                durs = size / res.bw
+            a = avail
+            i = 0
+            while i < n:
+                e0 = enq[i]
+                s0 = a if a > e0 else e0
+                # fold the busy run from s0; the first later entry that
+                # enqueues at-or-after the running end starts a fresh
+                # (idle-gap) segment.  Blocked so a pathological
+                # all-gaps queue stays O(n).
+                hi = i + 8192
+                if hi > n:
+                    hi = n
+                seg = np.add.accumulate(
+                    np.concatenate(([s0], durs[i:hi])))[1:]
+                brk = np.flatnonzero(enq[i + 1:hi] >= seg[:-1])
+                k = i + 1 + int(brk[0]) if brk.size else hi
+                m = k - i
+                starts[i] = s0
+                if m > 1:
+                    starts[i + 1:k] = seg[:m - 1]
+                ends[i:k] = seg[:m]
+                a = float(seg[m - 1])
+                i = k
+        else:
+            # trace-modulated rate depends on each service's start time
+            # -> exact sequential replay (trace scenarios are small)
+            durs = np.empty(n)
+            a = avail
+            if slow is not None:
+                for i in range(n):
+                    e0 = enq[i]
+                    s = a if a > e0 else e0
+                    d = size[i] / (trace.at(s) / slow[i])
+                    a = s + d
+                    durs[i] = d
+                    starts[i] = s
+                    ends[i] = a
+            else:
+                for i in range(n):
+                    e0 = enq[i]
+                    s = a if a > e0 else e0
+                    d = size[i] / trace.at(s)
+                    a = s + d
+                    durs[i] = d
+                    starts[i] = s
+                    ends[i] = a
+            a = float(a)
+        st = res.stats
+        st.busy_s = float(np.add.accumulate(
+            np.concatenate(([st.busy_s], durs)))[-1])
+        st.waited_s = float(np.add.accumulate(
+            np.concatenate(([st.waited_s], starts - enq)))[-1])
+        st.volume_mb = float(np.add.accumulate(
+            np.concatenate(([st.volume_mb], size)))[-1])
+        st.n_chunks += n
+        st.jobs.update(int(v) for v in np.unique(jobv))
+        s0f = float(starts[0])
+        if s0f < st.first_busy_s:
+            st.first_busy_s = s0f
+        ef = float(ends[-1])
+        if ef > st.last_busy_s:
+            st.last_busy_s = ef
+        state[res] = (a, float(enq[-1]))
+        return ends
+
+    def _vec_check_support(self):
+        for g in self.runs:
+            c = g.cfg
+            bad = [name for name, flag in (
+                ("speculation", c.speculation),
+                ("stealing", c.stealing),
+                ("fail_mapper", c.fail_mapper is not None),
+                ("compute_noise", c.compute_noise > 0),
+                ("replication>1", c.replication != 1),
+            ) if flag]
+            if bad:
+                raise ValueError(
+                    f"vectorized executor: job {g.idx} uses "
+                    f"{'/'.join(bad)} — dynamics need the scalar event "
+                    "loop (SimConfig(vectorized=False))"
+                )
+
+    @staticmethod
+    def _vec_by_job(jobarr, nJ):
+        """Group an already time-sorted event column by job: returns
+        ``(jsort, off)`` where ``jsort[off[g]:off[g+1]]`` indexes job
+        ``g``'s events in time order (stable sort preserves it)."""
+        jsort = np.argsort(jobarr, kind="stable")
+        counts = np.bincount(jobarr, minlength=nJ)
+        off = np.concatenate(([0], np.cumsum(counts)))
+        return jsort, off
+
+    @staticmethod
+    def _vec_fold(base, arr):
+        """Exact sequential left fold ``base + arr[0] + arr[1] + ...``
+        — the order the scalar ledgers accumulate in."""
+        return float(np.add.accumulate(np.concatenate(([base], arr)))[-1])
+
+    def _run_vectorized(self) -> ScheduleSimResult:
+        self._vec_check_support()
+        runs = self.runs
+        self._started = True
+        nM, nR = self.sub.nM, self.sub.nR
+        nJ = len(runs)
+        NEG = _NEG_INF
+
+        # topological strata of the stage DAG (roots = stratum 0)
+        depth: Dict[int, int] = {}
+
+        def _depth(i: int) -> int:
+            d = depth.get(i)
+            if d is None:
+                d = 1 + max(
+                    (_depth(p) for p in runs[i].stage_deps), default=-1
+                )
+                depth[i] = d
+            return d
+
+        for i in range(nJ):
+            _depth(i)
+        waves: List[List[_JobRun]] = [
+            [] for _ in range(max(depth.values()) + 1)
+        ]
+        for i in range(nJ):
+            waves[depth[i]].append(runs[i])
+
+        root_ops = {
+            g.idx: self._push_ops(g) for g in runs if not g.stage_deps
+        }
+        for g in runs:
+            if self.stage_children.get(g.idx) and not g.stage_deps \
+                    and not root_ops[g.idx]:
+                raise ValueError(
+                    f"vectorized executor: root job {g.idx} feeds "
+                    "downstream stages but seeds no push chunks — its "
+                    "reducers never finalize and the pipeline starves; "
+                    "run with SimConfig(vectorized=False)"
+                )
+
+        # static per-job tables for the hot gathers
+        alpha_j = np.array([g.p.alpha for g in runs], dtype=np.float64)
+        slow_m = np.array(
+            [[g.slowdown("m", j) for j in range(nM)] for g in runs])
+        slow_r = np.array(
+            [[g.slowdown("r", k) for k in range(nR)] for g in runs])
+        ynz = [
+            [(k, g.plan.y[k]) for k in range(nR) if g.plan.y[k] > 0.0]
+            for g in runs
+        ]
+        fan = np.array([len(z) for z in ynz], dtype=np.int64)
+        maxf = max(int(fan.max()), 1) if nJ else 1
+        ynz_k = np.zeros((nJ, maxf), dtype=np.int64)
+        ynz_y = np.zeros((nJ, maxf))
+        for gi, z in enumerate(ynz):
+            for s, (k, yk) in enumerate(z):
+                ynz_k[gi, s] = k
+                ynz_y[gi, s] = yk
+
+        # closed-form gate trackers: last arrival / completion per
+        # (job, location) and per job — each barrier gate opens at the
+        # scalar engine's trigger event, which is exactly such a max
+        arrj = np.full((nJ, nM), NEG)
+        arr_any = np.full(nJ, NEG)
+        compj = np.full((nJ, nM), NEG)
+        comp_any = np.full(nJ, NEG)
+        sarrk = np.full((nJ, nR), NEG)
+        sarr_any = np.full(nJ, NEG)
+        redk = np.full((nJ, nR), NEG)
+        rel = np.full(nJ, NEG)
+
+        state: Dict[object, Tuple[float, float]] = {}
+        #: child idx -> [(t_finalize, parent idx, reducer k, landed MB)]
+        child_contrib: Dict[int, List[Tuple[float, int, int, float]]] = {}
+        t_max = 0.0
+        gen = 0
+
+        for wave in waves:
+            # ---- push streams: root seeds + stage-source releases --------
+            link_ents: Dict[Tuple[int, int], list] = {}
+            roots = [g for g in wave if not g.stage_deps]
+            for start in sorted({g.cfg.start_time for g in roots}):
+                group = [(g, root_ops[g.idx])
+                         for g in roots if g.cfg.start_time == start]
+                for g, _ in group:
+                    g.seeded = True
+                r = 0
+                live = True
+                while live:  # round-robin, exactly like _ev_seed_jobs
+                    live = False
+                    for g, ops in group:
+                        if r < len(ops):
+                            live = True
+                            i, j, size = ops[r]
+                            g.total_map_chunks += 1
+                            g.pushed_mb += size
+                            link_ents.setdefault((i, j), []).append(
+                                (start, gen, float(size), g.idx))
+                            gen += 1
+                    r += 1
+
+            rels: List[Tuple[float, int, int]] = []
+            for g in wave:
+                if not g.stage_deps:
+                    continue
+                for t_fin, p, k, mb in sorted(
+                        child_contrib.pop(g.idx, [])):
+                    g.dep_landed[k] += mb
+                    waiting = g.dep_pending.get(k)
+                    if waiting is None or p not in waiting:
+                        continue
+                    waiting.discard(p)
+                    if not waiting:
+                        del g.dep_pending[k]
+                        rels.append((t_fin, g.idx, k))
+                if g.dep_pending:
+                    raise RuntimeError(
+                        f"vectorized executor: stage job {g.idx} never "
+                        "fully releases (an upstream reducer deadlocked); "
+                        "rerun with SimConfig(vectorized=False)"
+                    )
+            rels.sort()
+            for rel_t, gi, k in rels:
+                g = runs[gi]
+                g.seeded = True
+                if rel_t > rel[gi]:
+                    rel[gi] = rel_t
+                amount = float(g.dep_landed[k])
+                if amount <= 1e-9:
+                    continue
+                cfg = g.cfg
+                xrow = g.plan.x[k]
+                for j in range(nM):
+                    share = amount * xrow[j]
+                    if share <= 1e-9:
+                        continue
+                    n_chunks = max(int(np.ceil(share / cfg.chunk_mb)), 1)
+                    sz = share / n_chunks
+                    fsz = float(sz)
+                    for _ in range(n_chunks):
+                        g.total_map_chunks += 1
+                        g.pushed_mb += sz
+                        link_ents.setdefault((k, j), []).append(
+                            (rel_t, gen, fsz, gi))
+                        gen += 1
+
+            # ---- serve push links; arrivals in global event order --------
+            cols = ([], [], [], [], [])  # end, tie, size, job, dest
+            push_links = self.push_links
+            for (i, j), ents in sorted(link_ents.items()):
+                raw = list(zip(*ents))
+                enq = np.asarray(raw[0], dtype=np.float64)
+                tie = np.asarray(raw[1], dtype=np.int64)
+                sz = np.asarray(raw[2], dtype=np.float64)
+                jb = np.asarray(raw[3], dtype=np.int64)
+                o = np.lexsort((tie, enq))
+                enq, tie, sz, jb = enq[o], tie[o], sz[o], jb[o]
+                ends = self._vec_serve(
+                    push_links[i][j], enq, tie, sz, jb, state)
+                cols[0].append(ends)
+                cols[1].append(tie)
+                cols[2].append(sz)
+                cols[3].append(jb)
+                cols[4].append(np.full(ends.shape[0], j, dtype=np.int64))
+
+            n_arr = 0
+            if cols[0]:
+                at, atie, asz, ajob, adst = map(np.concatenate, cols)
+                o = np.lexsort((atie, at))
+                at, atie, asz = at[o], atie[o], asz[o]
+                ajob, adst = ajob[o], adst[o]
+                n_arr = at.shape[0]
+            if n_arr:
+                t_max = max(t_max, float(at[-1]))
+                # last write wins on duplicate indices and the arrays are
+                # time-sorted, so plain fancy assignment IS the running
+                # "latest arrival" ledger
+                arrj[ajob, adst] = at
+                arr_any[ajob] = at
+                jsort, off = self._vec_by_job(ajob, nJ)
+                aready = at.copy()
+                for g in wave:
+                    gi = g.idx
+                    sel = jsort[off[gi]:off[gi + 1]]
+                    if not sel.shape[0]:
+                        continue
+                    m = float(at[sel[-1]])
+                    if m > g.push_end:
+                        g.push_end = m
+                    g.landed_mb = self._vec_fold(g.landed_mb, asz[sel])
+                    b0 = g.cfg.barriers[0]
+                    if b0 == "P":
+                        continue
+                    rv = arrj[gi, adst[sel]] if b0 == "L" else arr_any[gi]
+                    aready[sel] = np.maximum(rv, rel[gi])
+
+                # gated chunks flush to the node queue in *arrival*
+                # order, so the tie key is the position in the
+                # time-sorted arrival stream
+                seqv = np.arange(n_arr, dtype=np.int64)
+                morder = np.lexsort((seqv, aready, adst))
+                noff = np.concatenate(
+                    ([0], np.cumsum(np.bincount(adst, minlength=nM))))
+                cols = ([], [], [], [], [])
+                mappers = self.mappers
+                for j in range(nM):
+                    sel = morder[noff[j]:noff[j + 1]]
+                    if not sel.shape[0]:
+                        continue
+                    jb = ajob[sel]
+                    ends = self._vec_serve(
+                        mappers[j], aready[sel], seqv[sel], asz[sel], jb,
+                        state, slow=slow_m[jb, j])
+                    cols[0].append(ends)
+                    cols[1].append(seqv[sel])
+                    cols[2].append(asz[sel])
+                    cols[3].append(jb)
+                    cols[4].append(
+                        np.full(ends.shape[0], j, dtype=np.int64))
+                ct, ctie, csz, cjob, cdst = map(np.concatenate, cols)
+                o = np.lexsort((ctie, ct))
+                ct, ctie, csz = ct[o], ctie[o], csz[o]
+                cjob, cdst = cjob[o], cdst[o]
+                n_comp = ct.shape[0]
+
+                t_max = max(t_max, float(ct[-1]))
+                compj[cjob, cdst] = ct
+                comp_any[cjob] = ct
+                jsort, off = self._vec_by_job(cjob, nJ)
+                cready = ct.copy()
+                for g in wave:
+                    gi = g.idx
+                    sel = jsort[off[gi]:off[gi + 1]]
+                    if not sel.shape[0]:
+                        continue
+                    m = float(ct[sel[-1]])
+                    if m > g.map_end:
+                        g.map_end = m
+                    g.mapped_mb = self._vec_fold(g.mapped_mb, csz[sel])
+                    b1 = g.cfg.barriers[1]
+                    if b1 == "P":
+                        continue
+                    rv = compj[gi, cdst[sel]] if b1 == "L" \
+                        else comp_any[gi]
+                    cready[sel] = np.maximum(rv, rel[gi])
+            else:
+                n_comp = 0
+
+            # ---- shuffle emissions: completion-major, reducer-minor,
+            # exactly _emit_shuffle's creation order ----------------------
+            n_em = 0
+            if n_comp:
+                counts = fan[cjob]
+                tot = int(counts.sum())
+                if tot:
+                    off_e = np.concatenate(([0], np.cumsum(counts)))
+                    repi = np.repeat(np.arange(n_comp), counts)
+                    slot = np.arange(tot, dtype=np.int64) - off_e[repi]
+                    ejob = cjob[repi]
+                    ek = ynz_k[ejob, slot]
+                    a_s = alpha_j[ejob] * csz[repi]
+                    amt = a_s * ynz_y[ejob, slot]
+                    keep = amt > 1e-9
+                    eenq = cready[repi][keep]
+                    ejob, ek, amt = ejob[keep], ek[keep], amt[keep]
+                    ejv = cdst[repi][keep]
+                    n_em = amt.shape[0]
+            if n_em:
+                etie = gen + np.arange(n_em, dtype=np.int64)
+                gen += n_em
+                jsort, off = self._vec_by_job(ejob, nJ)
+                for g in wave:
+                    sel = jsort[off[g.idx]:off[g.idx + 1]]
+                    if sel.shape[0]:
+                        g.shuf_created_mb = self._vec_fold(
+                            g.shuf_created_mb, amt[sel])
+
+                # ---- serve shuffle links ---------------------------------
+                lkey = ejv * nR + ek
+                lorder = np.lexsort((etie, eenq, lkey))
+                lcounts = np.bincount(lkey, minlength=nM * nR)
+                loff = np.concatenate(([0], np.cumsum(lcounts)))
+                cols = ([], [], [], [], [])
+                shuf_links = self.shuf_links
+                for key in np.flatnonzero(lcounts):
+                    j, k = divmod(int(key), nR)
+                    sel = lorder[loff[key]:loff[key + 1]]
+                    ends = self._vec_serve(
+                        shuf_links[j][k], eenq[sel], etie[sel], amt[sel],
+                        ejob[sel], state)
+                    cols[0].append(ends)
+                    cols[1].append(etie[sel])
+                    cols[2].append(amt[sel])
+                    cols[3].append(ejob[sel])
+                    cols[4].append(
+                        np.full(ends.shape[0], k, dtype=np.int64))
+                st_, stie, samt, sjob, sk = map(np.concatenate, cols)
+                o = np.lexsort((stie, st_))
+                st_, stie, samt = st_[o], stie[o], samt[o]
+                sjob, sk = sjob[o], sk[o]
+                n_sarr = st_.shape[0]
+
+                t_max = max(t_max, float(st_[-1]))
+                sarrk[sjob, sk] = st_
+                sarr_any[sjob] = st_
+                jsort, off = self._vec_by_job(sjob, nJ)
+                sready = st_.copy()
+                drop = np.zeros(n_sarr, dtype=bool)
+                for g in wave:
+                    gi = g.idx
+                    sel = jsort[off[gi]:off[gi + 1]]
+                    if not sel.shape[0]:
+                        continue
+                    m = float(st_[sel[-1]])
+                    if m > g.shuffle_end:
+                        g.shuffle_end = m
+                    g.shuf_landed_mb = self._vec_fold(
+                        g.shuf_landed_mb, samt[sel])
+                    b2 = g.cfg.barriers[2]
+                    if b2 == "P":
+                        continue
+                    rv = sarrk[gi, sk[sel]] if b2 == "L" \
+                        else sarr_any[gi]
+                    rv = np.maximum(rv, rel[gi])
+                    sready[sel] = rv
+                    # the gate's trigger arrival fired while map work was
+                    # still outstanding and nothing re-checks it: the
+                    # scalar engine leaves these chunks gated forever, so
+                    # we drop them identically
+                    drop[sel] = rv < comp_any[gi]
+
+                keep = ~drop
+                seqr = np.arange(n_sarr, dtype=np.int64)[keep]
+                sready, samt = sready[keep], samt[keep]
+                sjob, sk = sjob[keep], sk[keep]
+
+                cols = ([], [], [], [], [])
+                if sready.shape[0]:
+                    korder = np.lexsort((seqr, sready, sk))
+                    koff = np.concatenate(
+                        ([0], np.cumsum(np.bincount(sk, minlength=nR))))
+                    reducers = self.reducers
+                    for k in range(nR):
+                        sel = korder[koff[k]:koff[k + 1]]
+                        if not sel.shape[0]:
+                            continue
+                        jb = sjob[sel]
+                        ends = self._vec_serve(
+                            reducers[k], sready[sel], seqr[sel],
+                            samt[sel], jb, state, slow=slow_r[jb, k])
+                        cols[0].append(ends)
+                        cols[1].append(seqr[sel])
+                        cols[2].append(samt[sel])
+                        cols[3].append(jb)
+                        cols[4].append(
+                            np.full(ends.shape[0], k, dtype=np.int64))
+                if cols[0]:
+                    rt, rtie, ramt, rjob, rk = map(np.concatenate, cols)
+                    o = np.lexsort((rtie, rt))
+                    rt, ramt = rt[o], ramt[o]
+                    rjob, rk = rjob[o], rk[o]
+
+                    t_max = max(t_max, float(rt[-1]))
+                    redk[rjob, rk] = rt
+                    jsort, off = self._vec_by_job(rjob, nJ)
+                    for g in wave:
+                        gi = g.idx
+                        sel = jsort[off[gi]:off[gi + 1]]
+                        if not sel.shape[0]:
+                            continue
+                        m = float(rt[sel[-1]])
+                        if m > g.reduce_end:
+                            g.reduce_end = m
+                        g.reduced_mb = self._vec_fold(
+                            g.reduced_mb, ramt[sel])
+                        kv = rk[sel]
+                        for k in np.unique(kv):
+                            ks = sel[kv == k]
+                            g.delivered_out[k] = self._vec_fold(
+                                float(g.delivered_out[k]), ramt[ks])
+
+            # ---- finalize stage parents: reducer k's output is complete
+            # at max(last global map completion, last reduce at k) — the
+            # first event where _maybe_finalize_stage sees it closed ------
+            for g in wave:
+                children = self.stage_children.get(g.idx)
+                if not children:
+                    continue
+                gi = g.idx
+                anchor = comp_any[gi]
+                if anchor == NEG:
+                    anchor = rel[gi]
+                if anchor == NEG:
+                    raise RuntimeError(
+                        f"vectorized executor: stage parent {gi} produced "
+                        "no anchor event; rerun with "
+                        "SimConfig(vectorized=False)"
+                    )
+                anchor = float(anchor)
+                for k in range(nR):
+                    t_fin = anchor
+                    lr = float(redk[gi, k])
+                    if lr > t_fin:
+                        t_fin = lr
+                    g.reducer_final[k] = True
+                    mb = float(g.delivered_out[k])
+                    for c in children:
+                        child = runs[c]
+                        child_contrib.setdefault(c, []).append(
+                            (t_fin, gi, k, child.stage_scale[gi] * mb))
+                    t_max = max(t_max, t_fin)
+
+        self.now = max(self.now, t_max)
+        if self._audit:
+            self._audit_final()
+        return self.result()
+
 
 # ---------------------------------------------------------------------------
 # entry points
@@ -1543,6 +2195,20 @@ def open_schedule(
                 f"platform {platform.name!r} is not a view of substrate "
                 f"{sub.name!r} — build job platforms with Substrate.view()"
             )
+    modes = {cfg.mode for _, _, cfg in entries}
+    if "fluid" in modes:
+        if modes != {"fluid"}:
+            raise ValueError(
+                "every job of one schedule must agree on SimConfig.mode — "
+                f"got {sorted(modes)}"
+            )
+        if stage_links:
+            raise ValueError(
+                "fluid mode does not support pipeline stage links — use "
+                'SimConfig(mode="event")'
+            )
+        from .fluid import FluidSim
+        return FluidSim(sub, entries)
     runs = [
         _JobRun(idx, platform, plan, cfg, sub.nM, sub.nR)
         for idx, (platform, plan, cfg) in enumerate(entries)

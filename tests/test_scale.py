@@ -1,0 +1,264 @@
+"""Tests for the scale tier: the 3-tier substrate/job-mix generators, the
+vectorized DES fast path (byte-identity under permuted tie-breaks), the
+fluid executor's accuracy contract vs the DES, its refusal surface, and
+the load-hotspot reporting that rides along."""
+import dataclasses
+import itertools
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis.audit import patch_tiebreak
+from repro.core.fluid import FluidSim
+from repro.core.plan import uniform_plan
+from repro.core.platform import planetlab_platform
+from repro.core.simulate import SimConfig, open_schedule, simulate_schedule
+from repro.core.topology import scale_job_mix, scale_tier_substrate
+
+#: fluid-mode accuracy contract (documented in README / fluid.py): schedule
+#: makespan relative error vs the chunk-granular DES.
+FLUID_REL_TOL = 0.02
+
+
+def _small_tier(seed=7):
+    return scale_tier_substrate(
+        n_regions=2, edges_per_region=6, mappers_per_region=4,
+        n_backbone=1, reducers_per_backbone=4, seed=seed,
+    )
+
+
+def _result_key(res):
+    """Canonical byte-comparison form of a schedule result."""
+    return json.dumps(res.as_dict(), sort_keys=True)
+
+
+class TestGenerators:
+    def test_substrate_deterministic_by_seed(self):
+        a, b = _small_tier(seed=7), _small_tier(seed=7)
+        for field in ("B_sm", "B_mr", "C_m", "C_r"):
+            np.testing.assert_array_equal(getattr(a, field),
+                                          getattr(b, field))
+        c = _small_tier(seed=8)
+        assert not np.array_equal(a.B_sm, c.B_sm)
+
+    def test_job_mix_deterministic_by_seed(self):
+        sub = _small_tier()
+        mix = lambda s: scale_job_mix(sub, n_jobs=5, seed=s,
+                                      arrival_spread_s=50.0)
+        for (pa, xa, ca), (pb, xb, cb) in zip(mix(3), mix(3)):
+            np.testing.assert_array_equal(pa.D, pb.D)
+            np.testing.assert_array_equal(xa.x, xb.x)
+            np.testing.assert_array_equal(xa.y, xb.y)
+            assert ca == cb
+        other = mix(4)
+        assert any(
+            not np.array_equal(a[0].D, b[0].D)
+            for a, b in zip(mix(3), other)
+        )
+
+    def test_job_mix_respects_base_cfg(self):
+        sub = _small_tier()
+        entries = scale_job_mix(
+            sub, n_jobs=3, seed=0, base_cfg=SimConfig(mode="fluid")
+        )
+        assert all(cfg.mode == "fluid" for _, _, cfg in entries)
+
+
+class TestVectorizedIdentity:
+    """The vectorized DES must be byte-identical to the scalar event loop —
+    including under permuted same-timestamp tie-breaks, which certifies
+    the scenario (and hence the identity) as race-free."""
+
+    @pytest.fixture(scope="class")
+    def entries(self):
+        sub = _small_tier()
+        return sub, scale_job_mix(
+            sub, n_jobs=6, seed=11, arrival_spread_s=40.0,
+            base_cfg=SimConfig(chunk_mb=32.0, audit=True),
+        )
+
+    def _run(self, sub, entries, vectorized, rng=None):
+        jobs = [(p, pl, dataclasses.replace(c, vectorized=vectorized))
+                for p, pl, c in entries]
+        eng = open_schedule(jobs, substrate=sub)
+        if rng is not None:
+            patch_tiebreak(eng, rng)
+        return eng.run()
+
+    def test_byte_identical_under_permuted_tiebreaks(self, entries):
+        sub, jobs = entries
+        vec = self._run(sub, jobs, vectorized=True)
+        assert vec.violations == []
+        ref = _result_key(self._run(sub, jobs, vectorized=False))
+        assert _result_key(vec) == ref
+        for seed in range(5):
+            permuted = self._run(
+                sub, jobs, vectorized=False,
+                rng=np.random.default_rng(seed),
+            )
+            assert _result_key(permuted) == ref, f"tie-break seed {seed}"
+
+
+class TestFluidAccuracy:
+    """SimConfig(mode="fluid") reproduces the DES schedule makespan to
+    within the documented tolerance, with the conservation auditor green
+    on both sides."""
+
+    @pytest.fixture(scope="class")
+    def platform(self):
+        return planetlab_platform(4, alpha=1.3, seed=5)
+
+    @pytest.mark.parametrize(
+        "barriers",
+        ["".join(t) for t in itertools.product("GLP", repeat=3)],
+    )
+    def test_single_job_all_27_triples(self, platform, barriers):
+        plan = uniform_plan(platform)
+        des = simulate_schedule([(platform, plan, SimConfig(
+            barriers=barriers, chunk_mb=4.0, vectorized=True, audit=True))])
+        fluid = simulate_schedule([(platform, plan, SimConfig(
+            barriers=barriers, mode="fluid", audit=True))])
+        assert des.violations == [] and fluid.violations == []
+        rel = abs(fluid.makespan - des.makespan) / des.makespan
+        assert rel <= FLUID_REL_TOL, f"{barriers}: rel error {rel:.4f}"
+
+    @pytest.mark.parametrize("barriers", ["GGL", "PPP", "LLP"])
+    def test_contended_two_job_schedule(self, platform, barriers):
+        """Two jobs contending for the same links with staggered releases:
+        the *schedule* makespan contract holds (per-job times of the
+        shadowed job are not part of the fluid contract)."""
+        plan = uniform_plan(platform)
+        cfg_e = SimConfig(barriers=barriers, chunk_mb=4.0,
+                          vectorized=True, audit=True)
+        des = simulate_schedule([
+            (platform, plan, cfg_e),
+            (platform, plan, dataclasses.replace(cfg_e, start_time=30.0,
+                                                 chunk_mb=3.0)),
+        ])
+        cfg_f = SimConfig(barriers=barriers, mode="fluid", audit=True)
+        fluid = simulate_schedule([
+            (platform, plan, cfg_f),
+            (platform, plan, dataclasses.replace(cfg_f, start_time=30.0)),
+        ])
+        assert des.violations == [] and fluid.violations == []
+        rel = abs(fluid.makespan - des.makespan) / des.makespan
+        assert rel <= FLUID_REL_TOL
+
+    def test_scale_mix_fluid_runs(self):
+        """The generated mix drains in fluid mode, deterministically."""
+        sub = _small_tier()
+        entries = scale_job_mix(sub, n_jobs=8, seed=2,
+                                arrival_spread_s=60.0,
+                                base_cfg=SimConfig(mode="fluid", audit=True))
+        a = simulate_schedule(entries, substrate=sub)
+        b = simulate_schedule(entries, substrate=sub)
+        assert a.violations == []
+        assert a.makespan == b.makespan
+        assert _result_key(a) == _result_key(b)
+
+
+class TestFluidRefusals:
+    """Fluid mode refuses chunk-granular semantics loudly instead of
+    silently approximating them."""
+
+    @pytest.fixture(scope="class")
+    def job(self):
+        p = planetlab_platform(2, alpha=1.0, seed=0)
+        return p, uniform_plan(p)
+
+    def test_mixed_modes_rejected(self, job):
+        p, plan = job
+        with pytest.raises(ValueError, match="agree on SimConfig.mode"):
+            open_schedule([
+                (p, plan, SimConfig(mode="fluid")),
+                (p, plan, SimConfig(mode="event")),
+            ])
+
+    def test_stage_links_rejected(self, job):
+        p, plan = job
+        with pytest.raises(ValueError, match="stage links"):
+            open_schedule(
+                [(p, plan, SimConfig(mode="fluid")),
+                 (p, plan, SimConfig(mode="fluid"))],
+                stage_links={1: [(0, 1.0)]},
+            )
+
+    @pytest.mark.parametrize("kwargs,match", [
+        (dict(speculation=True), "speculation"),
+        (dict(stealing=True), "stealing"),
+        (dict(fail_mapper=(0, 10.0)), "fail_mapper"),
+        (dict(compute_noise=0.3), "compute_noise"),
+        (dict(replication=2), "replication"),
+    ])
+    def test_dynamics_rejected(self, job, kwargs, match):
+        p, plan = job
+        with pytest.raises(ValueError, match=match):
+            open_schedule([(p, plan, SimConfig(mode="fluid", **kwargs))])
+
+    def test_event_cfg_rejected_on_inject(self, job):
+        p, plan = job
+        eng = open_schedule([(p, plan, SimConfig(mode="fluid"))])
+        assert isinstance(eng, FluidSim)
+        with pytest.raises(ValueError, match='mode="fluid"'):
+            eng.inject([(p, plan, SimConfig(mode="event"))])
+
+
+class TestFluidSteering:
+    """The fluid engine exposes the same steering surface as the DES."""
+
+    def test_run_until_snapshot_inject(self):
+        sub = _small_tier()
+        entries = scale_job_mix(sub, n_jobs=4, seed=5,
+                                base_cfg=SimConfig(mode="fluid"))
+        eng = open_schedule(entries, substrate=sub)
+        eng.run_until(20.0)
+        snap = eng.snapshot()
+        assert snap.time == pytest.approx(20.0)
+        assert any(jp.remaining_mb()["reduce"] > 0 for jp in snap.jobs)
+        late = scale_job_mix(sub, n_jobs=1, seed=9,
+                             base_cfg=SimConfig(mode="fluid",
+                                                start_time=25.0))
+        eng.inject(late)
+        res = eng.run()
+        assert eng.finished
+        assert len(res.jobs) == 5
+        # steered drain agrees with the unsteered one on the original jobs
+        plain = simulate_schedule(entries + late, substrate=sub)
+        assert res.makespan == pytest.approx(plain.makespan, rel=1e-9)
+
+    def test_swap_plan_conserves(self):
+        sub = _small_tier()
+        entries = scale_job_mix(sub, n_jobs=2, seed=1,
+                                base_cfg=SimConfig(mode="fluid", audit=True))
+        eng = open_schedule(entries, substrate=sub)
+        eng.run_until(15.0)
+        p0, plan0, _ = entries[0]
+        eng.swap_plan(0, uniform_plan(p0))
+        res = eng.run()
+        assert res.violations == []
+        assert res.makespan > 0
+
+
+class TestHotspots:
+    """ResourceStats load warnings surface through ScheduleSimResult
+    .hotspots() in both executor modes."""
+
+    def test_thresholds_and_accessor(self):
+        sub = _small_tier()
+        entries = scale_job_mix(sub, n_jobs=4, seed=5,
+                                base_cfg=SimConfig(mode="fluid"))
+        res = simulate_schedule(entries, substrate=sub)
+        # impossible thresholds -> clean; trivial thresholds -> every
+        # served resource flagged with a readable reason
+        assert res.hotspots(utilization_above=2.0,
+                            backlog_age_above_s=1e12) == {}
+        hot = res.hotspots(utilization_above=0.0, backlog_age_above_s=0.0)
+        assert set(hot) <= set(res.resources)
+        assert all(
+            any("utilization" in w or "queue delay" in w for w in warns)
+            for warns in hot.values()
+        )
+        name, stats = next(iter(res.resources.items()))
+        assert stats.mean_wait_s >= 0.0
+        assert stats.as_dict()["mean_wait_s"] == stats.mean_wait_s

@@ -111,7 +111,8 @@ class TestSolverCache:
         opts = dict(n_restarts=3, steps=53)
         optimize_plan(_platform(2, seed=0), "e2e_multi", seed=1, **opts)
         reset_solver_cache_stats()
-        assert _snap() == {"calls": 0, "hits": 0, "misses": 0, "compiles": 0}
+        assert _snap() == {"calls": 0, "hits": 0, "misses": 0,
+                           "compiles": 0, "entries": 0, "shapes": 0}
         # the key set was cleared too (a repeat is a "miss" again), but the
         # jit executable survives: no new compile
         optimize_plan(_platform(2, seed=0), "e2e_multi", seed=1, **opts)
