@@ -54,6 +54,7 @@ METRIC_KEYS = frozenset({
     "plans_per_s", "p50_ms", "p99_ms",
     "warm_vs_cold_speedup", "incremental_speedup", "compiles",
     "events_per_s", "speedup_x", "rel_err_pct",
+    "failover_margin",
 })
 
 #: per-scenario tolerance overrides (relative; scenarios absent here use
@@ -80,6 +81,9 @@ METRIC_DIRECTIONS = {
     "events_per_s": "higher",
     "speedup_x": "higher",
     "rel_err_pct": "lower",
+    # schedule_failover: the recovery win over the frozen plan may only
+    # shrink so far — the acceptance floor is >= 20% margin
+    "failover_margin": "higher",
 }
 
 #: per-metric (leaf key) tolerance overrides — these beat the scenario
@@ -101,6 +105,9 @@ METRIC_TOLERANCES = {
     # baseline rel-err is ~0.07%; 25x headroom keeps the gate under the
     # documented 2% fluid-mode contract while ignoring float jitter
     "rel_err_pct": 25.0,
+    # deterministic simulated margin (~0.5 at baseline): 0.6 headroom
+    # floors it at ~0.2 — the >= 20% failover acceptance criterion
+    "failover_margin": 0.6,
 }
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),

@@ -35,7 +35,9 @@ from repro.core.optimize import (
     solver_cache_stats,
 )
 from repro.core.plan import local_push_plan, uniform_plan
-from repro.core.platform import CapacityTrace, Substrate, planetlab_platform
+from repro.core.platform import (
+    CapacityTrace, FailureEvent, Substrate, planetlab_platform,
+)
 from repro.core.simulate import SimConfig, simulate, simulate_schedule
 from repro.mapreduce.apps import (
     generate_documents, generate_logs, inverted_index, sessionization,
@@ -519,6 +521,106 @@ def schedule_online_shared() -> Dict:
     emit("schedule_online_shared_vs_solo", 0.0, f"reduction={gap_solo:.0%}")
     out["shared_vs_frozen_joint_reduction"] = gap_frozen
     out["shared_vs_solo_reduction"] = gap_solo
+    return out
+
+
+def failover_substrate(failures=()) -> Substrate:
+    """The ``schedule_failover`` fabric: two clusters (A: s0/s1, m0/m1,
+    r0/r1 — B: s2, m2, r2) with a fast wide-area shuffle path into B's big
+    reducer r2 (500 MB/s compute) that the joint plan leans on.  The fault
+    sequence kills r1 mid-shuffle and then partitions cluster B with a
+    late repair — severing exactly the path the plan concentrated on."""
+    sub = Substrate(
+        B_sm=np.array([
+            [200.0, 200.0, 1.0],
+            [200.0, 200.0, 1.0],
+            [1.0, 1.0, 200.0],
+        ]),
+        B_mr=np.array([
+            [200.0, 200.0, 150.0],
+            [200.0, 200.0, 150.0],
+            [2.0, 2.0, 200.0],
+        ]),
+        C_m=np.array([100.0, 100.0, 100.0]),
+        C_r=np.array([100.0, 40.0, 500.0]),
+        cluster_s=np.array([0, 0, 1]),
+        cluster_m=np.array([0, 0, 1]),
+        cluster_r=np.array([0, 0, 1]),
+        name="failover",
+    )
+    return sub.with_failures(list(failures)) if failures else sub
+
+
+def schedule_failover() -> Dict:
+    """Failure injection & recovery (ROADMAP §2): a reducer death
+    mid-shuffle plus a cluster partition with a late repair, against a
+    frozen clairvoyant joint plan that concentrated shuffle on the paths
+    the faults sever.
+
+    The frozen plan parks everything bound for the partitioned cluster
+    until repair (t=400s), so its makespan is pinned to the repair time.
+    ``reactive_shared`` observes each fault, un-delivers the lost output,
+    co-replans the residual around the dead reducer and severed links, and
+    pulls the parked queue back onto surviving paths; ``reactive_failover``
+    additionally toggles speculative re-execution at each fault decision.
+    Both run with ``replication=2`` so lost map output re-executes from
+    surviving replicas instead of re-pushing over the WAN."""
+    FAILURES = [
+        FailureEvent.reducer_kill(1, 115.0),
+        FailureEvent.cluster_partition(1, 118.0, 400.0),
+    ]
+    sub0 = failover_substrate()
+    d_steady = np.array([5000.0, 5000.0, 0.0])
+    d_late = np.array([3000.0, 3000.0, 0.0])
+    steady = GeoJob(sub0.view(d_steady, 1.0, name="steady"))
+    late = GeoJob(sub0.view(d_late, 1.0, name="late"))
+    frozen = GeoSchedule([steady, late]).plan(
+        "joint", mode="e2e_multi", barriers=BARRIERS_GGL, **_OPT
+    )
+    cfg = SimConfig(barriers=BARRIERS_GGL, replication=2, audit=True)
+
+    subf = failover_substrate(FAILURES)
+    sv = subf.view(d_steady, 1.0, name="steady")
+    lv = subf.view(d_late, 1.0, name="late")
+    frozen_sim = simulate_schedule(
+        [(sv, frozen.planned.plans[0], cfg),
+         (lv, frozen.planned.plans[1], cfg)],
+        substrate=subf,
+    )
+    out = {"frozen_joint": {"simulated": frozen_sim.makespan,
+                            **frozen_sim.as_dict()}}
+    emit("schedule_failover_frozen", 0.0, f"sim={frozen_sim.makespan:.0f}s")
+
+    for policy in ("reactive_shared", "reactive_failover"):
+        sched = GeoSchedule(
+            [GeoJob(sv).with_plan(frozen.planned.plans[0], BARRIERS_GGL),
+             GeoJob(lv).with_plan(frozen.planned.plans[1], BARRIERS_GGL)]
+        ).with_plans()
+        us, report = timeit(
+            lambda: sched.run_online(policy=policy, cfg=cfg, **_OPT),
+            repeats=1,
+        )
+        out[policy] = {
+            "simulated": report.makespan_online,
+            "static_baseline": report.makespan_static,
+            "improvement_vs_static": report.improvement,
+            "decisions": len(report.decisions),
+            "swaps": len(report.swaps),
+            "rejected": len(report.rejected),
+            "charged_s": report.charged_s,
+            **report.sim.as_dict(),
+        }
+        emit(f"schedule_failover_{policy}", us,
+             f"sim={report.makespan_online:.0f}s;"
+             f"swaps={len(report.swaps)};rejected={len(report.rejected)}")
+    margin = 1 - (out["reactive_shared"]["simulated"]
+                  / out["frozen_joint"]["simulated"])
+    emit("schedule_failover_margin", 0.0, f"margin={margin:.0%}")
+    out["failover_margin"] = margin
+    out["failover_margin_speculative"] = 1 - (
+        out["reactive_failover"]["simulated"]
+        / out["frozen_joint"]["simulated"]
+    )
     return out
 
 

@@ -94,6 +94,7 @@ def main() -> None:
         ("schedule", F.schedule_contention),
         ("schedule_online", F.schedule_online),
         ("schedule_online_shared", F.schedule_online_shared),
+        ("schedule_failover", F.schedule_failover),
         ("pipeline_chain", F.pipeline_chain),
         ("bench_planner", F.bench_planner),
         ("bench_scale", F.bench_scale),

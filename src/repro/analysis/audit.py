@@ -34,8 +34,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.plan import ExecutionPlan
-from ..core.platform import CapacityTrace, Platform, Substrate, \
-    planetlab_platform
+from ..core.platform import CapacityTrace, FailureEvent, Platform, \
+    Substrate, planetlab_platform
 from ..core.simulate import SimConfig, _MultiSim, open_schedule
 
 __all__ = [
@@ -148,12 +148,38 @@ def _pipeline_engine() -> _MultiSim:
                          stage_links={1: [(0, 1.0)], 2: [(1, 1.0)]})
 
 
+def _failover_engine() -> _MultiSim:
+    """Every failure mechanism at once under replication: a per-job mapper
+    kill (replica promotion), a substrate-wide reducer kill (claw-back +
+    re-emission) and a cluster partition with repair (doomed transfers,
+    park/resume) — the ``schedule_failover`` benchmark's fault surface.
+    Failure times are deliberately non-round so they never tie with chunk
+    completions under the permuted tie-break audit."""
+    sub = _shared_online_substrate().with_failures([
+        FailureEvent.reducer_kill(1, 97.0),
+        FailureEvent.cluster_partition(0, 141.3, 191.3),
+    ])
+    steady = sub.view(np.array([8000.0, 8000, 0, 0]), 1.0, name="steady")
+    late = sub.view(np.array([0.0, 0, 6000, 6000]), 1.0, name="late")
+    return open_schedule(
+        [
+            (steady, locality_plan(steady),
+             SimConfig(audit=True, replication=2,
+                       failures=(FailureEvent.mapper_kill(0, 41.3),))),
+            (late, locality_plan(late),
+             SimConfig(audit=True, replication=2, start_time=50.0)),
+        ],
+        substrate=sub,
+    )
+
+
 QUICK_SCENARIOS: Tuple[Tuple[str, Callable[[], _MultiSim]], ...] = (
     ("planetlab_GGL", lambda: _planetlab_engine(("G", "G", "L"))),
     ("planetlab_PPP", lambda: _planetlab_engine(("P", "P", "P"))),
     ("planetlab_LGP", lambda: _planetlab_engine(("L", "G", "P"))),
     ("shared_online", _shared_online_engine),
     ("pipeline_chain", _pipeline_engine),
+    ("failover", _failover_engine),
 )
 
 
@@ -211,13 +237,22 @@ def _digest(eng: _MultiSim) -> str:
                   g.shuf_landed_mb, g.reduced_mb)),
             repr((g.push_end, g.map_end, g.shuffle_end, g.reduce_end,
                   g.wasted_mb)),
+            repr((g.lost_mb, g.reexec_mb)),
             g.recovered, g.total_map_chunks,
             tuple(g.push_inflight.tolist()),
             tuple(g.map_unfinished.tolist()),
             tuple(g.shuf_inflight.tolist()),
             tuple(g.reduce_outstanding.tolist()),
             tuple(g.map_alive.tolist()),
+            tuple(g.red_alive.tolist()),
             tuple(g.reducer_final.tolist()),
+            # provenance enters as per-reducer sorted multisets: *which*
+            # equal-size chunk a reducer served first is a benign
+            # same-timestamp reordering (sources are excluded from the
+            # canon), and even column *sums* pick up ULP noise from
+            # accumulation order — the multiset is exact
+            tuple(tuple(sorted(repr(v) for v in col))
+                  for col in np.asarray(g.reduced_by).T.tolist()),
             repr(tuple(g.dep_landed.tolist())),
             repr(tuple(g.delivered_out.tolist())),
             tuple(sorted((i, tuple(sorted(s)))
@@ -233,7 +268,7 @@ def _digest(eng: _MultiSim) -> str:
     def link_state(link):
         cur = link.current
         return (
-            link.name, link.busy,
+            link.name, link.busy, link.down,
             None if cur is None else (cur.run.idx, repr(cur.size), cur.fn),
             tuple(sorted((tr.run.idx, repr(tr.size), tr.fn)
                          for tr in link.queue)),
@@ -378,7 +413,8 @@ def snapshot_audit(
                         f"t={snap.time:.1f}: job {prog.job}: negative "
                         f"{phase} residual {mb:.6f}"
                     )
-            monotone = not g.stage_deps and g.cfg.fail_mapper is None
+            monotone = (not g.stage_deps and not g.cfg.failures
+                        and not eng.sub.failures)
             if monotone and prog.job in last:
                 for phase, mb in rem.items():
                     if mb > last[prog.job][phase] + 1e-6:

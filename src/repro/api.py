@@ -845,6 +845,39 @@ class OnlineReport:
         rejected), modeled seconds."""
         return sum(d.charge for d in self.decisions)
 
+    def as_dict(self) -> Dict[str, object]:
+        """JSON-pure report of the online run: policy, the steered/frozen
+        makespans and their gap, decision-timeline aggregates, and the flat
+        per-decision records (mirrors :meth:`ScheduleReport.as_dict`)."""
+        return {
+            "policy": str(self.policy),
+            "barriers": "".join(self.barriers),
+            "makespan_online": float(self.makespan_online),
+            "makespan_static": float(self.makespan_static),
+            "improvement": float(self.improvement),
+            "n_decisions": len(self.decisions),
+            "n_swaps": len(self.swaps),
+            "n_rejected": len(self.rejected),
+            "n_failures_observed": len(
+                [d for d in self.decisions if d.event == "failure"]
+            ),
+            "charged_s": float(self.charged_s),
+            "decisions": [
+                {
+                    "time": float(d.time),
+                    "event": str(d.event),
+                    "job": int(d.job),
+                    "action": str(d.action),
+                    "modeled_before": float(d.modeled_before),
+                    "modeled_after": float(d.modeled_after),
+                    "charge": float(d.charge),
+                }
+                for d in self.decisions
+            ],
+            "sim": self.sim.as_dict(),
+            "static_sim": self.static_sim.as_dict(),
+        }
+
     def timeline(self) -> str:
         if not self.decisions:
             return "(no decisions)"
@@ -1200,13 +1233,17 @@ class GeoSchedule:
             events.append((t_a, "arrival", group))
         for t_d in self.substrate.drift_times():
             events.append((t_d, "drift", []))
+        fail_times = set()
         for _, _, c in entries + arrival_entries:
-            if c.fail_mapper is not None:
+            for ev in c.failures:
                 # the decision never pre-dates the job: a failure timed
                 # before an arrival's release is observed at the release
-                events.append((
-                    max(float(c.fail_mapper[1]), c.start_time), "failure", []
-                ))
+                fail_times.add(max(float(ev.time), c.start_time))
+        # substrate-wide faults (and their repairs — restored capacity is
+        # as much a re-planning trigger as lost capacity)
+        fail_times.update(self.substrate.failure_times())
+        for t_f in sorted(fail_times):
+            events.append((t_f, "failure", []))
         events.sort(key=lambda e: (e[0], 0 if e[1] == "arrival" else 1))
 
         eng = open_schedule(entries, substrate=self.substrate,
@@ -1431,6 +1468,15 @@ class GeoSchedule:
                             action="reject", modeled_before=before,
                             modeled_after=before, charge=arrival_rejected,
                         ))
+            if decide and gate_open and kind == "failure" \
+                    and ocfg.speculation is not None:
+                # the policy's fault-reaction knob: flip speculative
+                # execution for every live job the instant a failure is
+                # observed (recovery traffic creates the stragglers
+                # speculation hedges)
+                for jp in snap.jobs:
+                    if not jp.done and jp.released:
+                        eng.set_speculation(jp.job, ocfg.speculation)
             if decide and gate_open:
                 if injected:
                     snap = eng.snapshot()  # include the newcomers' state

@@ -73,6 +73,8 @@ from .pipeline import PipelineSpec, StageSpec, chain_spec
 from .plan import ExecutionPlan, local_push_plan, uniform_plan
 from .platform import (
     CapacityTrace,
+    FailureEvent,
+    FailureTrace,
     Platform,
     Substrate,
     planetlab_platform,
@@ -98,6 +100,8 @@ __all__ = [
     "CapacityTrace",
     "CostModel",
     "ExecutionPlan",
+    "FailureEvent",
+    "FailureTrace",
     "FluidSim",
     "JobProgress",
     "MODES",

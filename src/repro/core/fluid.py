@@ -171,6 +171,12 @@ class FluidSim:
                 "drift is chunk-event-granular; use SimConfig("
                 'mode="event")'
             )
+        if getattr(substrate, "failures", None):
+            raise ValueError(
+                "fluid mode does not support a substrate FailureTrace — "
+                "failure recovery is chunk-event-granular; use SimConfig("
+                'mode="event")'
+            )
         self._B_sm = np.asarray(substrate.B_sm, dtype=np.float64)
         self._B_mr = np.asarray(substrate.B_mr, dtype=np.float64)
         self._C_m = np.asarray(substrate.C_m, dtype=np.float64)
@@ -222,7 +228,7 @@ class FluidSim:
         bad = [name for name, flag in (
             ("speculation", cfg.speculation),
             ("stealing", cfg.stealing),
-            ("fail_mapper", cfg.fail_mapper is not None),
+            ("failures", bool(cfg.failures)),
             ("compute_noise", cfg.compute_noise > 0),
             ("replication>1", cfg.replication != 1),
         ) if flag]

@@ -283,6 +283,10 @@ class JobProgress:
                          instant (``None`` = all alive) — a re-planner must
                          route around dead mappers, not just around slow
                          links.
+      red_alive:         (nR,) bool reducer liveness (``None`` = all
+                         alive) — the executor bounces emissions off dead
+                         reducers, so pricing masks the plan's ``y`` to
+                         the survivors (:func:`_live_plan_arrays`).
     """
 
     job: int
@@ -297,6 +301,7 @@ class JobProgress:
     alpha: float
     total_push_mb: float
     map_alive: Optional[np.ndarray] = None
+    red_alive: Optional[np.ndarray] = None
 
     @classmethod
     def fresh(cls, platform: Platform, job: int = 0) -> "JobProgress":
@@ -314,6 +319,7 @@ class JobProgress:
             alpha=float(platform.alpha),
             total_push_mb=float(platform.D.sum()),
             map_alive=np.ones(nM, dtype=bool),
+            red_alive=np.ones(nR, dtype=bool),
         )
 
     #: the six residual buckets, in the positional order
@@ -360,6 +366,48 @@ class JobProgress:
         return {"push": push, "map": map_in, "shuffle": shuffle,
                 "reduce": reduce}
 
+    def undeliver_reducer(
+        self, k: int, by_mapper: Optional[np.ndarray] = None
+    ) -> "JobProgress":
+        """Return a copy with reducer ``k``'s volume un-delivered — the
+        model-side mirror of the executor's reducer-kill claw-back: bytes
+        on the wire toward (or landed at) the dead reducer return to their
+        origin mappers' shuffle pools for re-routing, and ``red_alive[k]``
+        flips dead.  ``by_mapper`` ((nM,) MB) is the full provenance of the
+        landed + already-reduced volume lost with the node (the executor's
+        ``reduced_by`` ledger); without it the landed bucket is spread
+        evenly over the mappers."""
+        nM = self.at_mapper.shape[0]
+        k = int(k)
+        pool = np.asarray(self.shuffle_pool, dtype=np.float64).copy()
+        committed = np.asarray(
+            self.committed_shuffle, dtype=np.float64
+        ).copy()
+        at_red = np.asarray(self.at_reducer, dtype=np.float64).copy()
+        pool += committed[:, k]
+        committed[:, k] = 0.0
+        landed = float(at_red[k])
+        at_red[k] = 0.0
+        if by_mapper is not None:
+            add = np.asarray(by_mapper, dtype=np.float64)
+            if add.shape != (nM,):
+                raise ValueError(
+                    f"by_mapper must have shape ({nM},), got {add.shape}"
+                )
+            pool += add
+        elif landed > 0:
+            pool += landed / nM
+        red_alive = (
+            np.ones(at_red.shape[0], dtype=bool)
+            if self.red_alive is None
+            else np.asarray(self.red_alive, dtype=bool).copy()
+        )
+        red_alive[k] = False
+        return dataclasses.replace(
+            self, shuffle_pool=pool, committed_shuffle=committed,
+            at_reducer=at_red, red_alive=red_alive,
+        )
+
     def completion(self) -> Dict[str, float]:
         """Per-phase completion fraction in [0, 1]."""
         rem = self.remaining_mb()
@@ -371,6 +419,32 @@ class JobProgress:
             "shuffle": 1.0 - min(rem["shuffle"] / tot_out, 1.0),
             "reduce": 1.0 - min(rem["reduce"] / tot_out, 1.0),
         }
+
+
+def _live_plan_arrays(
+    progress: JobProgress, plan: ExecutionPlan
+) -> Tuple[np.ndarray, np.ndarray]:
+    """The plan arrays the executor *effectively* routes by at this
+    snapshot: ``y`` masked to surviving reducers and renormalized (the
+    executor bounces emissions off dead reducers and re-splits them over
+    the survivors — pricing must route the same way to stay exact), ``x``
+    as-is (dead mappers are handled by recovery + capacity degradation,
+    not by re-normalizing the split).  Identity when every reducer is
+    alive, so failure-free pricing stays on the exact original float
+    path."""
+    x = np.asarray(plan.x)
+    y = np.asarray(plan.y)
+    ra = progress.red_alive
+    if ra is not None:
+        ra = np.asarray(ra, dtype=bool)
+        if not ra.all():
+            live = np.where(ra, y, 0.0)
+            if live.sum() <= 1e-12:
+                live = np.where(ra, 1.0, 0.0)
+                if live.sum() == 0:
+                    raise ValueError("all reducers dead")
+            y = live / live.sum()
+    return x, y
 
 
 def residual_volumes(
@@ -547,12 +621,13 @@ class CostModel:
         zero-progress snapshot (:meth:`JobProgress.fresh`) reproduces
         :meth:`price_plan` exactly — online and offline decisions share one
         cost model."""
+        x, y = _live_plan_arrays(progress, plan)
         return self.price_volumes(
             *residual_volumes(
                 progress.resid_push, progress.committed_push,
                 progress.at_mapper, progress.shuffle_pool,
                 progress.committed_shuffle, progress.at_reducer,
-                progress.alpha, np.asarray(plan.x), np.asarray(plan.y),
+                progress.alpha, x, y,
                 xp=np, rep=self._rep(),
             ),
             barriers=barriers,
@@ -633,7 +708,7 @@ class CostModel:
             residual_volumes(
                 pr.resid_push, pr.committed_push, pr.at_mapper,
                 pr.shuffle_pool, pr.committed_shuffle, pr.at_reducer,
-                pr.alpha, np.asarray(plan.x), np.asarray(plan.y), xp=np,
+                pr.alpha, *_live_plan_arrays(pr, plan), xp=np,
                 rep=rep,
             )
             for pr, plan in zip(progress_list, plans)

@@ -52,6 +52,7 @@ from .makespan import (
     BARRIERS_ALL_GLOBAL,
     CostModel,
     JobProgress,
+    _live_plan_arrays,
     _np_hard_ops,
     analytic_volumes,
     attribute_phases,
@@ -1351,14 +1352,24 @@ def _degraded_platform(platform: Platform, progress: JobProgress):
     selection) routes the residual around it.  Not zero — softmax plans
     keep epsilon mass everywhere and the phase equations have no usage
     gate on push links."""
-    if progress.map_alive is None or progress.map_alive.all():
+    changes = {}
+    if progress.map_alive is not None and not progress.map_alive.all():
+        alive = progress.map_alive.astype(bool)
+        changes.update(
+            C_m=np.where(alive, platform.C_m, platform.C_m * 1e-3),
+            B_sm=np.where(alive[None, :], platform.B_sm,
+                          platform.B_sm * 1e-3),
+        )
+    if progress.red_alive is not None and not progress.red_alive.all():
+        alive_r = progress.red_alive.astype(bool)
+        changes.update(
+            C_r=np.where(alive_r, platform.C_r, platform.C_r * 1e-3),
+            B_mr=np.where(alive_r[None, :], platform.B_mr,
+                          platform.B_mr * 1e-3),
+        )
+    if not changes:
         return platform
-    alive = progress.map_alive.astype(bool)
-    return dataclasses.replace(
-        platform,
-        C_m=np.where(alive, platform.C_m, platform.C_m * 1e-3),
-        B_sm=np.where(alive[None, :], platform.B_sm, platform.B_sm * 1e-3),
-    )
+    return dataclasses.replace(platform, **changes)
 
 
 def replan_batch(
@@ -1606,15 +1617,20 @@ def _solve_residual_shared_batch(
 
 
 def _degraded_caps(substrate, progress: JobProgress):
-    """Per-job capacity arrays with this job's dead mappers collapsed 1000x
-    (same rationale as :func:`replan`: liveness is a capacity fact traces
-    cannot express; not zero because softmax plans keep epsilon mass)."""
+    """Per-job capacity arrays with this job's dead mappers *and
+    reducers* collapsed 1000x (same rationale as :func:`replan`: liveness
+    is a capacity fact traces cannot express; not zero because softmax
+    plans keep epsilon mass)."""
     B_sm, B_mr = substrate.B_sm, substrate.B_mr
     C_m, C_r = substrate.C_m, substrate.C_r
     if progress.map_alive is not None and not progress.map_alive.all():
         alive = progress.map_alive.astype(bool)
         C_m = np.where(alive, C_m, C_m * 1e-3)
         B_sm = np.where(alive[None, :], B_sm, B_sm * 1e-3)
+    if progress.red_alive is not None and not progress.red_alive.all():
+        alive_r = progress.red_alive.astype(bool)
+        C_r = np.where(alive_r, C_r, C_r * 1e-3)
+        B_mr = np.where(alive_r[None, :], B_mr, B_mr * 1e-3)
     return B_sm, B_mr, C_m, C_r
 
 
@@ -1626,7 +1642,7 @@ def _score_residual_stack(caps_list, progresses, plans, barriers):
         residual_volumes(
             pr.resid_push, pr.committed_push, pr.at_mapper, pr.shuffle_pool,
             pr.committed_shuffle, pr.at_reducer, pr.alpha,
-            np.asarray(plan.x), np.asarray(plan.y), xp=np,
+            *_live_plan_arrays(pr, plan), xp=np,
         )
         for pr, plan in zip(progresses, plans)
     ]
@@ -1830,12 +1846,20 @@ class OnlineConfig:
     (few low-temperature steps from the incumbent — see
     :func:`replan_batch` / :func:`replan_schedule`) instead of a full
     anneal; paired with measured costs, the hysteresis gate then charges
-    the *small* solve the policy actually runs."""
+    the *small* solve the policy actually runs.
+
+    ``speculation`` steers the executor's speculative-execution knob on
+    failure decisions: ``True`` turns speculation *on* for every live job
+    once a failure has been observed (duplicate straggling work — a dead
+    worker's recovery traffic creates exactly the stragglers speculation
+    hedges), ``False`` forces it off, ``None`` (default) leaves each
+    job's :class:`~repro.core.simulate.SimConfig` untouched."""
 
     shared: bool = False
     hysteresis: float = 0.0
     solver_cost_s: Optional[float] = None
     incremental: bool = False
+    speculation: Optional[bool] = None
 
     def __post_init__(self):
         if not (self.hysteresis >= 0.0):  # rejects negatives and NaN
@@ -2052,6 +2076,21 @@ def _reactive_incremental_policy(kind, snapshot):
     anneal steps from the incumbent logits) and the hysteresis gate
     charges the measured incremental solve time — the cheap-and-frequent
     corner of the replan-cost trade-off."""
+    return kind in ("arrival", "failure", "drift")
+
+
+@register_online_policy(
+    "reactive_failover",
+    config=OnlineConfig(shared=True, hysteresis=1.0, speculation=True),
+)
+def _reactive_failover_policy(kind, snapshot):
+    """``reactive_shared``'s triggers and shared co-replanning, plus the
+    fault-reaction knob: the first failure decision also switches every
+    live job's speculative execution *on*
+    (:meth:`_MultiSim.set_speculation`), so recovery-induced stragglers
+    get hedged while the co-replan routes the residual around the dead
+    resources (capacity collapsed until repair via
+    :meth:`Substrate.at`)."""
     return kind in ("arrival", "failure", "drift")
 
 

@@ -31,6 +31,8 @@ from ..analysis.validate import require_finite, require_positive
 
 __all__ = [
     "CapacityTrace",
+    "FailureEvent",
+    "FailureTrace",
     "Platform",
     "Substrate",
     "two_cluster_example",
@@ -84,6 +86,137 @@ class CapacityTrace:
         return self.values[max(idx, 0)]
 
 
+#: the typed discrete failure modes the executor injects (ROADMAP §2):
+#: workers die, whole clusters partition away and heal.
+FAILURE_KINDS = ("mapper_kill", "reducer_kill", "cluster_partition")
+
+#: capacity factor applied to dead/partitioned resources in planning views
+#: (:meth:`Substrate.at`): not exactly zero — the softmax planner needs an
+#: epsilon escape mass, matching ``optimize._degraded_platform``.
+FAILURE_EPS = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    """One typed discrete failure.
+
+    Kinds (``FAILURE_KINDS``):
+
+    * ``mapper_kill``  — the worker on mapper ``node`` dies at ``time``;
+      un-delivered partial input is lost and re-executed from a surviving
+      replica (when one holds the bytes) or re-pushed from the source.
+    * ``reducer_kill`` — reducer ``node`` dies at ``time``; delivered but
+      un-consumed shuffle input *and* already-reduced output are lost and
+      re-emitted from the mappers' durable map output.
+    * ``cluster_partition`` — cluster ``cluster`` partitions away on
+      ``[time, t_repair)``: every link crossing the partition boundary is
+      down, in-flight transfers on those links are dropped (retransmitted
+      after repair), queued ones wait or get re-routed by a replan.
+      ``t_repair=None`` means the partition never heals.
+
+    Kills attach per job (``SimConfig(failures=...)`` — that job's worker
+    dies) or substrate-wide (:meth:`Substrate.with_failures` — the node
+    dies for every job); partitions are fabric facts and only attach to
+    the substrate.
+    """
+
+    kind: str
+    time: float
+    node: Optional[int] = None
+    cluster: Optional[int] = None
+    t_repair: Optional[float] = None
+
+    def __post_init__(self):
+        if self.kind not in FAILURE_KINDS:
+            raise ValueError(
+                f"kind must be one of {FAILURE_KINDS}, got {self.kind!r}"
+            )
+        object.__setattr__(self, "time", float(self.time))
+        if not np.isfinite(self.time) or self.time < 0:
+            raise ValueError(f"time must be finite and >= 0, got {self.time}")
+        if self.kind == "cluster_partition":
+            if self.node is not None:
+                raise ValueError("cluster_partition takes cluster=, not node=")
+            if self.cluster is None:
+                raise ValueError("cluster_partition needs cluster=")
+            object.__setattr__(self, "cluster", int(self.cluster))
+            if self.t_repair is not None:
+                object.__setattr__(self, "t_repair", float(self.t_repair))
+                if self.t_repair <= self.time:
+                    raise ValueError(
+                        f"t_repair={self.t_repair} must exceed time={self.time}"
+                    )
+        else:
+            if self.node is None:
+                raise ValueError(f"{self.kind} needs node=")
+            if self.cluster is not None or self.t_repair is not None:
+                raise ValueError(
+                    f"{self.kind} takes node= and time= only (kills are "
+                    "permanent; repair applies to partitions)"
+                )
+            object.__setattr__(self, "node", int(self.node))
+            if self.node < 0:
+                raise ValueError(f"node must be >= 0, got {self.node}")
+
+    # -- ergonomic constructors -------------------------------------------
+    @classmethod
+    def mapper_kill(cls, mapper: int, time: float) -> "FailureEvent":
+        return cls(kind="mapper_kill", time=time, node=mapper)
+
+    @classmethod
+    def reducer_kill(cls, reducer: int, time: float) -> "FailureEvent":
+        return cls(kind="reducer_kill", time=time, node=reducer)
+
+    @classmethod
+    def cluster_partition(
+        cls, cluster: int, time: float, t_repair: Optional[float] = None
+    ) -> "FailureEvent":
+        return cls(kind="cluster_partition", time=time, cluster=cluster,
+                   t_repair=t_repair)
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureTrace:
+    """A substrate-level fault script: typed :class:`FailureEvent`\\ s in
+    time order, attached via :meth:`Substrate.with_failures` exactly like a
+    :class:`CapacityTrace` attaches per resource.  The executor fires each
+    event against *every* job sharing the substrate; :meth:`times` gives an
+    online policy the decision instants to watch, and :meth:`Substrate.at`
+    folds the failure state in force at ``t`` into the capacity arrays a
+    re-planner sees (dead resources at ``FAILURE_EPS`` until repair)."""
+
+    events: Tuple[FailureEvent, ...]
+
+    def __post_init__(self):
+        events = tuple(self.events)
+        for ev in events:
+            if not isinstance(ev, FailureEvent):
+                raise TypeError(f"not a FailureEvent: {ev!r}")
+        object.__setattr__(
+            self, "events",
+            tuple(sorted(events, key=lambda e: (e.time, e.kind,
+                                                -1 if e.node is None else e.node,
+                                                -1 if e.cluster is None
+                                                else e.cluster))),
+        )
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self):
+        return iter(self.events)
+
+    def times(self) -> Tuple[float, ...]:
+        """Every decision instant (ascending, t > 0): each failure's fire
+        time plus each partition's repair time — what a reactive online
+        policy watches, the fault analogue of
+        :meth:`Substrate.drift_times`."""
+        ts = {ev.time for ev in self.events if ev.time > 0}
+        ts |= {ev.t_repair for ev in self.events
+               if ev.t_repair is not None and ev.t_repair > 0}
+        return tuple(sorted(ts))
+
+
 #: resource-name grammar shared with :meth:`Substrate.resources` — traces
 #: key into the same namespace the executor's per-resource stats use.
 _TRACE_KEY_RE = re.compile(
@@ -114,6 +247,9 @@ class Substrate:
         the (nominal, t=0) capacity arrays over time.  The executor reads
         the trace at each chunk's service start; an online planner reads
         :meth:`at` for the capacities in force at a decision instant.
+      failures: optional substrate-level :class:`FailureTrace` — discrete
+        fault events (kills, partitions) affecting every job sharing the
+        substrate, threaded through the executor like the traces.
     """
 
     B_sm: np.ndarray
@@ -125,6 +261,7 @@ class Substrate:
     cluster_r: np.ndarray
     name: str = "substrate"
     traces: Optional[Dict[str, CapacityTrace]] = None
+    failures: Optional[FailureTrace] = None
 
     def __post_init__(self):
         for field in ("B_sm", "B_mr", "C_m", "C_r"):
@@ -149,6 +286,26 @@ class Substrate:
                     raise ValueError(
                         f"unknown trace key {key!r} — use a resource name "
                         "from Substrate.resources()"
+                    )
+        if self.failures:
+            if not isinstance(self.failures, FailureTrace):
+                raise TypeError("failures must be a FailureTrace")
+            clusters = (set(np.unique(self.cluster_s).tolist())
+                        | set(np.unique(self.cluster_m).tolist())
+                        | set(np.unique(self.cluster_r).tolist()))
+            for ev in self.failures:
+                if ev.kind == "mapper_kill" and ev.node >= self.nM:
+                    raise ValueError(
+                        f"mapper_kill node {ev.node} out of range (nM={self.nM})"
+                    )
+                if ev.kind == "reducer_kill" and ev.node >= self.nR:
+                    raise ValueError(
+                        f"reducer_kill node {ev.node} out of range (nR={self.nR})"
+                    )
+                if ev.kind == "cluster_partition" and ev.cluster not in clusters:
+                    raise ValueError(
+                        f"cluster_partition cluster {ev.cluster} is not a "
+                        f"cluster id of this substrate ({sorted(clusters)})"
                     )
 
     # -- sizes ------------------------------------------------------------
@@ -268,6 +425,7 @@ class Substrate:
             C_m=scale(self.C_m, map_frac),
             C_r=scale(self.C_r, reduce_frac),
             traces=None,  # a hypothetical planning view, not the live fabric
+            failures=None,
             name=f"{self.name}/residual",
         )
 
@@ -293,15 +451,46 @@ class Substrate:
             t for trace in self.traces.values() for t in trace.times if t > 0
         }))
 
+    # -- failures ----------------------------------------------------------
+    def with_failures(self, events) -> "Substrate":
+        """This substrate with a fault script: ``events`` is a
+        :class:`FailureTrace` or an iterable of :class:`FailureEvent`\\ s.
+        The executor fires each event against every job sharing the
+        substrate; :meth:`at` folds the active failure state into the
+        planning view (the fault analogue of :meth:`with_traces`)."""
+        trace = events if isinstance(events, FailureTrace) \
+            else FailureTrace(tuple(events))
+        return dataclasses.replace(self, failures=trace)
+
+    def failure_times(self) -> Tuple[float, ...]:
+        """Every substrate-level failure/repair instant (t > 0, ascending)
+        — decision times for a reactive online policy, like
+        :meth:`drift_times`."""
+        return self.failures.times() if self.failures else ()
+
+    def partition_cut(self, cluster: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Boolean masks of the links a partition of ``cluster`` severs:
+        ``(push_cut (nS, nM), shuffle_cut (nM, nR))`` — exactly the links
+        with one endpoint inside the cluster and one outside."""
+        s_in = self.cluster_s == cluster
+        m_in = self.cluster_m == cluster
+        r_in = self.cluster_r == cluster
+        return (s_in[:, None] != m_in[None, :],
+                m_in[:, None] != r_in[None, :])
+
     def at(self, t: float) -> "Substrate":
         """The capacities in force at absolute time ``t``: a plain (trace
-        free) substrate whose arrays fold every trace in — the *current
-        view* an online planner replans against."""
-        if not self.traces:
+        and failure free) substrate whose arrays fold every trace *and*
+        every active failure in — the *current view* an online planner
+        replans against.  Dead workers and partitioned links sit at
+        ``FAILURE_EPS`` of nominal (until a partition's repair), so
+        :func:`repro.core.optimize.replan_schedule` steers residual work
+        around them without losing the softmax's escape mass."""
+        if not self.traces and not self.failures:
             return self
         B_sm, B_mr = self.B_sm.copy(), self.B_mr.copy()
         C_m, C_r = self.C_m.copy(), self.C_r.copy()
-        for key, trace in self.traces.items():
+        for key, trace in (self.traces or {}).items():
             m = _TRACE_KEY_RE.match(key)
             ps, pm, sm, sr, mm, rr = m.groups()
             if ps is not None:
@@ -312,16 +501,30 @@ class Substrate:
                 C_m[int(mm)] = trace.at(t)
             else:
                 C_r[int(rr)] = trace.at(t)
+        for ev in (self.failures or ()):
+            if ev.time > t:
+                continue
+            if ev.kind == "mapper_kill":
+                C_m[ev.node] *= FAILURE_EPS
+                B_sm[:, ev.node] *= FAILURE_EPS
+            elif ev.kind == "reducer_kill":
+                C_r[ev.node] *= FAILURE_EPS
+                B_mr[:, ev.node] *= FAILURE_EPS
+            elif ev.t_repair is None or t < ev.t_repair:
+                push_cut, shuf_cut = self.partition_cut(ev.cluster)
+                B_sm = np.where(push_cut, B_sm * FAILURE_EPS, B_sm)
+                B_mr = np.where(shuf_cut, B_mr * FAILURE_EPS, B_mr)
         return dataclasses.replace(
             self, B_sm=B_sm, B_mr=B_mr, C_m=C_m, C_r=C_r,
-            traces=None, name=f"{self.name}@{t:g}s",
+            traces=None, failures=None, name=f"{self.name}@{t:g}s",
         )
 
     def describe(self) -> str:
         drift = f" drifting@{len(self.traces)}" if self.traces else ""
+        fail = f" failures@{len(self.failures)}" if self.failures else ""
         return (
             f"Substrate({self.name}: nS={self.nS} nM={self.nM} nR={self.nR}, "
-            f"{len(self.resources())} resources{drift})"
+            f"{len(self.resources())} resources{drift}{fail})"
         )
 
 

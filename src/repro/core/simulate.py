@@ -16,9 +16,12 @@ survive:
 * **work stealing** — idle nodes *take* (rather than clone) unstarted chunks
   from the most backlogged peer, re-fetching inputs from the source;
 * **stragglers** — per-node slowdown factors unknown to the planner;
-* **node failure** — a job's mapper worker dies at a given time; its
-  unfinished work is re-fetched from the data source (or nearest replica)
-  and re-queued on the best surviving node;
+* **failures** — typed :class:`repro.core.platform.FailureEvent`\\ s
+  (``mapper_kill`` / ``reducer_kill`` per job or fabric-wide, plus
+  substrate-level ``cluster_partition`` with repair): in-flight chunks on
+  dead paths are dropped, undelivered map/reduce output is un-delivered,
+  and lost work is re-executed from surviving replicas (or re-fetched from
+  the source) on the best surviving node;
 * **replication** — push chunks are written ``replication×``, optionally
   across clusters (paper §4.6.5), consuming link capacity and speeding up
   recovery.
@@ -63,16 +66,18 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from .makespan import BARRIERS_GGL, JobProgress, _check_barriers
 from .plan import ExecutionPlan
-from .platform import Platform, Substrate
+from .platform import FailureEvent, Platform, Substrate
 
 __all__ = [
     "ComputeResource",
+    "FailureEvent",
     "LinkResource",
     "ProgressSnapshot",
     "ResourceStats",
@@ -85,9 +90,10 @@ __all__ = [
 ]
 
 
-#: executor modes: chunk-granular discrete events ("event") or continuous
+#: executor modes: chunk-granular discrete events ("event"), the
+#: array-native drain of the same events ("event_vec") or continuous
 #: flow-level simulation ("fluid", see :mod:`repro.core.fluid`).
-SIM_MODES = ("event", "fluid")
+SIM_MODES = ("event", "event_vec", "fluid")
 
 _NEG_INF = float("-inf")
 
@@ -104,9 +110,15 @@ class SimConfig:
     #: per-node compute slowdown factors applied at runtime (unknown to the
     #: planner): {("m"| "r", node_index): factor >= 1}
     stragglers: Optional[Dict[Tuple[str, int], float]] = None
-    #: (mapper_index, fail_time_s) — the job's worker on that mapper dies;
-    #: its work is recovered onto surviving mappers.
+    #: DEPRECATED spelling of ``failures=[FailureEvent.mapper_kill(j, t)]``
+    #: — converted (with a DeprecationWarning) at construction; the engine
+    #: only ever reads :attr:`failures`.
     fail_mapper: Optional[Tuple[int, float]] = None
+    #: this job's fault script: typed :class:`FailureEvent`\\ s
+    #: (``mapper_kill`` / ``reducer_kill`` — the *job's* worker on that
+    #: node dies).  Fabric-wide faults, including ``cluster_partition``,
+    #: attach to the substrate instead (:meth:`Substrate.with_failures`).
+    failures: Tuple[FailureEvent, ...] = ()
     #: lognormal sigma on per-chunk service times (0 = deterministic).
     compute_noise: float = 0.0
     seed: int = 0
@@ -116,18 +128,21 @@ class SimConfig:
     #: byte conservation at completion; violations land on
     #: :attr:`ScheduleSimResult.violations` (see :mod:`repro.analysis.audit`).
     audit: bool = False
-    #: executor mode: "event" (chunk-granular DES, the default) or "fluid"
-    #: (continuous flows at shared service rates — the scale-tier fast
-    #: path, see :mod:`repro.core.fluid`).  Every job of one schedule must
-    #: agree on the mode.
+    #: executor mode — every job of one schedule must agree on it:
+    #:
+    #: * ``"event"``     — chunk-granular DES (the default);
+    #: * ``"event_vec"`` — the same events drained with batched
+    #:   per-resource service scans (bit-identical results on scenarios
+    #:   the determinism auditor certifies race-free).  Dynamics
+    #:   (speculation, stealing, failures, noise, replication) are
+    #:   rejected; steered engines (``run_until`` / ``snapshot`` /
+    #:   ``swap_plan`` / ``inject``) fall back to the scalar event loop;
+    #: * ``"fluid"``     — continuous flows at shared service rates (the
+    #:   scale-tier fast path, see :mod:`repro.core.fluid`).
     mode: str = "event"
-    #: event-mode fast path: an *unsteered* full drain computes the exact
-    #: same execution with batched per-resource service scans instead of
-    #: one Python event per chunk (bit-identical results on scenarios the
-    #: determinism auditor certifies race-free).  Dynamics (speculation,
-    #: stealing, failure, noise, replication) are rejected; steered
-    #: engines (``run_until``/``snapshot``/``swap_plan``/``inject``) fall
-    #: back to the scalar event loop.
+    #: DEPRECATED spelling of ``mode="event_vec"`` — converted (with a
+    #: DeprecationWarning) at construction; the engine only ever reads
+    #: :attr:`mode`.
     vectorized: bool = False
 
     def __post_init__(self):
@@ -140,10 +155,47 @@ class SimConfig:
             raise ValueError(
                 f"replication must be >= 1, got {self.replication}"
             )
+        if self.vectorized:
+            warnings.warn(
+                "SimConfig(vectorized=True) is deprecated — spell it "
+                'SimConfig(mode="event_vec")',
+                DeprecationWarning, stacklevel=3,
+            )
+            if self.mode == "fluid":
+                raise ValueError(
+                    'vectorized=True conflicts with mode="fluid" — pick one '
+                    f"executor mode from {SIM_MODES}"
+                )
+            object.__setattr__(self, "mode", "event_vec")
+            object.__setattr__(self, "vectorized", False)
         if self.mode not in SIM_MODES:
             raise ValueError(
                 f"mode must be one of {SIM_MODES}, got {self.mode!r}"
             )
+        failures = tuple(self.failures)
+        if self.fail_mapper is not None:
+            warnings.warn(
+                "SimConfig(fail_mapper=(j, t)) is deprecated — spell it "
+                "SimConfig(failures=[FailureEvent.mapper_kill(j, t)])",
+                DeprecationWarning, stacklevel=3,
+            )
+            j, tf = self.fail_mapper
+            failures = failures + (
+                FailureEvent.mapper_kill(int(j), float(tf)),
+            )
+            object.__setattr__(self, "fail_mapper", None)
+        for ev in failures:
+            if not isinstance(ev, FailureEvent):
+                raise TypeError(f"failures entries must be FailureEvent, "
+                                f"got {ev!r}")
+            if ev.kind == "cluster_partition":
+                raise ValueError(
+                    "cluster_partition is a fabric fact, not a per-job "
+                    "fault — attach it to the substrate: "
+                    "Substrate.with_failures([FailureEvent."
+                    "cluster_partition(...)])"
+                )
+        object.__setattr__(self, "failures", failures)
 
 
 @dataclasses.dataclass
@@ -156,6 +208,11 @@ class SimResult:
     wasted_mb: float  # duplicated / re-executed work
     recovered_chunks: int
     total_map_chunks: int
+    #: payload MB lost to failures (dead workers, dropped in-flight
+    #: transfers) and the MB re-dispatched to make it up — conservation
+    #: requires the two to match at completion (audited).
+    lost_mb: float = 0.0
+    reexec_mb: float = 0.0
 
     def phases(self) -> Dict[str, float]:
         return {
@@ -178,6 +235,8 @@ class SimResult:
             "wasted_mb": self.wasted_mb,
             "recovered_chunks": float(self.recovered_chunks),
             "total_map_chunks": float(self.total_map_chunks),
+            "lost_mb": self.lost_mb,
+            "reexec_mb": self.reexec_mb,
         }
 
 
@@ -292,7 +351,8 @@ class LinkResource:
     at its own start time (drift).  Only :attr:`current` is committed.
     """
 
-    __slots__ = ("name", "bw", "trace", "busy", "current", "queue", "stats")
+    __slots__ = ("name", "bw", "trace", "busy", "current", "queue", "stats",
+                 "down", "serial")
 
     def __init__(self, name: str, bw: float, trace=None):
         self.name = name
@@ -302,6 +362,14 @@ class LinkResource:
         self.current: Optional[_Transfer] = None
         self.queue: List[_Transfer] = []
         self.stats = ResourceStats()
+        #: partition depth: >0 means the link is severed (overlapping
+        #: partitions nest, each repair decrements) — the pump refuses to
+        #: start service and queued transfers park until repair
+        self.down = 0
+        #: service generation: bumped on each service start so a completion
+        #: event voided by a partition (service revoked mid-flight) can be
+        #: recognized as stale and dropped
+        self.serial = 0
 
     def rate_at(self, t: float) -> float:
         """MB/s in force at time ``t`` (nominal unless a trace overrides)."""
@@ -346,7 +414,7 @@ class ComputeResource:
 
 class _Chunk:
     __slots__ = ("cid", "size", "src", "done", "started_copies", "owner",
-                 "cloned", "landed")
+                 "cloned", "landed", "replicas")
 
     def __init__(self, cid: int, size: float, src: int, owner: int = -1):
         self.cid = cid
@@ -357,6 +425,7 @@ class _Chunk:
         self.owner = owner  # mapper whose gate/progress counters hold it
         self.cloned = False
         self.landed = False  # push chunk delivered to a live mapper once
+        self.replicas = None  # mappers holding a landed replica copy
 
 
 class _JobRun:
@@ -392,6 +461,11 @@ class _JobRun:
         self.reducer_final = np.zeros(nR, dtype=bool)
 
         self.map_alive = np.ones(nM, dtype=bool)
+        self.red_alive = np.ones(nR, dtype=bool)
+        #: reduce-output provenance: MB reduced at reducer k that came from
+        #: mapper j — what a reducer_kill must claw back to the right
+        #: mapper pools (zeroed per column on claw-back)
+        self.reduced_by = np.zeros((nM, nR))
 
         # outstanding counters for gates
         self.push_inflight = np.zeros(nM, dtype=np.int64)
@@ -408,6 +482,11 @@ class _JobRun:
         self.wasted_mb = 0.0
         self.recovered = 0
         self.total_map_chunks = 0
+        # failure loss ledger: payload MB voided by failures and the MB
+        # re-dispatched (replica fetch / source re-push / shuffle re-emit /
+        # link retransmit) to make it up — conservation demands equality
+        self.lost_mb = 0.0
+        self.reexec_mb = 0.0
 
         # byte-conservation ledger (original payload only — replica and
         # speculative traffic is wasted-work accounting, not job volume):
@@ -447,6 +526,8 @@ class _JobRun:
             wasted_mb=self.wasted_mb,
             recovered_chunks=self.recovered,
             total_map_chunks=self.total_map_chunks,
+            lost_mb=self.lost_mb,
+            reexec_mb=self.reexec_mb,
         )
 
 
@@ -582,6 +663,10 @@ class _MultiSim:
         #: broken invariant cannot balloon memory on a long run
         self.violations: List[str] = []
         self._audit = any(g.cfg.audit for g in runs)
+        #: substrate-wide dead workers (from the substrate FailureTrace) —
+        #: jobs injected after the kill inherit the dead state
+        self._dead_m: set = set()
+        self._dead_r: set = set()
 
         nS, nM, nR = substrate.nS, substrate.nM, substrate.nR
         trace = substrate.trace_for
@@ -625,9 +710,22 @@ class _MultiSim:
             group = [g for g in roots if g.cfg.start_time == start]
             self.at(start, "seed_jobs", tuple(g.idx for g in group))
         for g in self.runs:
-            if g.cfg.fail_mapper is not None:
-                j, tf = g.cfg.fail_mapper
-                self.at(tf, "fail_mapper", g, j)
+            self._schedule_job_failures(g)
+        if self.sub.failures:
+            for ev in self.sub.failures:
+                if ev.kind == "mapper_kill":
+                    self.at(ev.time, "fail_mapper_all", ev.node)
+                elif ev.kind == "reducer_kill":
+                    self.at(ev.time, "fail_reducer_all", ev.node)
+                else:  # cluster_partition
+                    self.at(ev.time, "partition", ev.cluster, ev.t_repair)
+
+    def _schedule_job_failures(self, g: _JobRun) -> None:
+        """Book job ``g``'s per-job fault script (kills only — fabric
+        faults live on the substrate)."""
+        for ev in g.cfg.failures:
+            fn = "fail_mapper" if ev.kind == "mapper_kill" else "fail_reducer"
+            self.at(ev.time, fn, g, ev.node)
 
     # -- pipeline stage linkage --------------------------------------------
     def link_stages(
@@ -819,6 +917,9 @@ class _MultiSim:
                  "shuf_created_mb", g.shuf_created_mb),
                 ("reduced_mb", g.reduced_mb,
                  "shuf_landed_mb", g.shuf_landed_mb),
+                # bytes voided by failures must be exactly re-dispatched:
+                # no silent byte creation or loss around a fault
+                ("reexec_mb", g.reexec_mb, "lost_mb", g.lost_mb),
             )
             for name_a, a, name_b, b in checks:
                 if not close(a, b):
@@ -848,7 +949,7 @@ class _MultiSim:
 
     def run(self) -> ScheduleSimResult:
         if (not self._started and self.runs
-                and all(g.cfg.vectorized for g in self.runs)):
+                and all(g.cfg.mode == "event_vec" for g in self.runs)):
             return self._run_vectorized()
         self._start()
         while self._heap:
@@ -885,16 +986,21 @@ class _MultiSim:
         self._pump_link(link)
 
     def _pump_link(self, link: LinkResource):
-        if link.busy or not link.queue:
+        if link.busy or link.down or not link.queue:
             return
         tr = link.queue.pop(0)
         link.busy = True
         link.current = tr
+        link.serial += 1
         dur = tr.size / link.rate_at(self.now)
         link.stats.record(self.now, tr.enqueued, dur, tr.size, tr.run.idx)
-        self.at(self.now + dur, "link_done", link, tr)
+        self.at(self.now + dur, "link_done", link, tr, link.serial)
 
-    def _ev_link_done(self, link: LinkResource, tr: _Transfer):
+    def _ev_link_done(self, link: LinkResource, tr: _Transfer, serial=None):
+        if serial is not None and serial != link.serial:
+            # a partition revoked this service mid-flight; the completion is
+            # void and the payload was already re-queued at partition time
+            return
         link.busy = False
         link.current = None
         getattr(self, "_ev_" + tr.fn)(*tr.args)
@@ -931,7 +1037,7 @@ class _MultiSim:
         g.map_unfinished[j] += 1
         g.total_map_unfinished += 1
         self._send_push(g, i, j, c)
-        self._replicate(g, i, j, size)
+        self._replicate(g, i, j, c)
 
     def _push_ops(self, g: _JobRun) -> List[Tuple[int, int, float]]:
         """The job's push chunks as (source, mapper, MB) in seeding order."""
@@ -946,10 +1052,13 @@ class _MultiSim:
                 ops.extend((i, j, amount / n_chunks) for _ in range(n_chunks))
         return ops
 
-    def _replicate(self, g: _JobRun, i: int, j: int, size: float):
+    def _replicate(self, g: _JobRun, i: int, j: int, c: _Chunk):
         """Write replication-1 extra copies of a push chunk (replica targets
-        never run map work; they only consume link capacity)."""
+        never run map work; they only consume link capacity — until the
+        origin mapper dies, when a landed replica becomes the cheapest
+        recovery source)."""
         sub, cfg = self.sub, g.cfg
+        size = c.size
         for r in range(cfg.replication - 1):
             if cfg.cross_cluster_replication:
                 candidates = [
@@ -972,12 +1081,16 @@ class _MultiSim:
             g.push_inflight[j] += 1
             g.total_push_inflight += 1
             self._link_send(self.push_links[i][tgt], g, size,
-                            "replica_done", (g, j))
+                            "replica_done", (g, c, j, tgt))
 
-    def _ev_replica_done(self, g: _JobRun, j: int):
+    def _ev_replica_done(self, g: _JobRun, c: _Chunk, j: int, tgt: int):
         g.push_end = max(g.push_end, self.now)
         g.push_inflight[j] -= 1
         g.total_push_inflight -= 1
+        if g.map_alive[tgt]:
+            if c.replicas is None:
+                c.replicas = []
+            c.replicas.append(tgt)
         b = g.cfg.barriers[0]
         if g.dep_pending:
             # a pending stage source may still route data anywhere: every
@@ -1000,6 +1113,12 @@ class _MultiSim:
         if not g.map_alive[j]:
             self._recover_chunk(g, j, c)
             return
+        self._deliver_push(g, j, c)
+
+    def _deliver_push(self, g: _JobRun, j: int, c: _Chunk):
+        """Land chunk ``c`` at live mapper ``j``: ledger, then queue or
+        gate per the push/map barrier.  Shared by arrival over the push
+        link and zero-cost local delivery from an on-node replica."""
         if not c.landed:
             c.landed = True
             g.landed_mb += c.size
@@ -1067,8 +1186,19 @@ class _MultiSim:
 
     def _emit_shuffle(self, g: _JobRun, j: int, c: _Chunk):
         b = g.cfg.barriers[1]
+        y = g.plan.y
+        if not g.red_alive.all():
+            # mask dead reducers and renormalize — new emissions must not
+            # target a dead node (the guard keeps no-failure runs on the
+            # exact float path of the original expression)
+            live = np.where(g.red_alive, y, 0.0)
+            if live.sum() <= 1e-12:
+                live = np.where(g.red_alive, 1.0, 0.0)
+                if live.sum() == 0:
+                    raise RuntimeError("all reducers dead")
+            y = live / live.sum()
         for k in range(self.sub.nR):
-            amount = g.p.alpha * c.size * g.plan.y[k]
+            amount = g.p.alpha * c.size * y[k]
             if amount <= 1e-9:
                 continue
             sc = _Chunk(next(self._cid), float(amount), j)
@@ -1098,10 +1228,19 @@ class _MultiSim:
                         "shuffle_arrive", (g, j, k, sc))
 
     def _ev_shuffle_arrive(self, g: _JobRun, j: int, k: int, sc: _Chunk):
-        g.shuffle_end = max(g.shuffle_end, self.now)
-        g.shuf_landed_mb += sc.size
         g.shuf_inflight[k] -= 1
         g.total_shuf_inflight -= 1
+        if not g.red_alive[k]:
+            # the reducer died while this emission was in flight: the
+            # payload bounces — void it and re-emit to surviving reducers
+            g.reduce_outstanding[k] -= 1
+            g.shuf_created_mb -= sc.size
+            g.lost_mb += sc.size
+            g.wasted_mb += sc.size
+            self._reemit_shuffle(g, j, sc.size)
+            return
+        g.shuffle_end = max(g.shuffle_end, self.now)
+        g.shuf_landed_mb += sc.size
         b = g.cfg.barriers[2]
         if b == "P":
             self.reducers[k].enqueue(g, sc, self.now)
@@ -1153,6 +1292,7 @@ class _MultiSim:
             g.reduced_mb += sc.size
             g.delivered_out[k] += sc.size
             g.reduce_outstanding[k] -= 1
+            g.reduced_by[sc.src, k] += sc.size
         else:
             g.wasted_mb += sc.size
         self._pump_reduce(k)
@@ -1235,6 +1375,8 @@ class _MultiSim:
 
     # -- dynamics: failure recovery ----------------------------------------------
     def _ev_fail_mapper(self, g: _JobRun, j: int):
+        if not g.map_alive[j]:
+            return  # already dead (per-job script + substrate trace overlap)
         g.map_alive[j] = False
         node = self.mappers[j]
         lost = [c for c in node.job_chunks(g) if not c.done]
@@ -1247,12 +1389,25 @@ class _MultiSim:
             self._recover_chunk(g, j, c)
 
     def _recover_chunk(self, g: _JobRun, dead: int, c: _Chunk):
-        """Re-push a lost chunk from its source to the job's best surviving
+        """Re-execute a lost chunk: promote a landed replica on a surviving
+        mapper (zero-cost local delivery — the copy is already on disk
+        there), else re-push from the source to the job's best surviving
         mapper."""
         g.recovered += 1
+        g.lost_mb += c.size
         alive = np.flatnonzero(g.map_alive)
         if alive.size == 0:
             raise RuntimeError("all mappers dead")
+        holders = [int(t) for t in (c.replicas or ()) if g.map_alive[t]]
+        if holders:
+            tgt = holders[int(np.argmax(self.sub.C_m[holders]))]
+            if c.owner >= 0 and c.owner != tgt:
+                g.map_unfinished[c.owner] -= 1
+                g.map_unfinished[tgt] += 1
+                c.owner = tgt
+            g.reexec_mb += c.size
+            self._deliver_push(g, tgt, c)
+            return
         i = c.src
         tgt = int(alive[np.argmax(self.sub.B_sm[i, alive])])
         if c.owner >= 0 and c.owner != tgt:
@@ -1260,10 +1415,181 @@ class _MultiSim:
             g.map_unfinished[tgt] += 1
             c.owner = tgt
         g.wasted_mb += c.size
+        g.reexec_mb += c.size
         g.push_inflight[tgt] += 1
         g.total_push_inflight += 1
         self._link_send(self.push_links[i][tgt], g, c.size,
                         "push_arrive", (g, i, tgt, c))
+
+    def _ev_fail_reducer(self, g: _JobRun, k: int):
+        """Reducer ``k`` dies for job ``g``: every byte it held —
+        queued, barrier-gated, mid-service, even already reduced — is
+        void.  The claw-back nets the conservation ledger and pools the
+        volume back at its origin mappers for re-emission toward the
+        surviving reducers."""
+        if not g.red_alive[k]:
+            return  # already dead (per-job script + substrate trace overlap)
+        if (self._shuffle_final(g) and g.total_shuf_inflight == 0
+                and int(g.reduce_outstanding.sum()) == 0):
+            # the job already committed its output — a later node death
+            # cannot un-deliver it (completion is the durability point)
+            return
+        g.red_alive[k] = False
+        node = self.reducers[k]
+        pool = np.zeros(self.sub.nM)
+        # landed-but-unreduced chunks queued at the node or barrier-gated
+        clawed = [sc for h, sc, _ in node.queue if h is g and not sc.done]
+        clawed += [sc for sc in g.red_gated[k] if not sc.done]
+        node.queue = [(h, sc, t) for h, sc, t in node.queue if h is not g]
+        g.red_gated[k].clear()
+        for sc in clawed:
+            pool[sc.src] += sc.size
+            g.shuf_landed_mb -= sc.size
+            g.shuf_created_mb -= sc.size
+            g.reduce_outstanding[k] -= 1
+            g.lost_mb += sc.size
+            g.wasted_mb += sc.size
+        # un-started emissions queued on the shuffle links toward k are
+        # simply pulled back (nothing spent yet); a transfer mid-service
+        # is committed and bounces on arrival (_ev_shuffle_arrive)
+        for j in range(self.sub.nM):
+            link = self.shuf_links[j][k]
+            kept = []
+            for tr in link.queue:
+                if tr.run is g and tr.fn == "shuffle_arrive":
+                    sc = tr.args[3]
+                    pool[sc.src] += sc.size
+                    g.shuf_inflight[k] -= 1
+                    g.total_shuf_inflight -= 1
+                    g.reduce_outstanding[k] -= 1
+                    g.shuf_created_mb -= sc.size
+                    g.lost_mb += sc.size
+                else:
+                    kept.append(tr)
+            link.queue = kept
+        # the chunk mid-service on the dead node dies with it: marking it
+        # done sends its pending reduce_done into the wasted branch
+        if node.current is g and node.current_chunk is not None \
+                and not node.current_chunk.done:
+            sc = node.current_chunk
+            pool[sc.src] += sc.size
+            g.shuf_landed_mb -= sc.size
+            g.shuf_created_mb -= sc.size
+            g.reduce_outstanding[k] -= 1
+            g.lost_mb += sc.size
+            sc.done = True
+        # output already reduced at k is void too — un-deliver it by
+        # provenance (a finalized reducer's output has been handed to
+        # downstream stages and cannot be clawed back)
+        if not g.reducer_final[k]:
+            for j in range(self.sub.nM):
+                lost_red = float(g.reduced_by[j, k])
+                if lost_red <= 1e-9:
+                    continue
+                pool[j] += lost_red
+                g.reduced_mb -= lost_red
+                g.shuf_landed_mb -= lost_red
+                g.shuf_created_mb -= lost_red
+                g.delivered_out[k] -= lost_red
+                g.wasted_mb += lost_red
+                g.lost_mb += lost_red
+            g.reduced_by[:, k] = 0.0
+        for j in range(self.sub.nM):
+            if pool[j] > 1e-9:
+                self._reemit_shuffle(g, j, float(pool[j]))
+
+    def _reemit_shuffle(self, g: _JobRun, j: int, amount: float) -> None:
+        """Re-emit ``amount`` MB of mapper ``j``'s shuffle output toward
+        the surviving open reducers — the plan's ``y`` renormalized over
+        ``red_alive & ~reducer_final`` (uniform fallback when the plan
+        routed everything to dead nodes), chunked at ``cfg.chunk_mb``."""
+        y = np.asarray(g.plan.y)
+        open_r = g.red_alive & ~g.reducer_final
+        if not open_r.any():
+            raise RuntimeError("all reducers dead")
+        shares = np.where((y > 1e-9) & open_r, y, 0.0)
+        if shares.sum() <= 0:
+            shares = np.where(open_r, 1.0, 0.0)
+        shares *= amount / shares.sum()
+        b1 = g.cfg.barriers[1]
+        for k in range(self.sub.nR):
+            if shares[k] <= 1e-9:
+                continue
+            n = max(int(np.ceil(shares[k] / g.cfg.chunk_mb)), 1)
+            for _ in range(n):
+                sc = _Chunk(next(self._cid), shares[k] / n, j)
+                g.shuf_created_mb += sc.size
+                g.reexec_mb += sc.size
+                g.shuf_inflight[k] += 1
+                g.total_shuf_inflight += 1
+                g.reduce_outstanding[k] += 1
+                if b1 == "P":
+                    self._send_shuffle(g, j, k, sc)
+                else:
+                    g.shuf_gated[j].append((k, sc))
+        if b1 == "P" or g.dep_pending:
+            return
+        node = self.mappers[j]
+        if b1 == "L" and g.map_unfinished[j] == 0 \
+                and not (node.busy and node.current is g):
+            self._open_shuffle_gate(g, j)
+        elif b1 == "G" and g.total_map_unfinished == 0 \
+                and g.total_push_inflight == 0:
+            self._open_shuffle_gate(g, j)
+
+    # -- substrate-wide failures (the FailureTrace) -------------------------------
+    def _ev_fail_mapper_all(self, j: int):
+        self._dead_m.add(int(j))
+        for g in self.runs:
+            if g.map_alive[j]:
+                self._ev_fail_mapper(g, j)
+
+    def _ev_fail_reducer_all(self, k: int):
+        self._dead_r.add(int(k))
+        for g in self.runs:
+            if g.red_alive[k]:
+                self._ev_fail_reducer(g, k)
+
+    def _partition_links(self, cluster: int) -> List[LinkResource]:
+        """Every link severed by partitioning ``cluster`` away (one
+        endpoint inside, one outside)."""
+        push_cut, shuf_cut = self.sub.partition_cut(cluster)
+        links: List[LinkResource] = []
+        for i, row in enumerate(self.push_links):
+            for j, link in enumerate(row):
+                if push_cut[i, j]:
+                    links.append(link)
+        for j, row in enumerate(self.shuf_links):
+            for k, link in enumerate(row):
+                if shuf_cut[j, k]:
+                    links.append(link)
+        return links
+
+    def _ev_partition(self, cluster: int, t_repair):
+        """Sever every link crossing the cluster boundary: the in-service
+        transfer fails immediately (its payload is lost and re-queued at the
+        FRONT of the link, where a plan swap can still pull it back and
+        re-route it), queued transfers park — also revocable by a swap."""
+        for link in self._partition_links(cluster):
+            link.down += 1
+            if link.current is not None:
+                tr = link.current
+                g = tr.run
+                g.lost_mb += tr.size
+                g.reexec_mb += tr.size
+                g.wasted_mb += tr.size
+                link.queue.insert(0, tr)
+                link.busy = False
+                link.current = None
+                link.serial += 1
+        if t_repair is not None:
+            self.at(float(t_repair), "partition_repair", cluster)
+
+    def _ev_partition_repair(self, cluster: int):
+        for link in self._partition_links(cluster):
+            link.down -= 1
+            if not link.down:
+                self._pump_link(link)
 
     # -- online control plane: observe ------------------------------------------
     def snapshot(self) -> ProgressSnapshot:
@@ -1279,6 +1605,7 @@ class _MultiSim:
                 prog = dataclasses.replace(
                     JobProgress.fresh(g.p, job=g.idx), released=False,
                     map_alive=g.map_alive.copy(),
+                    red_alive=g.red_alive.copy(),
                 )
                 jobs.append(prog)
                 continue
@@ -1313,8 +1640,14 @@ class _MultiSim:
                         if cur.fn == "push_arrive":
                             c = cur.args[3]
                             if not c.done:
-                                committed_push[cur.args[1], cur.args[2]] \
-                                    += c.size
+                                if not g.map_alive[cur.args[2]]:
+                                    # destined to a dead mapper: it will
+                                    # bounce into recovery, so the planner
+                                    # may still re-route it
+                                    resid_push[cur.args[1]] += c.size
+                                else:
+                                    committed_push[cur.args[1], cur.args[2]] \
+                                        += c.size
                         elif (hit := stolen_dest(cur)) is not None:
                             committed_push[hit[1].src, hit[0]] += hit[1].size
             for j, row in enumerate(self.shuf_links):
@@ -1329,7 +1662,13 @@ class _MultiSim:
                             and cur.fn == "shuffle_arrive":
                         sc = cur.args[3]
                         if not sc.done:
-                            committed_shuffle[cur.args[1], cur.args[2]] += sc.size
+                            if not g.red_alive[cur.args[2]]:
+                                # destined to a dead reducer: it bounces
+                                # back into the pool on arrival
+                                pool[cur.args[1]] += sc.size
+                            else:
+                                committed_shuffle[cur.args[1], cur.args[2]] \
+                                    += sc.size
             for j, node in enumerate(self.mappers):
                 at_mapper[j] += sum(
                     c.size for h, c, _ in node.queue if h is g and not c.done
@@ -1360,6 +1699,7 @@ class _MultiSim:
                 committed_shuffle=committed_shuffle, at_reducer=at_reducer,
                 alpha=float(g.p.alpha), total_push_mb=float(g.p.D.sum()),
                 map_alive=g.map_alive.copy(),
+                red_alive=g.red_alive.copy(),
             )
             if prog.remaining_mb()["reduce"] <= 1e-9:
                 prog = dataclasses.replace(prog, done=True)
@@ -1398,12 +1738,15 @@ class _MultiSim:
             self.runs.append(g)
             self._audit = self._audit or cfg.audit
             idxs.append(g.idx)
-            if cfg.fail_mapper is not None:
-                # raw fail time, exactly as _start() schedules it offline —
-                # a past time simply fires on the next dispatch (a worker
-                # that died before this job arrived is already dead)
-                j, tf = cfg.fail_mapper
-                self.at(tf, "fail_mapper", g, j)
+            # raw fail times, exactly as _start() schedules them offline —
+            # a past time simply fires on the next dispatch (a worker that
+            # died before this job arrived is already dead)
+            self._schedule_job_failures(g)
+            # substrate-wide kills that already fired apply immediately
+            for j in self._dead_m:
+                g.map_alive[j] = False
+            for k in self._dead_r:
+                g.red_alive[k] = False
         for start in sorted({self.runs[i].cfg.start_time for i in idxs}):
             group = tuple(
                 i for i in idxs if self.runs[i].cfg.start_time == start
@@ -1470,10 +1813,17 @@ class _MultiSim:
         drained_j = set()
         for i, chunks in pulled.items():
             total = sum(c.size for c in chunks)
+            # a severed link parks everything queued on it until repair —
+            # routing re-split mass there would pin the job to the repair
+            # time, so only reachable mappers receive it
+            up = np.array([not self.push_links[i][j].down
+                           for j in range(nM)])
             desired = np.where(
-                (x[i] > 1e-9) & g.map_alive, total * x[i], 0.0
+                (x[i] > 1e-9) & g.map_alive & up, total * x[i], 0.0
             )
             if desired.sum() <= 0:  # new row dead/unreachable: spread alive
+                desired = np.where(g.map_alive & up, total / max(nM, 1), 0.0)
+            if desired.sum() <= 0:  # every path severed: park per plan
                 desired = np.where(g.map_alive, total / max(nM, 1), 0.0)
             # assign inside the eligible set only — an excluded mapper's
             # zero deficit must never beat an over-assigned eligible one
@@ -1531,18 +1881,26 @@ class _MultiSim:
 
         # a finalized reducer's output has already been handed to the
         # downstream stage sources — routing new volume there would be
-        # silently dropped, so the re-split only spreads over open reducers
-        # (all of them, for runs without stage children)
-        open_r = ~g.reducer_final
+        # silently dropped, so the re-split only spreads over open *live*
+        # reducers (all of them, for failure-free runs without stage
+        # children)
+        open_r = (~g.reducer_final) & g.red_alive
         for j in range(nM):
+            # mask reducers behind a severed link: queued mass routed there
+            # would park until repair and pin the makespan to it (the plan
+            # may carry harmless dust on degraded paths — the executor must
+            # not turn that dust into a repair-time wait)
+            up = np.array([not self.shuf_links[j][k].down
+                           for k in range(nR)])
+            reach = open_r & up if (open_r & up).any() else open_r
             for amount, gated in ((pool_sent[j], False), (pool_gated[j], True)):
                 if amount <= 1e-9:
                     continue
-                shares = np.where((y > 1e-9) & open_r, amount * y, 0.0)
+                shares = np.where((y > 1e-9) & reach, amount * y, 0.0)
                 if shares.sum() <= 0:
                     # all-final is impossible while shuffle volume is still
                     # pooled (finality requires zero outstanding chunks)
-                    shares = np.where(open_r, amount / max(open_r.sum(), 1),
+                    shares = np.where(reach, amount / max(reach.sum(), 1),
                                       0.0)
                 shares *= amount / max(shares.sum(), 1e-12)
                 for k in range(nR):
@@ -1580,6 +1938,20 @@ class _MultiSim:
                 and self._shuffle_final(g) and drained_k:
             for k in range(nR):
                 self._open_reduce_gate(g, k)
+
+    def set_speculation(self, idx: int, on: bool,
+                        threshold: Optional[float] = None) -> None:
+        """Toggle speculative execution for job ``idx`` mid-flight — the
+        fault-reaction knob an online policy can flip per decision (e.g.
+        duplicate straggling map work once a failure has been observed).
+        ``threshold`` optionally retunes ``spec_threshold`` at the same
+        time.  Takes effect at the next idle-worker trigger; clones
+        already racing are unaffected."""
+        g = self.runs[idx]
+        kw: Dict[str, object] = {"speculation": bool(on)}
+        if threshold is not None:
+            kw["spec_threshold"] = float(threshold)
+        g.cfg = dataclasses.replace(g.cfg, **kw)
 
     # -- vectorized frozen-plan fast path ----------------------------------
     #
@@ -1622,7 +1994,7 @@ class _MultiSim:
             raise RuntimeError(
                 f"vectorized executor: out-of-order enqueue on {res.name} "
                 "(cross-stage interleaving); rerun with "
-                "SimConfig(vectorized=False)"
+                'SimConfig(mode="event")'
             )
         trace = res.trace
         starts = np.empty(n)
@@ -1698,12 +2070,18 @@ class _MultiSim:
         return ends
 
     def _vec_check_support(self):
+        if self.sub.failures:
+            raise ValueError(
+                "vectorized executor: the substrate carries a "
+                "FailureTrace — failure recovery needs the scalar event "
+                'loop (SimConfig(mode="event"))'
+            )
         for g in self.runs:
             c = g.cfg
             bad = [name for name, flag in (
                 ("speculation", c.speculation),
                 ("stealing", c.stealing),
-                ("fail_mapper", c.fail_mapper is not None),
+                ("failures", bool(c.failures)),
                 ("compute_noise", c.compute_noise > 0),
                 ("replication>1", c.replication != 1),
             ) if flag]
@@ -1711,7 +2089,7 @@ class _MultiSim:
                 raise ValueError(
                     f"vectorized executor: job {g.idx} uses "
                     f"{'/'.join(bad)} — dynamics need the scalar event "
-                    "loop (SimConfig(vectorized=False))"
+                    'loop (SimConfig(mode="event"))'
                 )
 
     @staticmethod
@@ -1768,7 +2146,7 @@ class _MultiSim:
                     f"vectorized executor: root job {g.idx} feeds "
                     "downstream stages but seeds no push chunks — its "
                     "reducers never finalize and the pipeline starves; "
-                    "run with SimConfig(vectorized=False)"
+                    'run with SimConfig(mode="event")'
                 )
 
         # static per-job tables for the hot gathers
@@ -1850,7 +2228,7 @@ class _MultiSim:
                     raise RuntimeError(
                         f"vectorized executor: stage job {g.idx} never "
                         "fully releases (an upstream reducer deadlocked); "
-                        "rerun with SimConfig(vectorized=False)"
+                        'rerun with SimConfig(mode="event")'
                     )
             rels.sort()
             for rel_t, gi, k in rels:
@@ -2127,7 +2505,7 @@ class _MultiSim:
                     raise RuntimeError(
                         f"vectorized executor: stage parent {gi} produced "
                         "no anchor event; rerun with "
-                        "SimConfig(vectorized=False)"
+                        'SimConfig(mode="event")'
                     )
                 anchor = float(anchor)
                 for k in range(nR):

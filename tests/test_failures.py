@@ -1,0 +1,352 @@
+"""Tests for the FailureTrace fault subsystem: the redesigned
+fault/SimConfig API (deprecated spellings stay byte-identical), typed
+failure injection with conservation, replica re-execution, recovery-aware
+residual pricing, and the ``reactive_failover`` online policy."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import GeoJob, GeoSchedule
+from repro.core.makespan import BARRIERS_GGL, CostModel
+from repro.core.optimize import (
+    OnlineConfig,
+    available_online_policies,
+    get_online_config,
+)
+from repro.core.plan import ExecutionPlan, uniform_plan
+from repro.core.platform import FailureEvent, FailureTrace, Substrate, \
+    planetlab_platform
+from repro.core.simulate import SimConfig, open_schedule, simulate, \
+    simulate_schedule
+
+
+def pair_substrate() -> Substrate:
+    """Two single-node clusters over a thin WAN — failures on one side
+    force traffic (or recovery) across the slow cut."""
+    return Substrate(
+        B_sm=np.array([[200.0, 1.0], [1.0, 200.0]]),
+        B_mr=np.array([[200.0, 2.0], [2.0, 200.0]]),
+        C_m=np.array([100.0, 100.0]),
+        C_r=np.array([80.0, 80.0]),
+        cluster_s=np.array([0, 1]),
+        cluster_m=np.array([0, 1]),
+        cluster_r=np.array([0, 1]),
+        name="pair",
+    )
+
+
+# ---------------------------------------------------------------------------
+# the redesigned SimConfig API: deprecated spellings normalize, warn, and
+# stay byte-identical
+# ---------------------------------------------------------------------------
+
+
+class TestDeprecatedSpellings:
+    def test_fail_mapper_tuple_warns_and_normalizes(self):
+        with pytest.warns(DeprecationWarning, match="fail_mapper"):
+            old = SimConfig(barriers=BARRIERS_GGL, fail_mapper=(1, 7.0))
+        new = SimConfig(barriers=BARRIERS_GGL,
+                        failures=[FailureEvent.mapper_kill(1, 7.0)])
+        # both spellings collapse onto the same canonical state
+        assert old.fail_mapper is None
+        assert old.failures == (FailureEvent.mapper_kill(1, 7.0),)
+        assert old == new
+
+    def test_fail_mapper_tuple_byte_identical_result(self):
+        p = planetlab_platform(4, alpha=1.0, seed=3)
+        plan = uniform_plan(p)
+        with pytest.warns(DeprecationWarning, match="fail_mapper"):
+            old = simulate(p, plan, SimConfig(barriers=BARRIERS_GGL,
+                                              fail_mapper=(0, 5.0)))
+        new = simulate(p, plan, SimConfig(
+            barriers=BARRIERS_GGL,
+            failures=[FailureEvent.mapper_kill(0, 5.0)]))
+        assert old.as_dict() == new.as_dict()
+
+    def test_vectorized_flag_warns_and_maps_to_mode(self):
+        with pytest.warns(DeprecationWarning, match="event_vec"):
+            old = SimConfig(vectorized=True)
+        assert old.mode == "event_vec" and old.vectorized is False
+        assert old == SimConfig(mode="event_vec")
+
+    def test_vectorized_flag_byte_identical_result(self):
+        p = planetlab_platform(4, alpha=1.0, seed=3)
+        plan = uniform_plan(p)
+        with pytest.warns(DeprecationWarning, match="event_vec"):
+            cfg = SimConfig(chunk_mb=32.0, vectorized=True, audit=True)
+        old = simulate_schedule([(p, plan, cfg)])
+        new = simulate_schedule([(p, plan, SimConfig(
+            chunk_mb=32.0, mode="event_vec", audit=True))])
+        assert old.violations == [] and old.as_dict() == new.as_dict()
+
+    def test_vectorized_conflicts_with_fluid(self):
+        with pytest.warns(DeprecationWarning, match="event_vec"):
+            with pytest.raises(ValueError, match="conflicts"):
+                SimConfig(vectorized=True, mode="fluid")
+
+    def test_cluster_partition_is_not_a_per_job_fault(self):
+        with pytest.raises(ValueError, match="Substrate.with_failures"):
+            SimConfig(failures=[
+                FailureEvent.cluster_partition(0, 10.0, 20.0)])
+
+    def test_failures_entries_type_checked(self):
+        with pytest.raises(TypeError, match="FailureEvent"):
+            SimConfig(failures=[(0, 10.0)])
+
+
+# ---------------------------------------------------------------------------
+# the FailureTrace on the substrate
+# ---------------------------------------------------------------------------
+
+
+class TestFailureTrace:
+    def test_with_failures_sorts_and_exposes_times(self):
+        sub = pair_substrate().with_failures([
+            FailureEvent.reducer_kill(1, 50.0),
+            FailureEvent.cluster_partition(0, 10.0, 30.0),
+        ])
+        assert isinstance(sub.failures, FailureTrace)
+        assert sub.failure_times() == (10.0, 30.0, 50.0)
+
+    def test_at_folds_failures_into_capacities(self):
+        sub = pair_substrate().with_failures([
+            FailureEvent.reducer_kill(1, 50.0),
+        ])
+        before, after = sub.at(49.0), sub.at(51.0)
+        assert after.C_r[1] < before.C_r[1] * 1e-2
+        assert after.C_r[0] == before.C_r[0]
+
+
+# ---------------------------------------------------------------------------
+# conservation through every failure mechanism
+# ---------------------------------------------------------------------------
+
+
+class TestFailureConservation:
+    def test_reducer_kill_claws_back_and_reemits(self):
+        p = planetlab_platform(4, alpha=1.0, seed=3)
+        plan = uniform_plan(p)
+        healthy = simulate(p, plan, SimConfig(barriers=BARRIERS_GGL))
+        t_kill = healthy.shuffle_end * 0.6  # mid-shuffle
+        res = simulate_schedule([(p, plan, SimConfig(
+            barriers=BARRIERS_GGL, audit=True,
+            failures=[FailureEvent.reducer_kill(0, t_kill)]))])
+        j = res.jobs[0]
+        assert res.violations == []
+        assert j.lost_mb > 0
+        assert j.lost_mb == pytest.approx(j.reexec_mb, rel=1e-6)
+        assert np.isfinite(res.makespan)
+        assert res.makespan >= healthy.makespan
+
+    def test_per_job_and_substrate_kill_identical(self):
+        """A substrate-wide reducer_kill on a single-job schedule is the
+        same fault as the per-job spelling — byte-for-byte."""
+        sub = pair_substrate()
+        v = sub.view(np.array([2000.0, 2000.0]), 1.0, name="job")
+        plan = uniform_plan(v)
+        per_job = simulate_schedule(
+            [(v, plan, SimConfig(
+                barriers=BARRIERS_GGL, audit=True,
+                failures=[FailureEvent.reducer_kill(1, 23.4)]))],
+            substrate=sub)
+        fabric = simulate_schedule(
+            [(v, plan, SimConfig(barriers=BARRIERS_GGL, audit=True))],
+            substrate=sub.with_failures(
+                [FailureEvent.reducer_kill(1, 23.4)]))
+        assert per_job.violations == [] and fabric.violations == []
+        assert per_job.as_dict() == fabric.as_dict()
+
+    def test_partition_parks_and_resumes(self):
+        """A cluster partition dooms in-flight cross-cut transfers and
+        parks queued ones; repair re-transmits them — conserved, and the
+        makespan grows with the outage length."""
+        sub = pair_substrate()
+        v = sub.view(np.array([2000.0, 2000.0]), 1.0, name="job")
+        plan = uniform_plan(v)
+        spans = []
+        for t_repair in (40.0, 120.0):
+            res = simulate_schedule(
+                [(v, plan, SimConfig(barriers=BARRIERS_GGL, audit=True))],
+                substrate=sub.with_failures([
+                    FailureEvent.cluster_partition(0, 10.0, t_repair)]))
+            j = res.jobs[0]
+            assert res.violations == []
+            assert j.lost_mb == pytest.approx(j.reexec_mb, rel=1e-6)
+            spans.append(res.makespan)
+        assert spans[1] > spans[0]
+
+    def test_failure_after_completion_is_noop(self):
+        p = planetlab_platform(2, alpha=1.0, seed=0)
+        plan = uniform_plan(p)
+        done = simulate(p, plan, SimConfig(barriers=BARRIERS_GGL))
+        late = simulate(p, plan, SimConfig(
+            barriers=BARRIERS_GGL, audit=True,
+            failures=[FailureEvent.reducer_kill(0, done.makespan * 10)]))
+        assert late.makespan == pytest.approx(done.makespan, rel=1e-9)
+        assert late.lost_mb == 0.0 and late.reexec_mb == 0.0
+
+
+# ---------------------------------------------------------------------------
+# replica re-execution
+# ---------------------------------------------------------------------------
+
+
+class TestReplicaRecovery:
+    def test_replica_promotion_beats_source_repush(self):
+        """With replication>=2 a mapper kill promotes the surviving
+        replica *locally*: the recovery penalty must be a small fraction
+        of what re-pushing the lost volume over the thin source links
+        would cost."""
+        sub = Substrate(
+            B_sm=np.array([[5.0, 5.0]]),
+            B_mr=np.array([[200.0, 200.0], [200.0, 200.0]]),
+            C_m=np.array([100.0, 100.0]),
+            C_r=np.array([80.0, 80.0]),
+            cluster_s=np.array([0]),
+            cluster_m=np.array([1, 1]),
+            cluster_r=np.array([1, 1]),
+            name="replicated",
+        )
+        v = sub.view(np.array([1000.0]), 1.0, name="job")
+        plan = uniform_plan(v)
+        base = dict(barriers=BARRIERS_GGL, chunk_mb=64.0, replication=2,
+                    audit=True)
+        healthy = simulate_schedule([(v, plan, SimConfig(**base))],
+                                    substrate=sub)
+        t_kill = healthy.jobs[0].push_end + 2.3  # mid-map, push complete
+        failed = simulate_schedule([(v, plan, SimConfig(
+            failures=[FailureEvent.mapper_kill(0, t_kill)], **base))],
+            substrate=sub)
+        j = failed.jobs[0]
+        assert failed.violations == []
+        assert j.recovered_chunks > 0
+        assert j.lost_mb > 0
+        assert j.lost_mb == pytest.approx(j.reexec_mb, rel=1e-6)
+        repush_s = j.lost_mb / float(np.asarray(sub.B_sm).sum())
+        penalty = failed.makespan - healthy.makespan
+        assert penalty < 0.5 * repush_s
+
+
+# ---------------------------------------------------------------------------
+# recovery-aware residual pricing
+# ---------------------------------------------------------------------------
+
+
+class TestPostFailurePricing:
+    def test_post_failure_snapshot_prices_like_des_replay(self):
+        """Under all-global barriers the DES is exact against the analytic
+        model, so the post-failure snapshot priced through
+        price_residual_shared must agree with the engine's own remaining
+        time to 1e-6 — the planner's view of a broken schedule is the
+        executor's."""
+        sub = Substrate(
+            B_sm=np.array([[100.0]]),
+            B_mr=np.array([[50.0, 50.0]]),
+            C_m=np.array([80.0]),
+            C_r=np.array([40.0, 40.0]),
+            cluster_s=np.zeros(1, dtype=int),
+            cluster_m=np.zeros(1, dtype=int),
+            cluster_r=np.array([0, 1]),
+            name="pricing",
+        )
+        v = sub.view(np.array([1000.0]), 1.0, name="job")
+        # everything on r1; its death forces a full re-emission to r0
+        plan = ExecutionPlan(x=np.ones((1, 1)), y=np.array([0.0, 1.0]))
+        barriers = ("G", "G", "G")
+        t_kill = 51.7  # mid-reduce at r1; r0 and every link are idle
+        eng = open_schedule(
+            [(v, plan, SimConfig(
+                barriers=barriers, chunk_mb=64.0, audit=True,
+                failures=[FailureEvent.reducer_kill(1, t_kill)]))],
+            substrate=sub)
+        eng.run_until(t_kill, inclusive=True)
+        prog = eng.snapshot().jobs[0]
+        assert not prog.red_alive[1] and prog.red_alive[0]
+        cm = CostModel(v, barriers)
+        priced_shared = float(
+            cm.price_residual_shared([prog], [plan])[0]["makespan"])
+        priced_solo = cm.residual_makespan(prog, plan)
+        res = eng.run()
+        actual = res.makespan - t_kill
+        assert res.violations == []
+        assert priced_shared == pytest.approx(actual, abs=1e-6)
+        assert priced_solo == pytest.approx(actual, abs=1e-6)
+
+    def test_undeliver_reducer_moves_landed_back_to_pool(self):
+        from repro.core.makespan import JobProgress
+        p = planetlab_platform(2, alpha=1.0, seed=0)
+        fresh = JobProgress.fresh(p)
+        prog = dataclasses.replace(
+            fresh,
+            at_reducer=np.array([30.0, 10.0] + [0.0] * (p.nR - 2)),
+        )
+        undone = prog.undeliver_reducer(1)
+        assert not undone.red_alive[1]
+        assert float(undone.at_reducer[1]) == 0.0
+        assert float(undone.shuffle_pool.sum()) == pytest.approx(
+            float(prog.shuffle_pool.sum()) + 10.0)
+
+
+# ---------------------------------------------------------------------------
+# the online loop: reactive_failover, speculation-as-a-knob, frozen gate
+# ---------------------------------------------------------------------------
+
+
+class TestOnlineFailover:
+    def test_reactive_failover_policy_registered(self):
+        assert "reactive_failover" in available_online_policies()
+        ocfg = get_online_config("reactive_failover")
+        assert ocfg.shared is True
+        assert ocfg.speculation is True
+
+    def test_set_speculation_flips_the_knob_online(self):
+        p = planetlab_platform(2, alpha=1.0, seed=0)
+        eng = open_schedule([(p, uniform_plan(p), SimConfig())])
+        assert eng.runs[0].cfg.speculation is False
+        eng.set_speculation(0, True)
+        assert eng.runs[0].cfg.speculation is True
+        eng.set_speculation(0, False, threshold=2.0)
+        assert eng.runs[0].cfg.speculation is False
+        assert eng.runs[0].cfg.spec_threshold == 2.0
+
+    def test_infinite_hysteresis_with_failures_is_static(self):
+        """hysteresis=inf freezes the control gate: an online run through
+        a mapper kill plus a substrate reducer kill reproduces the frozen
+        schedule byte-for-byte."""
+        sub = pair_substrate().with_failures(
+            [FailureEvent.reducer_kill(1, 23.4)])
+        v = sub.view(np.array([2000.0, 2000.0]), 1.0, name="job")
+        plan = uniform_plan(v)
+        cfg = SimConfig(barriers=BARRIERS_GGL, chunk_mb=128.0,
+                        failures=[FailureEvent.mapper_kill(0, 11.2)])
+        sched = GeoSchedule(
+            [GeoJob(v).with_plan(plan, BARRIERS_GGL)]).with_plans()
+        report = sched.run_online(policy="reactive", cfg=cfg,
+                                  online=OnlineConfig(hysteresis=np.inf))
+        ref = simulate_schedule([(v, plan, cfg)], substrate=sub)
+        assert report.swaps == ()
+        assert report.makespan_online == ref.makespan
+        for got, want in zip(report.sim.jobs, ref.jobs):
+            assert got.phases() == want.phases()
+            assert got.lost_mb == want.lost_mb
+            assert got.reexec_mb == want.reexec_mb
+
+    def test_online_report_as_dict_is_json_pure(self):
+        sub = pair_substrate().with_failures(
+            [FailureEvent.reducer_kill(1, 23.4)])
+        v = sub.view(np.array([2000.0, 2000.0]), 1.0, name="job")
+        plan = uniform_plan(v)
+        sched = GeoSchedule(
+            [GeoJob(v).with_plan(plan, BARRIERS_GGL)]).with_plans()
+        report = sched.run_online(
+            policy="reactive_failover",
+            cfg=SimConfig(barriers=BARRIERS_GGL, chunk_mb=128.0),
+            n_restarts=2, steps=40)
+        d = json.loads(json.dumps(report.as_dict()))
+        assert d["policy"] == "reactive_failover"
+        assert d["makespan_online"] == report.makespan_online
+        assert d["n_decisions"] == len(report.decisions)
+        assert d["n_failures_observed"] >= 1
+        assert {"time", "event", "job", "action"} <= set(d["decisions"][0])

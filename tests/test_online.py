@@ -24,7 +24,8 @@ from repro.core.optimize import (
     replan,
 )
 from repro.core.plan import ExecutionPlan, uniform_plan
-from repro.core.platform import CapacityTrace, Substrate, planetlab_platform
+from repro.core.platform import CapacityTrace, FailureEvent, \
+    Substrate, planetlab_platform
 from repro.core.simulate import (
     SimConfig,
     open_schedule,
@@ -382,7 +383,7 @@ class TestSwapAndInject:
         sub = pair_substrate()
         v = sub.view(np.array([4000.0, 2000.0]), 1.0)
         cfg = SimConfig(barriers=BARRIERS_GGL, chunk_mb=50.0,
-                        fail_mapper=(1, 3.0))
+                        failures=[FailureEvent.mapper_kill(1, 3.0)])
         eng = open_schedule([(v, uniform_plan(v), cfg)], substrate=sub)
         eng.run_until(3.0, inclusive=True)  # the worker is dead now
         recovered_at_fail = eng.runs[0].recovered
@@ -410,7 +411,7 @@ class TestSwapAndInject:
         sub = pair_substrate()
         v = sub.view(np.array([4000.0, 2000.0]), 1.0)
         cfg = SimConfig(barriers=BARRIERS_GGL, chunk_mb=50.0,
-                        fail_mapper=(0, 5.0))
+                        failures=[FailureEvent.mapper_kill(0, 5.0)])
         eng = open_schedule([(v, uniform_plan(v), cfg)], substrate=sub)
         eng.run_until(5.0, inclusive=True)
         jp = eng.snapshot().jobs[0]
@@ -599,7 +600,7 @@ class TestOnlinePolicies:
         sub = pair_substrate()
         v = sub.view(np.array([4000.0, 2000.0]), 1.0, name="doomed")
         cfg = SimConfig(barriers=BARRIERS_GGL, chunk_mb=100.0,
-                        fail_mapper=(0, 10.0))
+                        failures=[FailureEvent.mapper_kill(0, 10.0)])
         sched = GeoSchedule(
             [GeoJob(v).with_plan(uniform_plan(v), BARRIERS_GGL)]
         ).with_plans()

@@ -12,7 +12,7 @@ import pytest
 from repro.analysis.audit import patch_tiebreak
 from repro.core.fluid import FluidSim
 from repro.core.plan import uniform_plan
-from repro.core.platform import planetlab_platform
+from repro.core.platform import FailureEvent, planetlab_platform
 from repro.core.simulate import SimConfig, open_schedule, simulate_schedule
 from repro.core.topology import scale_job_mix, scale_tier_substrate
 
@@ -78,8 +78,8 @@ class TestVectorizedIdentity:
             base_cfg=SimConfig(chunk_mb=32.0, audit=True),
         )
 
-    def _run(self, sub, entries, vectorized, rng=None):
-        jobs = [(p, pl, dataclasses.replace(c, vectorized=vectorized))
+    def _run(self, sub, entries, mode, rng=None):
+        jobs = [(p, pl, dataclasses.replace(c, mode=mode))
                 for p, pl, c in entries]
         eng = open_schedule(jobs, substrate=sub)
         if rng is not None:
@@ -88,13 +88,13 @@ class TestVectorizedIdentity:
 
     def test_byte_identical_under_permuted_tiebreaks(self, entries):
         sub, jobs = entries
-        vec = self._run(sub, jobs, vectorized=True)
+        vec = self._run(sub, jobs, mode="event_vec")
         assert vec.violations == []
-        ref = _result_key(self._run(sub, jobs, vectorized=False))
+        ref = _result_key(self._run(sub, jobs, mode="event"))
         assert _result_key(vec) == ref
         for seed in range(5):
             permuted = self._run(
-                sub, jobs, vectorized=False,
+                sub, jobs, mode="event",
                 rng=np.random.default_rng(seed),
             )
             assert _result_key(permuted) == ref, f"tie-break seed {seed}"
@@ -116,7 +116,7 @@ class TestFluidAccuracy:
     def test_single_job_all_27_triples(self, platform, barriers):
         plan = uniform_plan(platform)
         des = simulate_schedule([(platform, plan, SimConfig(
-            barriers=barriers, chunk_mb=4.0, vectorized=True, audit=True))])
+            barriers=barriers, chunk_mb=4.0, mode="event_vec", audit=True))])
         fluid = simulate_schedule([(platform, plan, SimConfig(
             barriers=barriers, mode="fluid", audit=True))])
         assert des.violations == [] and fluid.violations == []
@@ -130,7 +130,7 @@ class TestFluidAccuracy:
         shadowed job are not part of the fluid contract)."""
         plan = uniform_plan(platform)
         cfg_e = SimConfig(barriers=barriers, chunk_mb=4.0,
-                          vectorized=True, audit=True)
+                          mode="event_vec", audit=True)
         des = simulate_schedule([
             (platform, plan, cfg_e),
             (platform, plan, dataclasses.replace(cfg_e, start_time=30.0,
@@ -187,7 +187,7 @@ class TestFluidRefusals:
     @pytest.mark.parametrize("kwargs,match", [
         (dict(speculation=True), "speculation"),
         (dict(stealing=True), "stealing"),
-        (dict(fail_mapper=(0, 10.0)), "fail_mapper"),
+        (dict(failures=[FailureEvent.mapper_kill(0, 10.0)]), "failures"),
         (dict(compute_noise=0.3), "compute_noise"),
         (dict(replication=2), "replication"),
     ])

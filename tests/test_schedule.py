@@ -21,7 +21,8 @@ from repro.core.optimize import (
     register_schedule_planner,
 )
 from repro.core.plan import uniform_plan
-from repro.core.platform import Substrate, planetlab_platform
+from repro.core.platform import FailureEvent, Substrate, \
+    planetlab_platform
 from repro.core.simulate import (
     SimConfig,
     simulate,
@@ -178,7 +179,8 @@ class TestExecutorEquivalence:
         for cfg in [
             SimConfig(barriers=BARRIERS_GGL, stragglers={("m", 1): 8.0},
                       speculation=True, stealing=True),
-            SimConfig(barriers=BARRIERS_GGL, fail_mapper=(2, 2.0),
+            SimConfig(barriers=BARRIERS_GGL,
+                      failures=[FailureEvent.mapper_kill(2, 2.0)],
                       speculation=True),
             SimConfig(barriers=BARRIERS_GGL, replication=3,
                       cross_cluster_replication=True),
@@ -417,5 +419,6 @@ class TestGeoScheduleFacade:
         assert set(d) == {
             "makespan", "push_end", "map_end", "shuffle_end", "reduce_end",
             "wasted_mb", "recovered_chunks", "total_map_chunks",
+            "lost_mb", "reexec_mb",
         }
         assert all(isinstance(v, float) for v in d.values())

@@ -6,7 +6,7 @@ import pytest
 from repro.core.makespan import BARRIERS_GGL, makespan
 from repro.core.optimize import optimize_plan
 from repro.core.plan import uniform_plan
-from repro.core.platform import planetlab_platform
+from repro.core.platform import FailureEvent, planetlab_platform
 from repro.core.simulate import SimConfig, simulate
 
 
@@ -59,7 +59,8 @@ class TestFaultTolerance:
         failed = simulate(
             platform,
             plan,
-            SimConfig(barriers=BARRIERS_GGL, fail_mapper=(victim, 1.0)),
+            SimConfig(barriers=BARRIERS_GGL,
+                      failures=[FailureEvent.mapper_kill(victim, 1.0)]),
         )
         assert failed.recovered_chunks > 0
         assert failed.makespan >= healthy.makespan  # recovery is not free
@@ -72,7 +73,8 @@ class TestFaultTolerance:
         failed = simulate(
             platform,
             plan,
-            SimConfig(barriers=BARRIERS_GGL, fail_mapper=(0, done * 10)),
+            SimConfig(barriers=BARRIERS_GGL,
+                      failures=[FailureEvent.mapper_kill(0, done * 10)]),
         )
         assert failed.makespan == pytest.approx(done, rel=1e-9)
         assert failed.recovered_chunks == 0
@@ -121,7 +123,7 @@ class TestDynamics:
             SimConfig(barriers=BARRIERS_GGL, speculation=True, stealing=True,
                       stragglers={("m", 1): 8.0}),
             SimConfig(barriers=BARRIERS_GGL, speculation=True,
-                      fail_mapper=(2, 2.0)),
+                      failures=[FailureEvent.mapper_kill(2, 2.0)]),
         ]:
             r = simulate(platform, plan, cfg)
             assert np.isfinite(r.makespan) and r.makespan > 0
