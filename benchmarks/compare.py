@@ -17,8 +17,11 @@ which fails (exit 1) when
   throughput/speedups may only fall so far; improvement is never a
   failure (see ``METRIC_DIRECTIONS`` / ``METRIC_TOLERANCES``).
 
-Wall-clock (``wall_s``) and derived ratios are deliberately *not* gated —
-they vary with the host.  The makespan metrics are modeled/simulated
+Most wall-clock numbers are deliberately *not* gated — they vary with
+the host.  The exceptions carry wide one-sided gates: the scale-tier
+``wall_s`` budgets (they enforce the < 60 s CI ceilings with 2x
+headroom) and throughput/speedup ratios whose acceptance floors are part
+of the scale-wall contract.  The makespan metrics are modeled/simulated
 seconds produced by the deterministic cost model and discrete-event
 executor with fixed seeds, so on a pinned toolchain they reproduce
 closely; the planner metrics ARE wall clock, which is why their gates are
@@ -55,6 +58,7 @@ METRIC_KEYS = frozenset({
     "warm_vs_cold_speedup", "incremental_speedup", "compiles",
     "events_per_s", "speedup_x", "rel_err_pct",
     "failover_margin",
+    "online_margin", "decisions_per_s", "wall_s",
 })
 
 #: per-scenario tolerance overrides (relative; scenarios absent here use
@@ -84,6 +88,12 @@ METRIC_DIRECTIONS = {
     # schedule_failover: the recovery win over the frozen plan may only
     # shrink so far — the acceptance floor is >= 20% margin
     "failover_margin": "higher",
+    # bench_scale_online: the online win over the frozen plan and the
+    # decision throughput may only fall so far; wall-clock may only rise
+    # so far (the 1000-node run carries a < 60 s CI budget)
+    "online_margin": "higher",
+    "decisions_per_s": "higher",
+    "wall_s": "lower",
 }
 
 #: per-metric (leaf key) tolerance overrides — these beat the scenario
@@ -108,6 +118,17 @@ METRIC_TOLERANCES = {
     # deterministic simulated margin (~0.5 at baseline): 0.6 headroom
     # floors it at ~0.2 — the >= 20% failover acceptance criterion
     "failover_margin": 0.6,
+    # bench_scale_online: the margin is deterministic (pinned
+    # solver_cost_s) but the throughput and wall gates are host
+    # wall-clock, so they are wide and one-sided
+    "online_margin": 0.6,
+    "decisions_per_s": 0.75,
+    "wall_s": 1.0,
+    # scenario-scoped override (``scenario:leaf`` beats the bare leaf):
+    # the steered-drain speedup baseline sits just above the >= 5x
+    # acceptance floor, so it gets a tight gate — the ratio is
+    # host-stable because both sides run on the same machine
+    "bench_scale_online:speedup_x": 0.08,
 }
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -154,7 +175,8 @@ def compare(
     ``scenario_tolerances`` overrides ``tolerance`` per scenario (the
     metric path's leading component), defaulting to
     :data:`SCENARIO_TOLERANCES`; ``metric_tolerances`` overrides both per
-    leaf metric key (defaulting to :data:`METRIC_TOLERANCES`).  Deviation
+    leaf metric key (defaulting to :data:`METRIC_TOLERANCES`), with a
+    ``scenario:leaf`` entry beating a bare ``leaf`` entry.  Deviation
     is direction-aware per :data:`METRIC_DIRECTIONS`: a latency metric
     that got *faster* or a throughput metric that got *faster* never
     fails, however far it moved."""
@@ -175,7 +197,9 @@ def compare(
             failures.append(f"metric disappeared: {path}")
             continue
         cur = current[path]
-        tol = metric_overrides.get(leaf, overrides.get(scenario, tolerance))
+        tol = metric_overrides.get(
+            f"{scenario}:{leaf}",
+            metric_overrides.get(leaf, overrides.get(scenario, tolerance)))
         # tiny epsilon floor only (the gated metrics are deterministic
         # model outputs, so sub-second baselines deserve the same relative
         # gate as hundred-second ones)

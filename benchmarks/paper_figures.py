@@ -818,3 +818,175 @@ def bench_scale() -> Dict:
          f"nodes={n_nodes_1k};jobs={len(entries_1k)};"
          f"makespan={res_1k.makespan:.0f}s")
     return out
+
+
+def bench_scale_online() -> Dict:
+    """Online control at the scale tier (ROADMAP §3): steered vectorized
+    drains, fluid capacity traces, and a 1000-node online run.
+
+    Three gated measurements:
+
+    * **steered_100** — the 100-node/100-job mix at fine chunking driven
+      through mid-run decision points (``run_until`` + ``snapshot`` +
+      ``inject`` + ``swap_plan``) on both DES paths.  The steered
+      vectorized drain is gated at >= 5x wall-clock over the scalar
+      steered path with byte-identical results (full ``as_dict``
+      equality, not just makespan).
+    * **traced_fluid** — fluid mode vs per-chunk DES on a substrate with
+      ``CapacityTrace`` drift on every tier (push/map/shuffle/reduce all
+      step mid-run), across a barrier-triple subset: ``rel_err_pct`` is
+      gated one-sided under the documented 2% fluid contract.
+    * **online_1000** — ~10^3 nodes x 100 jobs in fluid mode with a
+      backbone-wide reducer brownout at t=250s: ``reactive_shared``
+      incremental co-replanning against the frozen plan.  The run must
+      finish under the 60 s CI budget; the online margin and decision
+      throughput may only fall so far.
+    """
+    import json as _json
+
+    from repro.core.simulate import open_schedule
+    from repro.core.topology import scale_job_mix, scale_tier_substrate
+
+    # -- steered 100-node tier: scalar vs vectorized drains ----------------
+    sub = scale_tier_substrate(seed=0)
+    entries = scale_job_mix(
+        sub, n_jobs=100, seed=3, base_cfg=SimConfig(chunk_mb=4.0)
+    )
+    CUTS = (600.0, 1800.0)
+
+    def run_steered(vectorized: bool):
+        jobs = [
+            (p, plan, dataclasses.replace(c, vectorized=vectorized))
+            for p, plan, c in entries
+        ]
+        eng = open_schedule(jobs, substrate=sub)
+        t0 = time.perf_counter()
+        for i, cut in enumerate(CUTS):
+            eng.run_until(cut)
+            eng.snapshot()
+            if i == 0:
+                # one decision point: admit a streaming arrival and
+                # cross-swap two incumbent routings mid-flight
+                p0, plan0, c0 = entries[0]
+                eng.inject([(p0, plan0, dataclasses.replace(
+                    c0, vectorized=vectorized, start_time=cut))])
+                eng.swap_plan(0, entries[1][1])
+                eng.swap_plan(1, entries[0][1])
+        res = eng.run()
+        return res, time.perf_counter() - t0
+
+    res_s, wall_scalar = run_steered(vectorized=False)
+    res_v, wall_vec = run_steered(vectorized=True)
+    speedup = wall_scalar / wall_vec
+    identical = (
+        _json.dumps(res_s.as_dict(), sort_keys=True)
+        == _json.dumps(res_v.as_dict(), sort_keys=True)
+    )
+
+    # -- traced fluid vs traced DES ----------------------------------------
+    p = planetlab_platform(4, alpha=1.3, seed=5)
+    plan = uniform_plan(p)
+    tsub = Substrate.of(p).with_traces({
+        "push[s0->m1]": CapacityTrace.step(
+            float(p.B_sm[0, 1]), float(p.B_sm[0, 1]) * 0.25, 40.0),
+        "map[m0]": CapacityTrace.step(
+            float(p.C_m[0]), float(p.C_m[0]) * 0.5, 80.0),
+        "shuffle[m1->r0]": CapacityTrace.step(
+            float(p.B_mr[1, 0]), float(p.B_mr[1, 0]) * 0.3, 150.0),
+        "reduce[r2]": CapacityTrace.step(
+            float(p.C_r[2]), float(p.C_r[2]) * 0.4, 200.0),
+    })
+    view = tsub.view(p.D, p.alpha)
+    rel_errs = {}
+    for b in ("GGL", "GGG", "LLL", "PPP", "LGP"):
+        des = simulate_schedule(
+            [(view, plan, SimConfig(barriers=b, chunk_mb=4.0,
+                                    vectorized=True, audit=True))],
+            substrate=tsub)
+        fl = simulate_schedule(
+            [(view, plan, SimConfig(barriers=b, mode="fluid", audit=True))],
+            substrate=tsub)
+        rel_errs[b] = abs(fl.makespan - des.makespan) / des.makespan
+    rel_err_pct = 100.0 * max(rel_errs.values())
+
+    # -- 1000-node tier: online control under a backbone brownout ----------
+    sub1k0 = scale_tier_substrate(
+        n_regions=12, edges_per_region=40, mappers_per_region=28,
+        n_backbone=4, reducers_per_backbone=45, seed=1,
+    )
+    cluster_r = np.asarray(sub1k0.cluster_r)
+    browned = np.flatnonzero(cluster_r == cluster_r[0])
+    C_r = np.asarray(sub1k0.C_r)
+    sub1k = sub1k0.with_traces({
+        f"reduce[r{k}]": CapacityTrace.step(
+            float(C_r[k]), float(C_r[k]) * 0.05, 250.0)
+        for k in browned
+    })
+    n_nodes_1k = sub1k.nS + sub1k.nM + sub1k.nR
+    entries_1k = scale_job_mix(
+        sub1k, n_jobs=100, seed=3, arrival_spread_s=600.0,
+        base_cfg=SimConfig(mode="fluid"),
+    )
+    # last 10 releases become true streaming arrivals at two instants
+    order = np.argsort([c.start_time for _, _, c in entries_1k])
+    jobs_1k, cfgs = [], []
+    for i in order[:90]:
+        pv, pl, c = entries_1k[int(i)]
+        jobs_1k.append(GeoJob(pv).with_plan(pl, c.barriers))
+        cfgs.append(c)
+    arrivals = []
+    for n, i in enumerate(order[90:]):
+        pv, pl, c = entries_1k[int(i)]
+        arrivals.append(Arrival(GeoJob(pv).with_plan(pl, c.barriers),
+                                300.0 if n < 5 else 480.0, cfg=c))
+    sched = GeoSchedule(jobs_1k).with_plans()
+    t0 = time.perf_counter()
+    report = sched.run_online(
+        policy="reactive_shared", arrivals=arrivals, cfg=cfgs, **_OPT,
+        # pinned decision cost: measured-EMA charges would make the
+        # swap/keep sequence (and the gated makespan) host-dependent
+        online=OnlineConfig(shared=True, hysteresis=1.0, incremental=True,
+                            solver_cost_s=5.0),
+    )
+    wall_1k = time.perf_counter() - t0
+    decisions_per_s = len(report.decisions) / wall_1k if wall_1k else 0.0
+
+    out = {
+        "steered_100": {
+            "n_nodes": sub.nS + sub.nM + sub.nR,
+            "n_jobs": len(entries) + 1,
+            "speedup_x": speedup,
+            "makespan": res_v.makespan,
+            "matches_scalar": bool(identical),
+            "wall_scalar_s": wall_scalar,
+            "wall_vec_s": wall_vec,
+        },
+        "traced_fluid": {
+            "rel_err_pct": rel_err_pct,
+            "worst_triple": max(rel_errs, key=rel_errs.get),
+            "n_scenarios": len(rel_errs),
+        },
+        "online_1000": {
+            "n_nodes": n_nodes_1k,
+            "n_jobs": len(entries_1k),
+            "makespan": report.makespan_online,
+            "static_makespan": report.makespan_static,
+            "online_margin": report.improvement,
+            "decisions": len(report.decisions),
+            "swaps": len(report.swaps),
+            "rejected": len(report.rejected),
+            "decisions_per_s": decisions_per_s,
+            "wall_s": wall_1k,
+        },
+    }
+    emit("scale_online_steered100", wall_vec * 1e6,
+         f"speedup={speedup:.1f}x;identical={identical};"
+         f"makespan={res_v.makespan:.0f}s")
+    emit("scale_online_traced_fluid", 0.0,
+         f"max_rel_err={rel_err_pct:.3f}%;"
+         f"worst={out['traced_fluid']['worst_triple']}")
+    emit("scale_online_1000", wall_1k * 1e6,
+         f"nodes={n_nodes_1k};margin={report.improvement:.0%};"
+         f"decisions_per_s={decisions_per_s:.1f};"
+         f"swaps={len(report.swaps)}")
+    return out

@@ -98,6 +98,7 @@ def main() -> None:
         ("pipeline_chain", F.pipeline_chain),
         ("bench_planner", F.bench_planner),
         ("bench_scale", F.bench_scale),
+        ("bench_scale_online", F.bench_scale_online),
     ]
     if args.scenario:
         known = {name for name, _ in scenarios}

@@ -2,7 +2,8 @@
 
 Three audits over small, solver-free scenarios that cover the executor's
 surface (barrier triples, shared multi-job substrates with capacity drift
-and staggered releases, stage-linked pipelines):
+and staggered releases, stage-linked pipelines, and the flow-level fluid
+executor crossing rate-change events):
 
 * **conservation** — run with ``SimConfig(audit=True)``: the engine checks
   gate-counter sanity after every event and byte conservation (pushed ==
@@ -173,6 +174,25 @@ def _failover_engine() -> _MultiSim:
     )
 
 
+def _traced_fluid_engine():
+    """The shared-online geometry in fluid mode: the same reducer
+    brown-out and push-link decays now hit the flow executor as
+    rate-change events on its event horizon, so the fluid byte ledger
+    and the split-invariance digests both cross capacity drift."""
+    sub = _shared_online_substrate()
+    steady = sub.view(np.array([8000.0, 8000, 0, 0]), 1.0, name="steady")
+    late = sub.view(np.array([0.0, 0, 6000, 6000]), 1.0, name="late")
+    return open_schedule(
+        [
+            (steady, locality_plan(steady),
+             SimConfig(mode="fluid", audit=True)),
+            (late, locality_plan(late),
+             SimConfig(mode="fluid", audit=True, start_time=50.0)),
+        ],
+        substrate=sub,
+    )
+
+
 QUICK_SCENARIOS: Tuple[Tuple[str, Callable[[], _MultiSim]], ...] = (
     ("planetlab_GGL", lambda: _planetlab_engine(("G", "G", "L"))),
     ("planetlab_PPP", lambda: _planetlab_engine(("P", "P", "P"))),
@@ -180,6 +200,7 @@ QUICK_SCENARIOS: Tuple[Tuple[str, Callable[[], _MultiSim]], ...] = (
     ("shared_online", _shared_online_engine),
     ("pipeline_chain", _pipeline_engine),
     ("failover", _failover_engine),
+    ("traced_fluid", _traced_fluid_engine),
 )
 
 
@@ -349,11 +370,86 @@ def _compare(scenario: str, perm: int, base: List[Step],
     return None
 
 
+def _canon9(v):
+    """Canonicalize floats to 9 significant digits: fluid state evolves by
+    ``rem -= rate * dt``, so splitting an interval at a steering boundary
+    legitimately perturbs the last ULP — a real steering leak is
+    macroscopic, so 9 digits keeps the digest byte-stable without hiding
+    one."""
+    if isinstance(v, float):
+        return f"{v:.9g}"
+    if isinstance(v, dict):
+        return tuple(sorted((k, _canon9(x)) for k, x in v.items()))
+    if isinstance(v, (list, tuple)):
+        return tuple(_canon9(x) for x in v)
+    return v
+
+
+def _fluid_digest(snap) -> str:
+    """Canonical fluid-state digest: every residual bucket of every job,
+    plus the per-resource backlog."""
+    parts: List[object] = [_canon9(float(snap.time))]
+    for pr in snap.jobs:
+        parts.append((
+            pr.job, pr.released, pr.done,
+            _canon9(pr.resid_push.tolist()),
+            _canon9(pr.committed_push.tolist()),
+            _canon9(pr.at_mapper.tolist()),
+            _canon9(pr.shuffle_pool.tolist()),
+            _canon9(pr.committed_shuffle.tolist()),
+            _canon9(pr.at_reducer.tolist()),
+        ))
+    parts.append(_canon9(dict(snap.backlog)))
+    return hashlib.sha256(repr(parts).encode()).hexdigest()
+
+
+def _fluid_trajectory(build, cuts: Tuple[float, ...] = ()):
+    """Drain a fluid engine, digesting its state on a fixed observation
+    grid that brackets every capacity-drift step.  Extra steering ``cuts``
+    are run_until boundaries only — they must not change any digest."""
+    eng = build()
+    drift = tuple(getattr(eng.sub, "drift_times", tuple)())
+    grid = sorted({30.0} | set(drift) | {t + 7.5 for t in drift})
+    steps: List[Step] = []
+    for t in sorted(set(grid) | set(cuts)):
+        eng.run_until(t)
+        if t in grid:
+            steps.append((t, _fluid_digest(eng.snapshot()), ("observe",)))
+    res = eng.run()
+    final = hashlib.sha256(
+        repr(_canon9(res.as_dict())).encode()).hexdigest()
+    steps.append((round(res.makespan, 6), final, ("final",)))
+    return steps, res.makespan
+
+
+def _fluid_split_audit(
+    name: str, build, k: int, seed: int
+) -> List[Divergence]:
+    """Determinism for the flow executor: there are no same-timestamp
+    tie-breaks to permute, so the audited property is *split invariance* —
+    ``k`` runs steered through random ``run_until`` boundaries (which
+    straddle the drift steps) must reproduce the unsteered digests and
+    final result exactly."""
+    base, makespan = _fluid_trajectory(build)
+    out: List[Divergence] = []
+    rng = np.random.default_rng(seed)
+    for i in range(1, k + 1):
+        cuts = tuple(float(c) for c in rng.uniform(0.0, makespan, size=3))
+        div = _compare(name, i, base, _fluid_trajectory(build, cuts)[0])
+        if div is not None:
+            out.append(div)
+    return out
+
+
 def determinism_audit(
     name: str, build: Callable[[], _MultiSim], k: int = 5, seed: int = 0
 ) -> List[Divergence]:
     """Run ``build()`` once in natural order and ``k`` times with permuted
-    same-timestamp tie-breaks; report every trajectory divergence."""
+    same-timestamp tie-breaks; report every trajectory divergence.  Fluid
+    engines have no event heap to permute — they get the split-invariance
+    audit of :func:`_fluid_split_audit` instead."""
+    if not hasattr(build(), "_dispatch"):  # a FluidSim
+        return _fluid_split_audit(name, build, k=k, seed=seed)
     base = trajectory(build())
     out: List[Divergence] = []
     for i in range(1, k + 1):
@@ -413,8 +509,9 @@ def snapshot_audit(
                         f"t={snap.time:.1f}: job {prog.job}: negative "
                         f"{phase} residual {mb:.6f}"
                     )
-            monotone = (not g.stage_deps and not g.cfg.failures
-                        and not eng.sub.failures)
+            monotone = (not getattr(g, "stage_deps", None)
+                        and not g.cfg.failures
+                        and not getattr(eng.sub, "failures", None))
             if monotone and prog.job in last:
                 for phase, mb in rem.items():
                     if mb > last[prog.job][phase] + 1e-6:

@@ -80,6 +80,7 @@ from .core.optimize import (
     solver_cache_stats,
     swap_charge,
 )
+from .core.fluid import fluid_score_residual
 from .core.pipeline import PipelineSpec, StageSpec
 from .core.plan import ExecutionPlan, uniform_plan
 from .core.platform import Platform, Substrate
@@ -1156,9 +1157,13 @@ class GeoSchedule:
         exactly), ``reactive`` (re-plan on every arrival / failure /
         capacity-drift event), ``horizon`` (re-plan every ``replan_dt``
         seconds), their schedule-aware, cost-aware variants
-        ``reactive_shared`` / ``horizon_shared``, and
+        ``reactive_shared`` / ``horizon_shared``,
         ``reactive_incremental`` (shared triggers with warm-started
-        incremental solves charged at measured cost).  At each decision
+        incremental solves charged at measured cost), and
+        ``reactive_fluid`` (incremental solves with the replan gate
+        scored by a drift-aware fluid rollout —
+        ``OnlineConfig(candidate_pricing="fluid")`` — so a decision's
+        pricing cost scales with flows, not chunks).  At each decision
         point
         the executor is paused and a
         :class:`~repro.core.simulate.ProgressSnapshot` captured; how the
@@ -1369,17 +1374,44 @@ class GeoSchedule:
                 # one joint solve serves every job: its wall-clock charge
                 # is counted once, pro-rated across the changed records
                 charges[slot] = move + ema.charge_s() / len(changed)
+            before_spans = list(res.before)
+            after_spans = list(res.after)
             savings = max(res.before) - res.makespan
+            strictly_better = bool(changed)
+            if changed and ocfg.candidate_pricing == "fluid":
+                # fluid-rollout gate: price BOTH stacks with the same
+                # drift-aware float64 fluid drain from this instant, and
+                # adopt only on a strict fluid improvement — the
+                # incumbent competes under the pricing in force, so the
+                # never-priced-worse guarantee survives the switch
+                f_entries = [
+                    (eng.runs[idx].p, incumbents[slot],
+                     eng.runs[idx].cfg, jp)
+                    for slot, (idx, jp) in enumerate(live)
+                ]
+                f_before = fluid_score_residual(
+                    self.substrate, f_entries, now=t
+                )
+                f_after = fluid_score_residual(
+                    self.substrate,
+                    [(p, res.plans[slot], c, jp)
+                     for slot, (p, _, c, jp) in enumerate(f_entries)],
+                    now=t,
+                )
+                before_spans, after_spans = f_before, f_after
+                savings = max(f_before) - max(f_after)
+                strictly_better = max(f_after) < max(f_before)
             adopt = bool(
-                changed and np.isfinite(ocfg.hysteresis)
+                changed and strictly_better
+                and np.isfinite(ocfg.hysteresis)
                 and savings > ocfg.hysteresis * sum(charges)
             )
             for slot, (idx, jp) in enumerate(live):
                 if slot not in changed:
                     decisions.append(Decision(
                         time=t, event=kind, job=idx, action="keep",
-                        modeled_before=res.before[slot],
-                        modeled_after=res.before[slot],
+                        modeled_before=before_spans[slot],
+                        modeled_after=before_spans[slot],
                     ))
                     continue
                 if adopt:
@@ -1387,9 +1419,9 @@ class GeoSchedule:
                 decisions.append(Decision(
                     time=t, event=kind, job=idx,
                     action="swap" if adopt else "reject",
-                    modeled_before=res.before[slot],
-                    modeled_after=(res.after[slot] if adopt
-                                   else res.before[slot]),
+                    modeled_before=before_spans[slot],
+                    modeled_after=(after_spans[slot] if adopt
+                                   else before_spans[slot]),
                     charge=charges[slot],
                 ))
 

@@ -29,10 +29,13 @@ engine — ``run_until`` / ``snapshot`` / ``swap_plan`` / ``inject`` /
 ``run`` returning the same :class:`ScheduleSimResult` shape — so
 ``run_online`` / ``replan_schedule`` drive it unchanged.  Because flows
 are continuous, plan swaps are exact re-splits (no chunk re-assignment
-residue).  Event-mode dynamics that are inherently chunk-granular
-(speculation, stealing, worker failure, compute noise, replication,
-capacity traces) and pipeline stage links are rejected at construction
-with a pointer back to ``mode="event"``.
+residue).  :class:`~repro.core.platform.CapacityTrace` drift is
+supported natively: a rate step is just another piecewise-linear event,
+so the engine folds ``Substrate.drift_times()`` into its event horizon
+and re-reads capacities at each step.  Event-mode dynamics that are
+inherently chunk-granular (speculation, stealing, worker failure,
+compute noise, replication) and pipeline stage links are rejected at
+construction with a pointer back to ``mode="event"``.
 
 Only resources a job's plan touches are materialized (no per-pair
 objects), so construction is O(flows), not O(nodes²) — the property
@@ -46,7 +49,7 @@ import numpy as np
 
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .makespan import JobProgress
+from .makespan import JobProgress, _live_plan_arrays
 from .plan import ExecutionPlan
 from .platform import Platform, Substrate
 from .simulate import (
@@ -57,7 +60,7 @@ from .simulate import (
     SimResult,
 )
 
-__all__ = ["FluidSim"]
+__all__ = ["FluidSim", "fluid_score_residual"]
 
 #: volume below which a flow/buffer counts as drained (MB)
 _EPS = 1e-6
@@ -165,22 +168,23 @@ class FluidSim:
         self.runs: List[_FluidJob] = []
         nS, nM, nR = substrate.nS, substrate.nM, substrate.nR
         self.nS, self.nM, self.nR = nS, nM, nR
-        if getattr(substrate, "traces", None):
-            raise ValueError(
-                "fluid mode does not support capacity traces — their "
-                "drift is chunk-event-granular; use SimConfig("
-                'mode="event")'
-            )
         if getattr(substrate, "failures", None):
             raise ValueError(
                 "fluid mode does not support a substrate FailureTrace — "
                 "failure recovery is chunk-event-granular; use SimConfig("
                 'mode="event")'
             )
-        self._B_sm = np.asarray(substrate.B_sm, dtype=np.float64)
-        self._B_mr = np.asarray(substrate.B_mr, dtype=np.float64)
-        self._C_m = np.asarray(substrate.C_m, dtype=np.float64)
-        self._C_r = np.asarray(substrate.C_r, dtype=np.float64)
+        # CapacityTrace drift folds into the event horizon: rates are
+        # piecewise-constant between drift steps, so every step is just
+        # one more rate-change event (_refresh_caps re-reads the folded
+        # capacities, _next_dt never integrates across a step)
+        self._drift = tuple(substrate.drift_times())
+        self._drift_i = 0
+        sub0 = substrate.at(0.0)
+        self._B_sm = np.asarray(sub0.B_sm, dtype=np.float64)
+        self._B_mr = np.asarray(sub0.B_mr, dtype=np.float64)
+        self._C_m = np.asarray(sub0.C_m, dtype=np.float64)
+        self._C_r = np.asarray(sub0.C_r, dtype=np.float64)
         self._st_push = _TierStats(nS * nM, self._B_sm)
         self._st_map = _TierStats(nM, self._C_m)
         self._st_shuf = _TierStats(nM * nR, self._B_mr)
@@ -439,6 +443,10 @@ class FluidSim:
                    if not g.seeded and g.cfg.start_time > self.now]
         if pending:
             dt = min(dt, min(pending) - self.now)
+        if self._drift_i < len(self._drift):
+            # never integrate across a capacity drift step — rates are
+            # only piecewise-constant between them
+            dt = min(dt, self._drift[self._drift_i] - self.now)
         if t_cap is not None:
             dt = min(dt, t_cap - self.now)
         return max(dt, 0.0)
@@ -460,29 +468,40 @@ class FluidSim:
                         self._gated_red):
                 np.clip(buf, 0.0, None, out=buf)
 
+            # backlogs are linear within a constant-rate interval, so the
+            # midpoint value makes the ``∫ backlog dt`` age integral exact
+            # — and therefore invariant to how a steered run_until splits
+            # the interval (a right-endpoint sample is not additive)
             lid = self._pf_src * nM + self._pf_dst
             served = np.zeros(self.nS * nM)
             np.add.at(served, lid, prate)
             backlog = np.zeros(self.nS * nM)
-            np.add.at(backlog, lid, self._pf_rem)
+            np.add.at(backlog, lid, self._pf_rem + prate * (0.5 * dt))
             self._st_push.advance(served, backlog, now, dt)
             done_p = (self._pf_rem <= _EPS) & (prate > 0.0)
             if done_p.any():
                 np.add.at(self._st_push.n_done, lid[done_p], 1)
 
-            self._st_map.advance(m_rate.sum(axis=0),
-                                 self._at_map.sum(axis=0), now, dt)
+            self._st_map.advance(
+                m_rate.sum(axis=0),
+                (self._at_map - (inflow_m - m_rate) * (0.5 * dt))
+                .sum(axis=0),
+                now, dt)
             lid2 = self._sf_j * nR + self._sf_k
             served = np.zeros(nM * nR)
             np.add.at(served, lid2, srate)
             backlog = np.zeros(nM * nR)
-            np.add.at(backlog, lid2, self._sf_rem)
+            np.add.at(backlog, lid2,
+                      self._sf_rem - (inflow_sf - srate) * (0.5 * dt))
             self._st_shuf.advance(served, backlog, now, dt)
             done_s = (self._sf_rem <= _EPS) & (srate > 0.0)
             if done_s.any():
                 np.add.at(self._st_shuf.n_done, lid2[done_s], 1)
-            self._st_red.advance(r_rate.sum(axis=0),
-                                 self._at_red.sum(axis=0), now, dt)
+            self._st_red.advance(
+                r_rate.sum(axis=0),
+                (self._at_red - (inflow_r - r_rate) * (0.5 * dt))
+                .sum(axis=0),
+                now, dt)
         self.now = now + dt
 
     def _settle(self) -> None:
@@ -580,10 +599,31 @@ class FluidSim:
             self._seed(g)
         return bool(due)
 
+    def _refresh_caps(self) -> None:
+        """Fold every capacity-trace step at or before ``now`` into the
+        service-rate arrays (and the per-tier stats denominators, so
+        utilization keeps integrating against the *current* capacity)."""
+        if self._drift_i >= len(self._drift) \
+                or self._drift[self._drift_i] > self.now + 1e-9:
+            return
+        while self._drift_i < len(self._drift) \
+                and self._drift[self._drift_i] <= self.now + 1e-9:
+            self._drift_i += 1
+        sub_t = self.sub.at(self.now)
+        self._B_sm = np.asarray(sub_t.B_sm, dtype=np.float64)
+        self._B_mr = np.asarray(sub_t.B_mr, dtype=np.float64)
+        self._C_m = np.asarray(sub_t.C_m, dtype=np.float64)
+        self._C_r = np.asarray(sub_t.C_r, dtype=np.float64)
+        self._st_push.cap = self._B_sm.reshape(-1)
+        self._st_shuf.cap = self._B_mr.reshape(-1)
+        self._st_map.cap = self._C_m.reshape(-1)
+        self._st_red.cap = self._C_r.reshape(-1)
+
     def _step(self, t_cap: Optional[float]) -> bool:
         """One rate-change event.  Returns False when nothing remains to
         do (before ``t_cap``)."""
         self._release_due()
+        self._refresh_caps()
         rates = self._rates()
         dt = self._next_dt(rates[0], rates[2], rates[3], rates[5],
                            rates[6], rates[8], rates[9], t_cap)
@@ -816,3 +856,153 @@ class FluidSim:
         # next settle (gates never re-close: opened state persists)
         self._rebuild()
         self._settle()
+
+    # -- residual pricing --------------------------------------------------
+    def _seed_residual(self, g: _FluidJob, prog: JobProgress) -> None:
+        """Seed job ``g`` from a :class:`JobProgress` residual instead of
+        its full ``D``: the re-routable buckets follow the job's (current)
+        plan exactly like :func:`repro.core.makespan.residual_volumes`
+        routes them, committed transfers enter on the lanes they are
+        already on, and delivered buffers preload the tier buffers —
+        gated when the barrier in force would still hold them, so
+        ``_settle`` releases them the instant the gate condition holds."""
+        gi = g.idx
+        nM, nR = self.nM, self.nR
+        if prog.done or prog.remaining_mb()["reduce"] <= 1e-9:
+            g.seeded = True
+            g.done = True
+            g._push_done = g._map_done = g._shuffle_done = True
+            g.push_end = g.map_end = g.shuffle_end = self.now
+            g.reduce_end = self.now
+            self._released[gi] = True
+            self._rebuild()
+            return
+        x, y = _live_plan_arrays(prog, g.plan)
+        x = np.asarray(x, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        resid = np.asarray(prog.resid_push, dtype=np.float64)
+        comm_p = np.asarray(prog.committed_push, dtype=np.float64)
+        push: Dict[Tuple[int, int], float] = {}
+        for i in np.flatnonzero(resid > _EPS):
+            row = x[i] if float(x[i].sum()) > 1e-9 \
+                else np.full(nM, 1.0 / nM)
+            for j in np.flatnonzero(row > 1e-9):
+                vol = float(resid[i] * row[j] / row.sum())
+                if vol > _EPS:
+                    key = (int(i), int(j))
+                    push[key] = push.get(key, 0.0) + vol
+        for i, j in zip(*np.nonzero(comm_p > _EPS)):
+            key = (int(i), int(j))
+            push[key] = push.get(key, 0.0) + float(comm_p[i, j])
+        g.push_spec = [[i, j, vol] for (i, j), vol in sorted(push.items())]
+        for i, j, _ in g.push_spec:
+            self._st_push.touch(i * nM + j, gi)
+            self._st_map.touch(j, gi)
+        at_m = np.asarray(prog.at_mapper, dtype=np.float64)
+        pool = np.asarray(prog.shuffle_pool, dtype=np.float64)
+        comm_s = np.asarray(prog.committed_shuffle, dtype=np.float64)
+        at_r = np.asarray(prog.at_reducer, dtype=np.float64)
+        dests = sorted(
+            {j for _, j, _ in g.push_spec}
+            | set(np.flatnonzero(at_m > _EPS).tolist())
+            | set(np.flatnonzero(pool > _EPS).tolist())
+        )
+        ky = np.flatnonzero(y > 1e-9)
+        ysum = float(y[ky].sum()) or 1.0
+        flows: Dict[Tuple[int, int], List[float]] = {}
+        for j in dests:
+            for k in ky:
+                flows[(int(j), int(k))] = [float(y[k] / ysum), 0.0]
+        for j, k in zip(*np.nonzero(comm_s > _EPS)):
+            f = flows.setdefault((int(j), int(k)), [0.0, 0.0])
+            f[1] += float(comm_s[j, k])
+        b0, b1, b2 = g.cfg.barriers
+        if b1 == "P":
+            # no emission gate: pooled map output is queued sends, not
+            # held volume — route it into the flows by the (live) y now
+            for j in np.flatnonzero(pool > _EPS):
+                for k in ky:
+                    flows[(int(j), int(k))][1] += \
+                        float(pool[j] * y[k] / ysum)
+        else:
+            self._pool[gi] = pool
+        g.shuf_spec = [[j, k, share, rem]
+                       for (j, k), (share, rem) in sorted(flows.items())]
+        for j, k, _, _ in g.shuf_spec:
+            self._st_shuf.touch(j * nR + k, gi)
+            self._st_red.touch(k, gi)
+        if b0 == "P":
+            self._at_map[gi] = at_m
+        else:
+            self._gated_map[gi] = at_m
+        if b2 == "P":
+            self._at_red[gi] = at_r
+        else:
+            self._gated_red[gi] = at_r
+        g.seeded = True
+        self._released[gi] = True
+        self._prio[gi] = self._seed_seq
+        self._seed_seq += 1
+        self._open_map[gi] = b0 == "P"
+        self._open_em[gi] = b1 == "P"
+        self._open_red[gi] = b2 == "P"
+        self._rebuild()
+
+
+def fluid_score_residual(
+    substrate: Substrate,
+    entries: Sequence[Tuple[Platform, ExecutionPlan, SimConfig,
+                            JobProgress]],
+    now: float = 0.0,
+) -> List[float]:
+    """Fluid-rollout residual pricing: per-job modeled remaining seconds
+    of ``entries`` (``(platform, plan, cfg, progress)`` per live job)
+    under a shared-capacity **fluid** execution from ``now`` — the
+    ``OnlineConfig(candidate_pricing="fluid")`` counterpart of
+    :func:`repro.core.optimize.score_residual_shared`.
+
+    The rollout seeds one :class:`FluidSim` from the residual buckets
+    (re-routable volume split by each job's plan, committed transfers on
+    their lanes, landed buffers behind the barriers still holding them)
+    and drains it to completion in float64, folding any remaining
+    :class:`~repro.core.platform.CapacityTrace` drift of ``substrate``
+    into the horizon — so unlike the closed-form model it prices a
+    candidate against the capacities it will *actually* see.  Both the
+    incumbent and the candidate stack are priced by the same rollout, so
+    a gate that adopts only on a strict fluid improvement keeps the
+    never-priced-worse guarantee.
+
+    Chunk-granular dynamics (speculation, stealing, failures, compute
+    noise, replication) are stripped from the pricing configs — the
+    rollout is a flow relaxation; per-job dead reducers are still routed
+    around via the live-``y`` mask, like the closed-form path."""
+    sim = FluidSim(substrate, [])
+    sim.now = float(now)
+    sim._started = True
+    # consume drift steps already behind the observation instant and
+    # fold the capacities in force at `now`
+    while sim._drift_i < len(sim._drift) \
+            and sim._drift[sim._drift_i] <= sim.now + 1e-9:
+        sim._drift_i += 1
+    sub_t = substrate.at(sim.now)
+    sim._B_sm = np.asarray(sub_t.B_sm, dtype=np.float64)
+    sim._B_mr = np.asarray(sub_t.B_mr, dtype=np.float64)
+    sim._C_m = np.asarray(sub_t.C_m, dtype=np.float64)
+    sim._C_r = np.asarray(sub_t.C_r, dtype=np.float64)
+    sim._st_push.cap = sim._B_sm.reshape(-1)
+    sim._st_shuf.cap = sim._B_mr.reshape(-1)
+    sim._st_map.cap = sim._C_m.reshape(-1)
+    sim._st_red.cap = sim._C_r.reshape(-1)
+    for platform, plan, cfg, prog in entries:
+        pricing_cfg = dataclasses.replace(
+            cfg, mode="fluid", speculation=False, stealing=False,
+            failures=(), compute_noise=0.0, replication=1, audit=False,
+            start_time=float(now),
+        )
+        gi = sim._admit(platform, plan, pricing_cfg)
+        sim._seed_residual(sim.runs[gi], prog)
+    # open every gate whose condition already holds before the first
+    # rate computation (e.g. push long done behind an L/G barrier)
+    sim._settle()
+    sim._drain(None)
+    return [max(g.reduce_end - float(now), 0.0) for g in sim.runs]

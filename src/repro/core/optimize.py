@@ -1110,20 +1110,18 @@ def _solve_joint_batch(
     pricing; return per-restart (x, y) stacks plus their exact hard-gate
     aggregate objective values."""
 
-    def stacked_volumes(x, y, xp):
-        return [
-            analytic_volumes(D_stack[g], x[g], y[g], alpha_stack[g], xp=xp)
-            for g in range(D_stack.shape[0])
-        ]
-
     def aggregate(x, y, mx, pmax, kap):
-        vols = stacked_volumes(x, y, jnp)
-        eff = shared_effective_volumes(vols, kappa=kap, xp=jnp)
-        spans = jnp.stack([
-            volume_model(*v, B_sm, B_mr, C_m, C_r, barriers, mx, pmax,
-                         xp=jnp)["makespan"]
-            for v in eff
-        ])
+        # one vmapped instance of the volume/pricing graph regardless of J
+        # (a per-job python loop here makes XLA compile time linear in the
+        # job count — see _stacked_effective_volumes)
+        vols = jax.vmap(
+            lambda D, xg, yg, a: analytic_volumes(D, xg, yg, a, xp=jnp)
+        )(D_stack, x, y, alpha_stack)
+        eff = _stacked_effective_volumes(vols, kap)
+        spans = jax.vmap(
+            lambda v: volume_model(*v, B_sm, B_mr, C_m, C_r, barriers, mx,
+                                   pmax, xp=jnp)["makespan"]
+        )(eff)
         if objective == "min_max_slowdown":
             spans = spans / refs * scale  # keep the tau schedule's units
         return mx(spans)
@@ -1149,11 +1147,48 @@ def _solve_joint_batch(
     return jax.vmap(one_restart)(logits_x0, logits_y0)
 
 
+def _stacked_effective_volumes(vols, kappa: float, xp=jnp, bg=None):
+    """Batched :func:`shared_effective_volumes` over job-stacked volumes.
+
+    ``vols`` is a 4-tuple of (J, ...) arrays (one entry per resource
+    class, leading axis = job).  The list-of-tuples original builds J
+    copies of every op into the caller's jit graph — at the 1000-node
+    tier that made XLA compile time scale linearly with live jobs
+    (minutes at J≈90); here the contention inflation is one batched
+    expression regardless of J.
+
+    ``bg`` optionally adds fixed per-resource background demand (a
+    4-tuple of unbatched arrays) to every total: the residual volumes of
+    live jobs *outside* the annealed stack, held at their incumbent
+    routing (see the stack cap in :func:`replan_schedule`)."""
+    out = []
+    for c, V in enumerate(vols):
+        total = V.sum(axis=0, keepdims=True)
+        if bg is not None:
+            total = total + bg[c][None]
+        if kappa > 0:
+            gate = V / (V + kappa)
+        else:
+            gate = xp.where(V > 1e-9, 1.0, 0.0)
+        out.append(V + gate * (total - V))
+    return tuple(out)
+
+
 def _normalized_plans(xs, ys, meta: str) -> "list[ExecutionPlan]":
     """float64-renormalize a stacked (J, nS, nM)/(J, nR) candidate so every
-    per-job plan validates exactly."""
+    per-job plan validates exactly.
+
+    Softmax-epsilon entries are zeroed below 1e-6 of their row max before
+    renormalizing: warm-start logits put ~e^-20 mass on routes the
+    incumbent never used, and at multi-GB job sizes those epsilon routes
+    would otherwise materialize thousands of microscopic flows/chunks in
+    the executors while carrying <1e-6 of the volume."""
+    xs = np.clip(np.asarray(xs, dtype=np.float64), 0.0, None)
+    ys = np.clip(np.asarray(ys, dtype=np.float64), 0.0, None)
+    xs = np.where(xs >= 1e-6 * xs.max(axis=-1, keepdims=True), xs, 0.0)
+    ys = np.where(ys >= 1e-6 * ys.max(axis=-1, keepdims=True), ys, 0.0)
     return [
-        ExecutionPlan.renormalized(np.asarray(xs[g]), np.asarray(ys[g]), meta)
+        ExecutionPlan.renormalized(xs[g], ys[g], meta)
         for g in range(xs.shape[0])
     ]
 
@@ -1318,6 +1353,28 @@ def _incremental_budget(n_restarts: int, steps: int) -> Tuple[int, int]:
     return max(min(n_restarts, 4), 1), max(steps // 8, 25)
 
 
+def _shared_incremental_budget(
+    n_restarts: int, steps: int, n_jobs: int
+) -> Tuple[int, int]:
+    """One warm-start anneal budget for the whole *stack*:
+    :func:`replan_schedule` solves every live job in a single batched
+    anneal whose per-step cost already scales with the live-job count, so
+    the incremental polish divides the per-job step budget by the stack
+    size instead of paying :func:`_incremental_budget` once per job.  The
+    divisor is quantized to powers of two because ``steps`` is a static
+    jit argument — as the live set grows and shrinks across decision
+    points the budget lands on a handful of values (25 / 12 / 8) and the
+    warm solver cache keeps hitting (counter-verify via
+    :func:`solver_cache_stats`).  Floored at 8 steps: the polish starts
+    at the incumbent logits and the float64 selection keeps the
+    never-modeled-worse guarantee regardless of how short it is."""
+    n_eff, steps_eff = _incremental_budget(n_restarts, steps)
+    if n_jobs > 1:
+        div = 1 << int(np.ceil(np.log2(n_jobs)))
+        steps_eff = max(steps_eff // div, 8)
+    return n_eff, steps_eff
+
+
 def _replan_logits(platform, incumbent, n_restarts, seed, incremental):
     """Warm-start logits for one residual re-solve: the incumbent first
     (it must compete), then — full mode — the standard heuristic+random
@@ -1343,6 +1400,14 @@ def _replan_logits(platform, incumbent, n_restarts, seed, incremental):
 #: starts already almost hard (the incumbent is assumed near-optimal) and
 #: the learning rate is dropped so the polish cannot jump basins.
 _INCREMENTAL_ANNEAL = dict(lr=0.05, tau0_frac=0.02, tau1_frac=1e-3)
+
+#: incremental co-replans anneal at most this many live jobs at once (the
+#: most-behind ones); the rest keep their incumbent routing and enter the
+#: solve as fixed background contention.  Keeps a decision point's anneal
+#: tensors — and its wall-clock — flat as jobs accumulate at the scale
+#: tier; the float64 selection still re-prices the full live stack, so
+#: never-modeled-worse is unaffected.
+_INCREMENTAL_STACK_CAP = 16
 
 
 def _degraded_platform(platform: Platform, progress: JobProgress):
@@ -1565,6 +1630,8 @@ def _solve_residual_shared_batch(
                   #                            (J,nM) (J,nM,nR) (J,nR)
     caps_stack,  # 4-tuple stacked over jobs (dead mappers degraded per job)
     alpha_stack,  # (J,)
+    bg_stack,  # 4-tuple unbatched: residual demand of live jobs OUTSIDE
+               # the annealed stack, held at their incumbent routing
     logits_x0,  # (R, J, nS, nM)
     logits_y0,  # (R, J, nR)
     scale,
@@ -1580,20 +1647,19 @@ def _solve_residual_shared_batch(
     the other jobs' residual demand (:func:`shared_effective_volumes`) and
     priced through the shared phase equations — the schedule analogue of
     :func:`_solve_residual_batch`."""
-    J = logits_x0.shape[1]
 
     def aggregate(x, y, mx, pmax, kap):
-        vols = [
-            residual_volumes(*(r[g] for r in resid_stack), alpha_stack[g],
-                             x[g], y[g], xp=jnp)
-            for g in range(J)
-        ]
-        eff = shared_effective_volumes(vols, kappa=kap, xp=jnp)
-        spans = jnp.stack([
-            volume_model(*eff[g], *(c[g] for c in caps_stack), barriers,
-                         mx, pmax, xp=jnp)["makespan"]
-            for g in range(J)
-        ])
+        # one vmapped instance of the volume/pricing graph regardless of J
+        # (a per-job python loop here makes XLA compile time linear in the
+        # live-job count — minutes at the 1000-node/100-job tier)
+        vols = jax.vmap(
+            lambda r, a, xg, yg: residual_volumes(*r, a, xg, yg, xp=jnp)
+        )(resid_stack, alpha_stack, x, y)
+        eff = _stacked_effective_volumes(vols, kap, bg=bg_stack)
+        spans = jax.vmap(
+            lambda v, c: volume_model(*v, *c, barriers, mx, pmax,
+                                      xp=jnp)["makespan"]
+        )(eff, caps_stack)
         return mx(spans)
 
     def loss(params, tau):
@@ -1708,9 +1774,17 @@ def replan_schedule(
 
     ``incremental=True`` is the warm-started cheap mode (mirroring
     :func:`replan_batch`): at most 4 restarts — the incumbent stack plus
-    jittered copies of it — an eighth of the anneal, and a
-    low-temperature schedule.  The float64 selection (and with it the
-    never-modeled-worse guarantee) is identical in both modes.
+    jittered copies of it — and **one shared anneal budget for the whole
+    stack** (:func:`_shared_incremental_budget`: the per-job step budget
+    divided by the power-of-two-quantized live-job count, so the cost of
+    a decision point stays flat as jobs accumulate instead of paying the
+    per-job budget J times over) at a low-temperature schedule.  Past
+    :data:`_INCREMENTAL_STACK_CAP` live jobs only the most-behind ones
+    enter the anneal; the rest keep their incumbent routing and enter the
+    solve as fixed background contention, so the anneal tensors stay
+    bounded at the 1000-node/100-job tier.  The
+    float64 selection (and with it the never-modeled-worse guarantee) is
+    identical in both modes.
     """
     barriers = tuple(barriers)
     if hasattr(progresses, "jobs"):  # a ProgressSnapshot
@@ -1743,12 +1817,29 @@ def replan_schedule(
     eps = 1e-9
     rng = np.random.default_rng(seed)
     n_eff, steps_eff = (
-        _incremental_budget(n_restarts, steps) if incremental
+        _shared_incremental_budget(n_restarts, steps, J) if incremental
         else (n_restarts, steps)
     )
     anneal = _INCREMENTAL_ANNEAL if incremental else {}
-    inc_x = np.stack([np.log(np.asarray(p.x) + eps) for p in live_inc])
-    inc_y = np.stack([np.log(np.asarray(p.y) + eps) for p in live_inc])
+    # incremental stack cap: anneal only the K most-behind live jobs and
+    # hold everyone else at their incumbent routing, folded into the
+    # solver's contention totals as fixed background demand.  Without the
+    # cap the anneal tensors (and the decision's wall-clock) grow linearly
+    # with live jobs — at the 1000-node/100-job tier a single decision
+    # point cost ~45 s.  The f64 selection below still re-prices the FULL
+    # live stack (hot candidates spliced over incumbent plans), so the
+    # never-modeled-worse guarantee is unchanged.
+    if incremental and J > _INCREMENTAL_STACK_CAP:
+        worst = np.argsort(np.asarray(before))[::-1]
+        hot = sorted(int(s) for s in worst[:_INCREMENTAL_STACK_CAP])
+    else:
+        hot = list(range(J))
+    cold = sorted(set(range(J)) - set(hot))
+    hot_prog = [live_prog[s] for s in hot]
+    hot_inc = [live_inc[s] for s in hot]
+    K = len(hot)
+    inc_x = np.stack([np.log(np.asarray(p.x) + eps) for p in hot_inc])
+    inc_y = np.stack([np.log(np.asarray(p.y) + eps) for p in hot_inc])
     lx = [inc_x]
     ly = [inc_y]
     if incremental:
@@ -1757,31 +1848,42 @@ def replan_schedule(
             lx.append(inc_x + rng.normal(0.0, 0.25, size=inc_x.shape))
             ly.append(inc_y + rng.normal(0.0, 0.25, size=inc_y.shape))
     else:
-        lx.append(np.zeros((J, nS, nM)))
-        ly.append(np.zeros((J, nR)))
+        lx.append(np.zeros((K, nS, nM)))
+        ly.append(np.zeros((K, nR)))
         # anti-affinity rotations, as in the offline joint policy: bias
         # different jobs toward different substrate entries
         greedy_x = np.log(substrate.B_sm / substrate.B_sm.max() + eps)
         greedy_y = np.log(substrate.C_r / substrate.C_r.max() + eps)
-        lx.append(np.stack([np.roll(greedy_x, g, axis=1) for g in range(J)]))
-        ly.append(np.stack([np.roll(greedy_y, g) for g in range(J)]))
+        lx.append(np.stack([np.roll(greedy_x, g, axis=1) for g in range(K)]))
+        ly.append(np.stack([np.roll(greedy_y, g) for g in range(K)]))
         while len(lx) < n_eff:
             sigma = rng.uniform(0.3, 3.0)
-            lx.append(rng.normal(0.0, sigma, size=(J, nS, nM)))
-            ly.append(rng.normal(0.0, sigma, size=(J, nR)))
+            lx.append(rng.normal(0.0, sigma, size=(K, nS, nM)))
+            ly.append(rng.normal(0.0, sigma, size=(K, nR)))
     logits_x = jnp.asarray(np.stack(lx[:n_eff]), jnp.float32)
     logits_y = jnp.asarray(np.stack(ly[:n_eff]), jnp.float32)
 
     resid_stack = tuple(
-        jnp.asarray(a, jnp.float32) for a in JobProgress.stack(live_prog)
+        jnp.asarray(a, jnp.float32) for a in JobProgress.stack(hot_prog)
     )
     caps_stack = tuple(
-        jnp.asarray(np.stack([caps[c] for caps in caps_list]), jnp.float32)
+        jnp.asarray(np.stack([caps_list[s][c] for s in hot]), jnp.float32)
         for c in range(4)
     )
     alpha_stack = jnp.asarray(
-        np.array([pr.alpha for pr in live_prog]), jnp.float32
+        np.array([pr.alpha for pr in hot_prog]), jnp.float32
     )
+    bg = [np.zeros((nS, nM)), np.zeros(nM), np.zeros((nM, nR)), np.zeros(nR)]
+    for s in cold:
+        pr, plan = live_prog[s], live_inc[s]
+        v = residual_volumes(
+            pr.resid_push, pr.committed_push, pr.at_mapper, pr.shuffle_pool,
+            pr.committed_shuffle, pr.at_reducer, pr.alpha,
+            *_live_plan_arrays(pr, plan), xp=np,
+        )
+        for c in range(4):
+            bg[c] += v[c]
+    bg_stack = tuple(jnp.asarray(a, jnp.float32) for a in bg)
     total_resid = float(sum(
         pr.remaining_mb()["reduce"] for pr in live_prog
     ))
@@ -1791,15 +1893,18 @@ def replan_schedule(
     # shrinking residuals reuse the compiled solver instead of re-tracing
     kappa = float(10.0 ** (round(np.log10(kappa) * 2.0) / 2.0))
     xs, ys, _ = _solve_residual_shared_batch(
-        resid_stack, caps_stack, alpha_stack, logits_x, logits_y,
+        resid_stack, caps_stack, alpha_stack, bg_stack, logits_x, logits_y,
         jnp.float32(scale), kappa=float(kappa), barriers=barriers,
         steps=steps_eff, **anneal,
     )
 
     best_live, best_after, best_score = live_inc, before, max(before)
     for r in range(int(xs.shape[0])):
-        cand = _normalized_plans(np.asarray(xs[r]), np.asarray(ys[r]),
-                                 "replan_shared")
+        cand_hot = _normalized_plans(np.asarray(xs[r]), np.asarray(ys[r]),
+                                     "replan_shared")
+        cand = list(live_inc)
+        for slot, s in enumerate(hot):
+            cand[s] = cand_hot[slot]
         spans = _score_residual_stack(caps_list, live_prog, cand, barriers)
         if max(spans) < best_score:
             best_live, best_after, best_score = cand, spans, max(spans)
@@ -1853,13 +1958,27 @@ class OnlineConfig:
     once a failure has been observed (duplicate straggling work — a dead
     worker's recovery traffic creates exactly the stragglers speculation
     hedges), ``False`` forces it off, ``None`` (default) leaves each
-    job's :class:`~repro.core.simulate.SimConfig` untouched."""
+    job's :class:`~repro.core.simulate.SimConfig` untouched.
+
+    ``candidate_pricing`` selects how the replan gate scores the
+    incumbent stack against the co-replanned candidate stack.
+    ``"model"`` (default) keeps the closed-form float64 residual model
+    (:func:`score_residual_shared`).  ``"fluid"`` prices **both** stacks
+    with a shared-capacity fluid rollout
+    (:func:`repro.core.fluid.fluid_score_residual`) from the decision
+    instant — folding any remaining capacity drift into the horizon —
+    and adopts the candidate only on a strict fluid improvement, so the
+    incumbent still competes in float64 and the never-priced-worse
+    guarantee carries over to the pricing in force.  Fluid pricing
+    scores the *whole* stack at once and therefore requires
+    ``shared=True``."""
 
     shared: bool = False
     hysteresis: float = 0.0
     solver_cost_s: Optional[float] = None
     incremental: bool = False
     speculation: Optional[bool] = None
+    candidate_pricing: str = "model"
 
     def __post_init__(self):
         if not (self.hysteresis >= 0.0):  # rejects negatives and NaN
@@ -1872,6 +1991,16 @@ class OnlineConfig:
             raise ValueError(
                 f"solver_cost_s must be >= 0 (or None = measured), got "
                 f"{self.solver_cost_s}"
+            )
+        if self.candidate_pricing not in ("model", "fluid"):
+            raise ValueError(
+                'candidate_pricing must be "model" or "fluid", got '
+                f"{self.candidate_pricing!r}"
+            )
+        if self.candidate_pricing == "fluid" and not self.shared:
+            raise ValueError(
+                'candidate_pricing="fluid" prices the whole co-replanned '
+                "stack with one rollout — it requires shared=True"
             )
 
 
@@ -2076,6 +2205,23 @@ def _reactive_incremental_policy(kind, snapshot):
     anneal steps from the incumbent logits) and the hysteresis gate
     charges the measured incremental solve time — the cheap-and-frequent
     corner of the replan-cost trade-off."""
+    return kind in ("arrival", "failure", "drift")
+
+
+@register_online_policy(
+    "reactive_fluid",
+    config=OnlineConfig(shared=True, hysteresis=1.0, incremental=True,
+                        candidate_pricing="fluid"),
+)
+def _reactive_fluid_policy(kind, snapshot):
+    """``reactive_incremental``'s triggers and warm-started shared
+    solves, with the replan gate scored by a **fluid rollout**
+    (``candidate_pricing="fluid"``): incumbent and candidate stacks are
+    both drained through :func:`repro.core.fluid.fluid_score_residual`
+    from the decision instant — drift-aware, float64 — and the swap
+    fires only on a strict fluid improvement that clears the hysteresis
+    charge.  The scale-tier corner of the trade-off: pricing cost grows
+    with flows, not chunks."""
     return kind in ("arrival", "failure", "drift")
 
 

@@ -136,7 +136,9 @@ class SimConfig:
     #:   the determinism auditor certifies race-free).  Dynamics
     #:   (speculation, stealing, failures, noise, replication) are
     #:   rejected; steered engines (``run_until`` / ``snapshot`` /
-    #:   ``swap_plan`` / ``inject``) fall back to the scalar event loop;
+    #:   ``swap_plan`` / ``inject``) drain each segment between decision
+    #:   points through the same scans, falling back to the scalar event
+    #:   loop only when a job's dynamics leave the vectorized vocabulary;
     #: * ``"fluid"``     — continuous flows at shared service rates (the
     #:   scale-tier fast path, see :mod:`repro.core.fluid`).
     mode: str = "event"
@@ -667,6 +669,9 @@ class _MultiSim:
         #: jobs injected after the kill inherit the dead state
         self._dead_m: set = set()
         self._dead_r: set = set()
+        #: cached per-job slowdown tables for steered vectorized drains;
+        #: rebuilt whenever the job count changes (inject)
+        self._vec_slow = None
 
         nS, nM, nR = substrate.nS, substrate.nM, substrate.nR
         trace = substrate.trace_for
@@ -941,10 +946,14 @@ class _MultiSim:
         framing when the decision must observe what happens at that instant
         (e.g. re-planning *after* a worker failure fires)."""
         self._start()
-        while self._heap and (
-            self._heap[0][0] < t or (inclusive and self._heap[0][0] == t)
-        ):
-            self._dispatch()
+        if self._heap and self._vec_steer_eligible():
+            self._vec_drain(t, inclusive)
+        else:
+            while self._heap and (
+                self._heap[0][0] < t
+                or (inclusive and self._heap[0][0] == t)
+            ):
+                self._dispatch()
         self.now = max(self.now, t)
 
     def run(self) -> ScheduleSimResult:
@@ -952,6 +961,12 @@ class _MultiSim:
                 and all(g.cfg.mode == "event_vec" for g in self.runs)):
             return self._run_vectorized()
         self._start()
+        if self._heap and self._vec_steer_eligible():
+            # started (steered) engine: drain everything through the
+            # batched scans; the scalar loop below mops up anything a
+            # drained segment re-scheduled (it never does today, but the
+            # fallback keeps the contract obvious)
+            self._vec_drain(None, True)
         while self._heap:
             self._dispatch()
         if self._audit:
@@ -1597,8 +1612,86 @@ class _MultiSim:
         bucketed by what a re-planner can still control (see
         :class:`repro.core.makespan.JobProgress`), plus per-resource queued
         MB.  Speculative/replica overhead traffic is excluded — it is
-        wasted-work accounting, not residual job volume."""
+        wasted-work accounting, not residual job volume.
+
+        A single pass over every queue buckets in-flight traffic by owning
+        run, so the cost is O(queued transfers + jobs) rather than
+        O(queued transfers x jobs) — at the scale tier (100+ jobs, deep
+        link queues) the per-job rescan used to dominate steered runs."""
         nS, nM, nR = self.sub.nS, self.sub.nM, self.sub.nR
+        # per-run accumulators: resid_push, committed_push, at_mapper,
+        # shuffle_pool, committed_shuffle, at_reducer
+        acc: Dict[int, list] = {
+            id(g): [np.zeros(g.p.nS), np.zeros((g.p.nS, nM)), np.zeros(nM),
+                    np.zeros(nM), np.zeros((nM, nR)), np.zeros(nR)]
+            for g in self.runs if g.seeded
+        }
+
+        def add_push(tr, current: bool):
+            a = acc.get(id(tr.run))
+            if a is None:
+                return
+            if tr.fn == "push_arrive":
+                c = tr.args[3]
+                if not c.done:
+                    if current and tr.run.map_alive[tr.args[2]]:
+                        a[1][tr.args[1], tr.args[2]] += c.size
+                    else:
+                        # queued, or in flight to a dead mapper (it will
+                        # bounce into recovery): the planner may still
+                        # re-route it
+                        a[0][tr.args[1]] += c.size
+            elif tr.fn == "stolen_arrive":
+                # stolen chunks (ownership moved to the thief) are real
+                # residual work in flight to a fixed destination;
+                # speculative clones are overhead (their originals still
+                # sit, counted, in the victim's queue)
+                j, c = tr.args[1], tr.args[2]
+                if c.owner == j and not c.done:
+                    a[1][c.src, j] += c.size
+
+        for row in self.push_links:
+            for link in row:
+                for tr in link.queue:
+                    add_push(tr, current=False)
+                if link.current is not None:
+                    add_push(link.current, current=True)
+        for row in self.shuf_links:
+            for link in row:
+                for tr in link.queue:
+                    if tr.fn == "shuffle_arrive" \
+                            and (a := acc.get(id(tr.run))) is not None:
+                        sc = tr.args[3]
+                        if not sc.done:
+                            a[3][tr.args[1]] += sc.size
+                cur = link.current
+                if cur is not None and cur.fn == "shuffle_arrive" \
+                        and (a := acc.get(id(cur.run))) is not None:
+                    sc = cur.args[3]
+                    if not sc.done:
+                        if not cur.run.red_alive[cur.args[2]]:
+                            # destined to a dead reducer: it bounces
+                            # back into the pool on arrival
+                            a[3][cur.args[1]] += sc.size
+                        else:
+                            a[4][cur.args[1], cur.args[2]] += sc.size
+        for j, node in enumerate(self.mappers):
+            for h, c, _ in node.queue:
+                if not c.done and (a := acc.get(id(h))) is not None:
+                    a[2][j] += c.size
+            if node.current is not None and node.current_chunk is not None \
+                    and not node.current_chunk.done \
+                    and (a := acc.get(id(node.current))) is not None:
+                a[2][j] += node.current_chunk.size
+        for k, node in enumerate(self.reducers):
+            for h, sc, _ in node.queue:
+                if not sc.done and (a := acc.get(id(h))) is not None:
+                    a[5][k] += sc.size
+            if node.current is not None and node.current_chunk is not None \
+                    and not node.current_chunk.done \
+                    and (a := acc.get(id(node.current))) is not None:
+                a[5][k] += node.current_chunk.size
+
         jobs = []
         for g in self.runs:
             if not g.seeded:
@@ -1609,82 +1702,12 @@ class _MultiSim:
                 )
                 jobs.append(prog)
                 continue
-            resid_push = np.zeros(g.p.nS)
-            committed_push = np.zeros((g.p.nS, nM))
-            at_mapper = np.zeros(nM)
-            pool = np.zeros(nM)
-            committed_shuffle = np.zeros((nM, nR))
-            at_reducer = np.zeros(nR)
-            def stolen_dest(tr):
-                """Stolen chunks (ownership moved to the thief) are real
-                residual work in flight to a fixed destination; speculative
-                clones are overhead (their originals still sit, counted, in
-                the victim's queue)."""
-                if tr.run is g and tr.fn == "stolen_arrive":
-                    j, c = tr.args[1], tr.args[2]
-                    if c.owner == j and not c.done:
-                        return j, c
-                return None
-
-            for i, row in enumerate(self.push_links):
-                for link in row:
-                    for tr in link.queue:
-                        if tr.run is g and tr.fn == "push_arrive":
-                            c = tr.args[3]
-                            if not c.done:
-                                resid_push[tr.args[1]] += c.size
-                        elif (hit := stolen_dest(tr)) is not None:
-                            committed_push[hit[1].src, hit[0]] += hit[1].size
-                    cur = link.current
-                    if cur is not None and cur.run is g:
-                        if cur.fn == "push_arrive":
-                            c = cur.args[3]
-                            if not c.done:
-                                if not g.map_alive[cur.args[2]]:
-                                    # destined to a dead mapper: it will
-                                    # bounce into recovery, so the planner
-                                    # may still re-route it
-                                    resid_push[cur.args[1]] += c.size
-                                else:
-                                    committed_push[cur.args[1], cur.args[2]] \
-                                        += c.size
-                        elif (hit := stolen_dest(cur)) is not None:
-                            committed_push[hit[1].src, hit[0]] += hit[1].size
-            for j, row in enumerate(self.shuf_links):
-                for link in row:
-                    for tr in link.queue:
-                        if tr.run is g and tr.fn == "shuffle_arrive":
-                            sc = tr.args[3]
-                            if not sc.done:
-                                pool[tr.args[1]] += sc.size
-                    cur = link.current
-                    if cur is not None and cur.run is g \
-                            and cur.fn == "shuffle_arrive":
-                        sc = cur.args[3]
-                        if not sc.done:
-                            if not g.red_alive[cur.args[2]]:
-                                # destined to a dead reducer: it bounces
-                                # back into the pool on arrival
-                                pool[cur.args[1]] += sc.size
-                            else:
-                                committed_shuffle[cur.args[1], cur.args[2]] \
-                                    += sc.size
-            for j, node in enumerate(self.mappers):
-                at_mapper[j] += sum(
-                    c.size for h, c, _ in node.queue if h is g and not c.done
-                )
-                if node.current is g and node.current_chunk is not None \
-                        and not node.current_chunk.done:
-                    at_mapper[j] += node.current_chunk.size
+            resid_push, committed_push, at_mapper, pool, \
+                committed_shuffle, at_reducer = acc[id(g)]
+            for j in range(nM):
                 at_mapper[j] += sum(c.size for c in g.map_gated[j] if not c.done)
                 pool[j] += sum(sc.size for _, sc in g.shuf_gated[j] if not sc.done)
-            for k, node in enumerate(self.reducers):
-                at_reducer[k] += sum(
-                    sc.size for h, sc, _ in node.queue if h is g and not sc.done
-                )
-                if node.current is g and node.current_chunk is not None \
-                        and not node.current_chunk.done:
-                    at_reducer[k] += node.current_chunk.size
+            for k in range(nR):
                 at_reducer[k] += sum(sc.size for sc in g.red_gated[k] if not sc.done)
             # a stage-linked run's unreleased sources: the upstream output
             # has not landed yet, so the re-planner sees the *modeled*
@@ -1972,11 +1995,14 @@ class _MultiSim:
     # final source release (the scalar ``_recheck_gates`` sweep).  Stage
     # DAGs process in topological strata; a geometry where a later stage
     # would enqueue *behind* already-served work on some resource raises
-    # rather than silently mis-ordering (``run_online``-style steering
-    # likewise falls back to the scalar loop — the fast path is for
-    # frozen-plan scoring).
+    # rather than silently mis-ordering.  ``run_online``-style steering
+    # takes the same scans segment-by-segment via ``_vec_drain`` below,
+    # which swaps the closed-form gates for post-segment counter checks
+    # and materializes still-pending work back into scalar state at each
+    # decision point.
 
-    def _vec_serve(self, res, enq, tie, size, jobv, state, slow=None):
+    def _vec_serve(self, res, enq, tie, size, jobv, state, slow=None,
+                   cut=None, inclusive=False):
         """Exact FIFO replay of one resource's whole queue.  ``enq`` /
         ``tie`` / ``size`` / ``jobv`` (plus per-entry ``slow`` for
         compute nodes) are parallel arrays already sorted by
@@ -1987,7 +2013,16 @@ class _MultiSim:
         the scalar pump.  ``state`` carries ``(avail, last_enq)`` across
         calls; an entry enqueued before already-served work means the
         single-scan FIFO assumption broke (cross-stage interleaving) and
-        is a hard error."""
+        is a hard error.
+
+        ``cut`` bounds a *steered* segment: only services that start
+        strictly before ``cut`` (at-or-before with ``inclusive``) commit
+        — left folds over a prefix equal the full fold's prefix, so the
+        committed floats are exactly the unbounded replay's.  Returns
+        ``(ends, n_committed)``; stats/state are updated over the
+        committed prefix only, and ``ends`` is only meaningful there
+        (the computation may stop early once starts pass the horizon).
+        """
         avail, last_enq = state.get(res, (0.0, _NEG_INF))
         n = enq.shape[0]
         if enq[0] < last_enq:
@@ -1999,6 +2034,7 @@ class _MultiSim:
         trace = res.trace
         starts = np.empty(n)
         ends = np.empty(n)
+        filled = n
         if trace is None:
             if slow is not None:
                 durs = size / (res.rate / slow)
@@ -2009,6 +2045,11 @@ class _MultiSim:
             while i < n:
                 e0 = enq[i]
                 s0 = a if a > e0 else e0
+                if cut is not None and s0 > cut:
+                    # starts are non-decreasing: nothing from here on can
+                    # commit, so the replay may stop
+                    filled = i
+                    break
                 # fold the busy run from s0; the first later entry that
                 # enqueues at-or-after the running end starts a fresh
                 # (idle-gap) segment.  Blocked so a pathological
@@ -2036,6 +2077,9 @@ class _MultiSim:
                 for i in range(n):
                     e0 = enq[i]
                     s = a if a > e0 else e0
+                    if cut is not None and s > cut:
+                        filled = i
+                        break
                     d = size[i] / (trace.at(s) / slow[i])
                     a = s + d
                     durs[i] = d
@@ -2045,29 +2089,39 @@ class _MultiSim:
                 for i in range(n):
                     e0 = enq[i]
                     s = a if a > e0 else e0
+                    if cut is not None and s > cut:
+                        filled = i
+                        break
                     d = size[i] / trace.at(s)
                     a = s + d
                     durs[i] = d
                     starts[i] = s
                     ends[i] = a
             a = float(a)
+        if cut is None:
+            n_c = n
+        else:
+            side = "right" if inclusive else "left"
+            n_c = int(np.searchsorted(starts[:filled], cut, side=side))
+            if n_c == 0:
+                return ends, 0
         st = res.stats
         st.busy_s = float(np.add.accumulate(
-            np.concatenate(([st.busy_s], durs)))[-1])
+            np.concatenate(([st.busy_s], durs[:n_c])))[-1])
         st.waited_s = float(np.add.accumulate(
-            np.concatenate(([st.waited_s], starts - enq)))[-1])
+            np.concatenate(([st.waited_s], starts[:n_c] - enq[:n_c])))[-1])
         st.volume_mb = float(np.add.accumulate(
-            np.concatenate(([st.volume_mb], size)))[-1])
-        st.n_chunks += n
-        st.jobs.update(int(v) for v in np.unique(jobv))
+            np.concatenate(([st.volume_mb], size[:n_c])))[-1])
+        st.n_chunks += n_c
+        st.jobs.update(int(v) for v in np.unique(jobv[:n_c]))
         s0f = float(starts[0])
         if s0f < st.first_busy_s:
             st.first_busy_s = s0f
-        ef = float(ends[-1])
+        ef = float(ends[n_c - 1])
         if ef > st.last_busy_s:
             st.last_busy_s = ef
-        state[res] = (a, float(enq[-1]))
-        return ends
+        state[res] = (float(ends[n_c - 1]), float(enq[n_c - 1]))
+        return ends, n_c
 
     def _vec_check_support(self):
         if self.sub.failures:
@@ -2266,7 +2320,7 @@ class _MultiSim:
                 jb = np.asarray(raw[3], dtype=np.int64)
                 o = np.lexsort((tie, enq))
                 enq, tie, sz, jb = enq[o], tie[o], sz[o], jb[o]
-                ends = self._vec_serve(
+                ends, _ = self._vec_serve(
                     push_links[i][j], enq, tie, sz, jb, state)
                 cols[0].append(ends)
                 cols[1].append(tie)
@@ -2319,7 +2373,7 @@ class _MultiSim:
                     if not sel.shape[0]:
                         continue
                     jb = ajob[sel]
-                    ends = self._vec_serve(
+                    ends, _ = self._vec_serve(
                         mappers[j], aready[sel], seqv[sel], asz[sel], jb,
                         state, slow=slow_m[jb, j])
                     cols[0].append(ends)
@@ -2396,7 +2450,7 @@ class _MultiSim:
                 for key in np.flatnonzero(lcounts):
                     j, k = divmod(int(key), nR)
                     sel = lorder[loff[key]:loff[key + 1]]
-                    ends = self._vec_serve(
+                    ends, _ = self._vec_serve(
                         shuf_links[j][k], eenq[sel], etie[sel], amt[sel],
                         ejob[sel], state)
                     cols[0].append(ends)
@@ -2456,7 +2510,7 @@ class _MultiSim:
                         if not sel.shape[0]:
                             continue
                         jb = sjob[sel]
-                        ends = self._vec_serve(
+                        ends, _ = self._vec_serve(
                             reducers[k], sready[sel], seqr[sel],
                             samt[sel], jb, state, slow=slow_r[jb, k])
                         cols[0].append(ends)
@@ -2526,11 +2580,830 @@ class _MultiSim:
             self._audit_final()
         return self.result()
 
+    # -- vectorized steered drains -----------------------------------------
+    #
+    # ``run_until``/``run`` on a *started* engine drain each segment
+    # between decision points through the same batched per-resource scans
+    # as ``_run_vectorized`` whenever the pending events and every job's
+    # dynamics stay inside the vectorized vocabulary.  Services that start
+    # before the horizon commit (prefix of the same Lindley fold — same
+    # floats as the unbounded replay); everything else materializes back
+    # into scalar state, so ``snapshot``/``swap_plan``/``inject`` and
+    # scalar fallback segments see exactly what the scalar loop would
+    # have built.
+
+    _VEC_STEER_EVENTS = frozenset(
+        {"seed_jobs", "link_done", "map_done", "reduce_done"})
+
+    def _vec_steer_eligible(self) -> bool:
+        """True when a steered segment can take the batched scans —
+        otherwise the caller silently falls back to the scalar loop (both
+        paths are byte-identical on race-free scenarios, so segments may
+        mix freely as dynamics toggle mid-run)."""
+        if not self.runs or self.sub.failures or self.stage_children:
+            return False
+        if self._dead_m or self._dead_r:
+            return False
+        for g in self.runs:
+            c = g.cfg
+            if c.mode != "event_vec" or g.stage_deps:
+                return False
+            if (c.speculation or c.stealing or c.failures
+                    or c.compute_noise > 0 or c.replication != 1):
+                return False
+        return all(ev[2] in self._VEC_STEER_EVENTS for ev in self._heap)
+
+    def _vec_drain(self, cut, inclusive=False):
+        """Drain one steered segment (events before ``cut``; everything
+        when ``cut`` is None) through the vectorized per-resource scans.
+
+        The segment replays exactly like :meth:`_run_vectorized` — same
+        entry ordering, same Lindley folds, same ledger fold order — with
+        three twists that make it safe between decision points:
+
+        * pending heap events fold in: completions that *happen* join
+          their tier's stream (their resource resumes from them), while
+          completions at-or-past the horizon pin their resource busy for
+          the whole segment;
+        * barrier gates resolve by *post-segment counters* (the scalar
+          trigger condition) instead of closed-form final times — a gate
+          whose counter has not drained keeps its chunks gated, to be
+          revisited next segment;
+        * work still pending at the horizon materializes back into
+          scalar state: queues, gated lists, in-service transfer/chunk
+          objects and their heap completion events.
+        """
+        runs = self.runs
+        nM, nR = self.sub.nM, self.sub.nR
+        nJ = len(runs)
+        NEG = _NEG_INF
+
+        def happens(t):
+            return cut is None or t < cut or (inclusive and t == cut)
+
+        fire = [ev for ev in self._heap if happens(ev[0])]
+        if not fire:
+            return
+        fire.sort()
+        keep = [ev for ev in self._heap if not happens(ev[0])]
+        heapq.heapify(keep)
+        self._heap = keep
+
+        BTIE = -(1 << 60)  # boundary completions: first among stream ties
+        CTIE = -(1 << 40)  # carried queue entries: first in FIFO order
+        GTIE = -(1 << 20)  # carried gated flushes: after queues, pre fresh
+        gen = 0
+        gctr = 0
+        t_max = self.now
+        state: Dict[object, Tuple[float, float]] = {}
+        freed: Dict[object, float] = {}
+        if self._vec_slow is None or self._vec_slow[0].shape[0] != nJ:
+            self._vec_slow = (
+                np.array([[g.slowdown("m", j) for j in range(nM)]
+                          for g in runs]),
+                np.array([[g.slowdown("r", k) for k in range(nR)]
+                          for g in runs]),
+            )
+        slow_m, slow_r = self._vec_slow
+
+        def _cat(lst, dtype=np.float64):
+            if not lst:
+                return np.empty(0, dtype=dtype)
+            return np.concatenate(lst)
+
+        def _mat_tr(enq, sz_, jb_, obj, fn, src, loc):
+            if obj is not None:
+                return obj
+            g = runs[int(jb_)]
+            if fn == "push_arrive":
+                c = _Chunk(next(self._cid), float(sz_), src, owner=loc)
+            else:
+                c = _Chunk(next(self._cid), float(sz_), src)
+            return _Transfer(g, float(sz_), fn, (g, src, loc, c),
+                             float(enq))
+
+        def _mat_chunk(sz_, jb_, obj, src_, tier, loc):
+            if obj is not None:
+                return obj
+            if tier == "m":
+                c = _Chunk(next(self._cid), float(sz_), int(src_),
+                           owner=loc)
+                c.landed = True
+            else:
+                c = _Chunk(next(self._cid), float(sz_), int(src_))
+            return c
+
+        def serve_link(link, ready, tie, sz, jb, objs, fn, src, loc, out):
+            """Serve one link's segment queue; committed arrivals append
+            to the tier stream ``out``, the rest materializes."""
+            n = ready.shape[0]
+            if n:
+                o = np.lexsort((tie, ready))
+                ready, tie, sz, jb = ready[o], tie[o], sz[o], jb[o]
+                objs = objs[o]
+            if link.busy:
+                # in flight past the horizon: nothing can start here
+                link.queue.extend(
+                    _mat_tr(ready[i], sz[i], jb[i], objs[i], fn, src, loc)
+                    for i in range(n))
+                return
+            nq = len(link.queue)
+            if nq:
+                qr = np.array([tr.enqueued for tr in link.queue])
+                qt = CTIE + np.arange(nq, dtype=np.int64)
+                qs = np.array([tr.size for tr in link.queue])
+                qj = np.array([tr.run.idx for tr in link.queue],
+                              dtype=np.int64)
+                qo = np.empty(nq, dtype=object)
+                qo[:] = link.queue
+                ready = np.concatenate((qr, ready))
+                tie = np.concatenate((qt, tie))
+                sz = np.concatenate((qs, sz))
+                jb = np.concatenate((qj, jb))
+                objs = np.concatenate((qo, objs))
+                o = np.lexsort((tie, ready))
+                ready, tie, sz, jb = ready[o], tie[o], sz[o], jb[o]
+                objs = objs[o]
+                n += nq
+            if not n:
+                return
+            state[link] = (freed.get(link, 0.0), NEG)
+            ends, n_c = self._vec_serve(link, ready, tie, sz, jb, state,
+                                        cut=cut, inclusive=inclusive)
+            n_fin = n_c
+            if n_c:
+                link.serial += n_c
+                last = float(ends[n_c - 1])
+                if not happens(last):
+                    n_fin = n_c - 1
+                    i = n_c - 1
+                    tr = _mat_tr(ready[i], sz[i], jb[i], objs[i], fn,
+                                 src, loc)
+                    link.busy = True
+                    link.current = tr
+                    self.at(last, "link_done", link, tr, link.serial)
+            if n_fin:
+                chunks = np.empty(n_fin, dtype=object)
+                chunks[:] = [o_.args[3] if o_ is not None else None
+                             for o_ in objs[:n_fin]]
+                out[0].append(ends[:n_fin].copy())
+                out[1].append(tie[:n_fin])
+                out[2].append(sz[:n_fin])
+                out[3].append(jb[:n_fin])
+                out[4].append(chunks)
+                out[5].append(np.full(n_fin, src, dtype=np.int64))
+                out[6].append(np.full(n_fin, loc, dtype=np.int64))
+            link.queue = [
+                _mat_tr(ready[i], sz[i], jb[i], objs[i], fn, src, loc)
+                for i in range(n_c, n)]
+
+        def serve_node(node, ready, tie, sz, jb, objs, srcs, slow_tab,
+                       tier, loc, fn, out):
+            """Serve one compute node's segment queue; committed
+            completions append to ``out``, the rest materializes."""
+            n = ready.shape[0]
+            if n:
+                o = np.lexsort((tie, ready))
+                ready, tie, sz, jb = ready[o], tie[o], sz[o], jb[o]
+                objs, srcs = objs[o], srcs[o]
+            if node.busy:
+                node.queue.extend(
+                    (runs[int(jb[i])],
+                     _mat_chunk(sz[i], jb[i], objs[i], srcs[i], tier, loc),
+                     float(ready[i]))
+                    for i in range(n))
+                return
+            nq = len(node.queue)
+            if nq:
+                qr = np.array([t for (_g, _c, t) in node.queue])
+                qt = CTIE + np.arange(nq, dtype=np.int64)
+                qs = np.array([c.size for (_g, c, _t) in node.queue])
+                qj = np.array([g_.idx for (g_, _c, _t) in node.queue],
+                              dtype=np.int64)
+                qo = np.empty(nq, dtype=object)
+                qo[:] = [c for (_g, c, _t) in node.queue]
+                qsrc = np.array([c.src for (_g, c, _t) in node.queue],
+                                dtype=np.int64)
+                ready = np.concatenate((qr, ready))
+                tie = np.concatenate((qt, tie))
+                sz = np.concatenate((qs, sz))
+                jb = np.concatenate((qj, jb))
+                objs = np.concatenate((qo, objs))
+                srcs = np.concatenate((qsrc, srcs))
+                o = np.lexsort((tie, ready))
+                ready, tie, sz, jb = ready[o], tie[o], sz[o], jb[o]
+                objs, srcs = objs[o], srcs[o]
+                n += nq
+            if not n:
+                return
+            state[node] = (freed.get(node, 0.0), NEG)
+            ends, n_c = self._vec_serve(
+                node, ready, tie, sz, jb, state, slow=slow_tab[jb, loc],
+                cut=cut, inclusive=inclusive)
+            n_fin = n_c
+            if n_c:
+                last = float(ends[n_c - 1])
+                if not happens(last):
+                    n_fin = n_c - 1
+                    i = n_c - 1
+                    c = _mat_chunk(sz[i], jb[i], objs[i], srcs[i], tier,
+                                   loc)
+                    c.started_copies += 1
+                    node.busy = True
+                    node.current = runs[int(jb[i])]
+                    node.current_chunk = c
+                    self.at(last, fn, runs[int(jb[i])], loc, c)
+            if n_fin:
+                for o_ in objs[:n_fin]:
+                    if o_ is not None:
+                        o_.done = True
+                out[0].append(ends[:n_fin].copy())
+                out[1].append(tie[:n_fin])
+                out[2].append(sz[:n_fin])
+                out[3].append(jb[:n_fin])
+                out[4].append(srcs[:n_fin])
+                out[5].append(np.full(n_fin, loc, dtype=np.int64))
+            node.queue = [
+                (runs[int(jb[i])],
+                 _mat_chunk(sz[i], jb[i], objs[i], srcs[i], tier, loc),
+                 float(ready[i]))
+                for i in range(n_c, n)]
+
+        # ---- pass 1: boundary events + seeds -----------------------------
+        arr_b: list = []   # (t, tie, size, jobi, chunk, src i, dest j)
+        comp_b: list = []  # (t, tie, size, jobi, src i, mapper j)
+        sarr_b: list = []  # (t, tie, size, jobi, chunk, src j, reducer k)
+        red_b: list = []   # (t, tie, size, jobi, src j, reducer k)
+        link_fresh: Dict[Tuple[int, int], list] = {}
+        sh_keys: set = set()
+        freed_mj: list = []
+        freed_rk: list = []
+        seed_evs: list = []
+        for pos, (t, _s, fn, args) in enumerate(fire):
+            tie = BTIE + pos
+            if fn == "seed_jobs":
+                seed_evs.append((t, args[0]))
+                continue
+            if t > t_max:
+                t_max = t
+            if fn == "link_done":
+                link, tr = args[0], args[1]
+                freed[link] = t
+                link.busy = False
+                link.current = None
+                g, src, loc, c = tr.args
+                if tr.fn == "push_arrive":
+                    arr_b.append((t, tie, tr.size, g.idx, c, src, loc))
+                    link_fresh.setdefault((src, loc), [])
+                else:
+                    sarr_b.append((t, tie, tr.size, g.idx, c, src, loc))
+                    sh_keys.add((src, loc))
+            elif fn == "map_done":
+                g, j, c = args
+                node = self.mappers[j]
+                freed[node] = t
+                node.busy = False
+                node.current = None
+                node.current_chunk = None
+                c.done = True
+                comp_b.append((t, tie, c.size, g.idx, c.src, j))
+                freed_mj.append(j)
+            else:  # reduce_done
+                g, k, sc = args
+                node = self.reducers[k]
+                freed[node] = t
+                node.busy = False
+                node.current = None
+                node.current_chunk = None
+                sc.done = True
+                red_b.append((t, tie, sc.size, g.idx, sc.src, k))
+                freed_rk.append(k)
+
+        # seeds: round-robin interleave exactly like _ev_seed_jobs
+        for t_seed, idxs in seed_evs:
+            if t_seed > t_max:
+                t_max = t_seed
+            pending = [(runs[i], self._push_ops(runs[i])) for i in idxs]
+            for i in idxs:
+                runs[i].seeded = True
+            sizes: Dict[int, list] = {i: [] for i in idxs}
+            cursors = [0] * len(pending)
+            live = True
+            while live:
+                live = False
+                for slot, (g, ops) in enumerate(pending):
+                    if cursors[slot] >= len(ops):
+                        continue
+                    live = True
+                    i, j, size = ops[cursors[slot]]
+                    cursors[slot] += 1
+                    link_fresh.setdefault((i, j), []).append(
+                        (t_seed, gen, float(size), g.idx))
+                    gen += 1
+                    sizes[g.idx].append(size)
+                    g.push_inflight[j] += 1
+                    g.map_unfinished[j] += 1
+            for i in idxs:
+                g = runs[i]
+                ss = sizes[i]
+                if ss:
+                    g.pushed_mb = self._vec_fold(
+                        g.pushed_mb, np.asarray(ss, dtype=np.float64))
+                g.total_map_chunks += len(ss)
+                g.total_push_inflight += len(ss)
+                g.total_map_unfinished += len(ss)
+
+        # ---- pass 2: push links → arrival stream -------------------------
+        arr_p: Tuple[list, ...] = ([], [], [], [], [], [], [])
+        if arr_b:
+            cols = list(zip(*arr_b))
+            arr_p[0].append(np.asarray(cols[0], dtype=np.float64))
+            arr_p[1].append(np.asarray(cols[1], dtype=np.int64))
+            arr_p[2].append(np.asarray(cols[2], dtype=np.float64))
+            arr_p[3].append(np.asarray(cols[3], dtype=np.int64))
+            bo = np.empty(len(arr_b), dtype=object)
+            bo[:] = cols[4]
+            arr_p[4].append(bo)
+            arr_p[5].append(np.asarray(cols[5], dtype=np.int64))
+            arr_p[6].append(np.asarray(cols[6], dtype=np.int64))
+        for (i, j), fresh in sorted(link_fresh.items()):
+            if fresh:
+                fc = list(zip(*fresh))
+                f_enq = np.asarray(fc[0], dtype=np.float64)
+                f_tie = np.asarray(fc[1], dtype=np.int64)
+                f_sz = np.asarray(fc[2], dtype=np.float64)
+                f_jb = np.asarray(fc[3], dtype=np.int64)
+                f_obj = np.empty(len(fresh), dtype=object)
+            else:
+                f_enq = np.empty(0)
+                f_tie = np.empty(0, dtype=np.int64)
+                f_sz = np.empty(0)
+                f_jb = np.empty(0, dtype=np.int64)
+                f_obj = np.empty(0, dtype=object)
+            serve_link(self.push_links[i][j], f_enq, f_tie, f_sz, f_jb,
+                       f_obj, "push_arrive", i, j, arr_p)
+
+        # ---- pass 3: arrivals → push/map barrier gates -------------------
+        EMPTYF = np.empty(0)
+        EMPTYI = np.empty(0, dtype=np.int64)
+        EMPTYO = np.empty(0, dtype=object)
+        n_arr = sum(a.shape[0] for a in arr_p[0])
+        flushm: Dict[int, list] = {}
+        if n_arr:
+            at = _cat(arr_p[0])
+            atie = _cat(arr_p[1], np.int64)
+            asz = _cat(arr_p[2])
+            ajob = _cat(arr_p[3], np.int64)
+            aobj = _cat(arr_p[4], object)
+            asrc = _cat(arr_p[5], np.int64)
+            adst = _cat(arr_p[6], np.int64)
+            o = np.lexsort((atie, at))
+            at, atie, asz, ajob = at[o], atie[o], asz[o], ajob[o]
+            aobj, asrc, adst = aobj[o], asrc[o], adst[o]
+            if float(at[-1]) > t_max:
+                t_max = float(at[-1])
+            for ob in aobj:
+                if ob is not None:
+                    ob.landed = True
+            arrj = np.full((nJ, nM), NEG)
+            arr_any = np.full(nJ, NEG)
+            arrj[ajob, adst] = at
+            arr_any[ajob] = at
+            seqv = np.arange(n_arr, dtype=np.int64)
+            aready = at.copy()
+            agated = np.zeros(n_arr, dtype=bool)
+            jsort, off = self._vec_by_job(ajob, nJ)
+            for g in runs:
+                gi = g.idx
+                sel = jsort[off[gi]:off[gi + 1]]
+                if not sel.shape[0]:
+                    continue
+                m = float(at[sel[-1]])
+                if m > g.push_end:
+                    g.push_end = m
+                g.landed_mb = self._vec_fold(g.landed_mb, asz[sel])
+                dsel = adst[sel]
+                np.subtract.at(g.push_inflight, dsel, 1)
+                g.total_push_inflight -= int(sel.shape[0])
+                b0 = g.cfg.barriers[0]
+                if b0 == "P":
+                    continue
+                if b0 == "L":
+                    openm = g.push_inflight[dsel] == 0
+                    aready[sel] = arrj[gi, dsel]
+                    agated[sel] = ~openm
+                    for j in np.unique(dsel[openm]):
+                        j = int(j)
+                        if g.map_gated[j]:
+                            trig = float(arrj[gi, j])
+                            for c in g.map_gated[j]:
+                                flushm.setdefault(j, []).append(
+                                    (trig, GTIE + gctr, c.size, gi, c,
+                                     c.src))
+                                gctr += 1
+                            g.map_gated[j].clear()
+                elif g.total_push_inflight == 0:  # G, fully arrived
+                    trig = float(arr_any[gi])
+                    aready[sel] = trig
+                    for j in range(nM):
+                        if g.map_gated[j]:
+                            for c in g.map_gated[j]:
+                                flushm.setdefault(j, []).append(
+                                    (trig, GTIE + gctr, c.size, gi, c,
+                                     c.src))
+                                gctr += 1
+                            g.map_gated[j].clear()
+                else:  # G, still draining: everything parks at the gate
+                    agated[sel] = True
+
+            # gated arrivals park at the barrier in arrival order
+            for idx in np.flatnonzero(agated):
+                g = runs[int(ajob[idx])]
+                c = aobj[idx]
+                if c is None:
+                    c = _Chunk(next(self._cid), float(asz[idx]),
+                               int(asrc[idx]), owner=int(adst[idx]))
+                    c.landed = True
+                g.map_gated[int(adst[idx])].append(c)
+
+        # ---- pass 4: mapper serves → completion stream -------------------
+        comp_p: Tuple[list, ...] = ([], [], [], [], [], [])
+        if comp_b:
+            cols = list(zip(*comp_b))
+            comp_p[0].append(np.asarray(cols[0], dtype=np.float64))
+            comp_p[1].append(np.asarray(cols[1], dtype=np.int64))
+            comp_p[2].append(np.asarray(cols[2], dtype=np.float64))
+            comp_p[3].append(np.asarray(cols[3], dtype=np.int64))
+            comp_p[4].append(np.asarray(cols[4], dtype=np.int64))
+            comp_p[5].append(np.asarray(cols[5], dtype=np.int64))
+        mvisit = set(flushm)
+        mvisit.update(j for j in freed_mj if self.mappers[j].queue)
+        if n_arr:
+            mvisit.update(int(j) for j in np.unique(adst[~agated]))
+        for j in sorted(mvisit):
+            if n_arr:
+                sel = np.flatnonzero(~agated & (adst == j))
+                e_ready, e_tie, e_sz = aready[sel], seqv[sel], asz[sel]
+                e_jb, e_obj, e_src = ajob[sel], aobj[sel], asrc[sel]
+            else:
+                e_ready, e_tie, e_sz = EMPTYF, EMPTYI, EMPTYF
+                e_jb, e_obj, e_src = EMPTYI, EMPTYO, EMPTYI
+            fl = flushm.get(j)
+            if fl:
+                fc = list(zip(*fl))
+                fo = np.empty(len(fl), dtype=object)
+                fo[:] = fc[4]
+                e_ready = np.concatenate(
+                    (np.asarray(fc[0], dtype=np.float64), e_ready))
+                e_tie = np.concatenate(
+                    (np.asarray(fc[1], dtype=np.int64), e_tie))
+                e_sz = np.concatenate(
+                    (np.asarray(fc[2], dtype=np.float64), e_sz))
+                e_jb = np.concatenate(
+                    (np.asarray(fc[3], dtype=np.int64), e_jb))
+                e_obj = np.concatenate((fo, e_obj))
+                e_src = np.concatenate(
+                    (np.asarray(fc[5], dtype=np.int64), e_src))
+            serve_node(self.mappers[j], e_ready, e_tie, e_sz, e_jb,
+                       e_obj, e_src, slow_m, "m", j, "map_done", comp_p)
+
+        # ---- pass 5: completions → shuffle barrier → emissions -----------
+        sarr_p: Tuple[list, ...] = ([], [], [], [], [], [], [])
+        if sarr_b:
+            cols = list(zip(*sarr_b))
+            sarr_p[0].append(np.asarray(cols[0], dtype=np.float64))
+            sarr_p[1].append(np.asarray(cols[1], dtype=np.int64))
+            sarr_p[2].append(np.asarray(cols[2], dtype=np.float64))
+            sarr_p[3].append(np.asarray(cols[3], dtype=np.int64))
+            bo = np.empty(len(sarr_b), dtype=object)
+            bo[:] = cols[4]
+            sarr_p[4].append(bo)
+            sarr_p[5].append(np.asarray(cols[5], dtype=np.int64))
+            sarr_p[6].append(np.asarray(cols[6], dtype=np.int64))
+        shflush: Dict[Tuple[int, int], list] = {}
+        n_comp = sum(a.shape[0] for a in comp_p[0])
+        n_em = 0
+        if n_comp:
+            ct = _cat(comp_p[0])
+            ctie = _cat(comp_p[1], np.int64)
+            csz = _cat(comp_p[2])
+            cjob = _cat(comp_p[3], np.int64)
+            cdst = _cat(comp_p[5], np.int64)
+            o = np.lexsort((ctie, ct))
+            ct, csz, cjob, cdst = ct[o], csz[o], cjob[o], cdst[o]
+            if float(ct[-1]) > t_max:
+                t_max = float(ct[-1])
+            compj = np.full((nJ, nM), NEG)
+            comp_any = np.full(nJ, NEG)
+            compj[cjob, cdst] = ct
+            comp_any[cjob] = ct
+            cready = ct.copy()
+            cgated = np.zeros(n_comp, dtype=bool)
+            jsort, off = self._vec_by_job(cjob, nJ)
+            for g in runs:
+                gi = g.idx
+                sel = jsort[off[gi]:off[gi + 1]]
+                if not sel.shape[0]:
+                    continue
+                m = float(ct[sel[-1]])
+                if m > g.map_end:
+                    g.map_end = m
+                g.mapped_mb = self._vec_fold(g.mapped_mb, csz[sel])
+                dsel = cdst[sel]
+                np.subtract.at(g.map_unfinished, dsel, 1)
+                g.total_map_unfinished -= int(sel.shape[0])
+                b1 = g.cfg.barriers[1]
+                if b1 == "P":
+                    continue
+                if b1 == "L":
+                    openm = g.map_unfinished[dsel] == 0
+                    cready[sel] = compj[gi, dsel]
+                    cgated[sel] = ~openm
+                    flushj = [int(j) for j in np.unique(dsel[openm])]
+                elif g.total_map_unfinished == 0:  # G, all map work done
+                    cready[sel] = float(comp_any[gi])
+                    flushj = list(range(nM))
+                else:  # G, maps still outstanding
+                    cgated[sel] = True
+                    continue
+                for j in flushj:
+                    if not g.shuf_gated[j]:
+                        continue
+                    trig = float(compj[gi, j]) if b1 == "L" \
+                        else float(comp_any[gi])
+                    for k, sc in g.shuf_gated[j]:
+                        tr = _Transfer(g, sc.size, "shuffle_arrive",
+                                       (g, j, k, sc), trig)
+                        shflush.setdefault((j, k), []).append(
+                            (trig, GTIE + gctr, sc.size, gi, tr))
+                        gctr += 1
+                    g.shuf_gated[j].clear()
+
+            # emissions: completion-major, reducer-minor — exactly
+            # _emit_shuffle's creation order, gated or not
+            alpha_j = np.array([g.p.alpha for g in runs],
+                               dtype=np.float64)
+            ynz = [
+                [(k, g.plan.y[k]) for k in range(nR)
+                 if g.plan.y[k] > 0.0]
+                for g in runs
+            ]
+            fan = np.array([len(z) for z in ynz], dtype=np.int64)
+            maxf = max(int(fan.max()), 1)
+            ynz_k = np.zeros((nJ, maxf), dtype=np.int64)
+            ynz_y = np.zeros((nJ, maxf))
+            for gi, z in enumerate(ynz):
+                for s, (k, yk) in enumerate(z):
+                    ynz_k[gi, s] = k
+                    ynz_y[gi, s] = yk
+            counts = fan[cjob]
+            tot = int(counts.sum())
+            if tot:
+                off_e = np.concatenate(([0], np.cumsum(counts)))
+                repi = np.repeat(np.arange(n_comp), counts)
+                slot = np.arange(tot, dtype=np.int64) - off_e[repi]
+                ejob = cjob[repi]
+                ek = ynz_k[ejob, slot]
+                a_s = alpha_j[ejob] * csz[repi]
+                amt = a_s * ynz_y[ejob, slot]
+                keep = amt > 1e-9
+                eenq = cready[repi][keep]
+                egated = cgated[repi][keep]
+                ejob, ek, amt = ejob[keep], ek[keep], amt[keep]
+                ejv = cdst[repi][keep]
+                n_em = amt.shape[0]
+        if n_em:
+            etie = gen + np.arange(n_em, dtype=np.int64)
+            gen += n_em
+            jsort, off = self._vec_by_job(ejob, nJ)
+            for g in runs:
+                gi = g.idx
+                sel = jsort[off[gi]:off[gi + 1]]
+                if not sel.shape[0]:
+                    continue
+                g.shuf_created_mb = self._vec_fold(
+                    g.shuf_created_mb, amt[sel])
+                ksel = ek[sel]
+                np.add.at(g.shuf_inflight, ksel, 1)
+                g.total_shuf_inflight += int(sel.shape[0])
+                np.add.at(g.reduce_outstanding, ksel, 1)
+            # emissions born behind a shut gate park on it (creation
+            # order), to be flushed by a later segment's trigger
+            for idx in np.flatnonzero(egated):
+                g = runs[int(ejob[idx])]
+                sc = _Chunk(next(self._cid), float(amt[idx]),
+                            int(ejv[idx]))
+                g.shuf_gated[int(ejv[idx])].append((int(ek[idx]), sc))
+
+        # ---- pass 6: shuffle-link serves → shuffle-arrival stream --------
+        skeys = set(shflush)
+        skeys.update((j, k) for (j, k) in sh_keys
+                     if self.shuf_links[j][k].queue)
+        eopen = None
+        if n_em:
+            eopen = np.flatnonzero(~egated)
+            lkey = ejv[eopen] * nR + ek[eopen]
+            skeys.update(
+                (int(kk) // nR, int(kk) % nR) for kk in np.unique(lkey))
+        for (j, k) in sorted(skeys):
+            if eopen is not None:
+                sel = eopen[lkey == j * nR + k]
+                e_ready, e_tie, e_sz = eenq[sel], etie[sel], amt[sel]
+                e_jb = ejob[sel]
+                e_obj = np.full(sel.shape[0], None, dtype=object)
+            else:
+                e_ready, e_tie, e_sz = EMPTYF, EMPTYI, EMPTYF
+                e_jb, e_obj = EMPTYI, EMPTYO
+            fl = shflush.get((j, k))
+            if fl:
+                fc = list(zip(*fl))
+                fo = np.empty(len(fl), dtype=object)
+                fo[:] = fc[4]
+                e_ready = np.concatenate(
+                    (np.asarray(fc[0], dtype=np.float64), e_ready))
+                e_tie = np.concatenate(
+                    (np.asarray(fc[1], dtype=np.int64), e_tie))
+                e_sz = np.concatenate(
+                    (np.asarray(fc[2], dtype=np.float64), e_sz))
+                e_jb = np.concatenate(
+                    (np.asarray(fc[3], dtype=np.int64), e_jb))
+                e_obj = np.concatenate((fo, e_obj))
+            serve_link(self.shuf_links[j][k], e_ready, e_tie, e_sz,
+                       e_jb, e_obj, "shuffle_arrive", j, k, sarr_p)
+
+        # ---- pass 7: shuffle arrivals → reduce barrier gates -------------
+        n_sarr = sum(a.shape[0] for a in sarr_p[0])
+        flushr: Dict[int, list] = {}
+        if n_sarr:
+            st_ = _cat(sarr_p[0])
+            stie = _cat(sarr_p[1], np.int64)
+            samt = _cat(sarr_p[2])
+            sjob = _cat(sarr_p[3], np.int64)
+            sobj = _cat(sarr_p[4], object)
+            ssrc = _cat(sarr_p[5], np.int64)
+            skv = _cat(sarr_p[6], np.int64)
+            o = np.lexsort((stie, st_))
+            st_, stie, samt, sjob = st_[o], stie[o], samt[o], sjob[o]
+            sobj, ssrc, skv = sobj[o], ssrc[o], skv[o]
+            if float(st_[-1]) > t_max:
+                t_max = float(st_[-1])
+            sarrk = np.full((nJ, nR), NEG)
+            sarr_any = np.full(nJ, NEG)
+            sarrk[sjob, skv] = st_
+            sarr_any[sjob] = st_
+            seqr = np.arange(n_sarr, dtype=np.int64)
+            sready = st_.copy()
+            sgated = np.zeros(n_sarr, dtype=bool)
+            jsort, off = self._vec_by_job(sjob, nJ)
+            for g in runs:
+                gi = g.idx
+                sel = jsort[off[gi]:off[gi + 1]]
+                if not sel.shape[0]:
+                    continue
+                m = float(st_[sel[-1]])
+                if m > g.shuffle_end:
+                    g.shuffle_end = m
+                g.shuf_landed_mb = self._vec_fold(
+                    g.shuf_landed_mb, samt[sel])
+                ksel = skv[sel]
+                np.subtract.at(g.shuf_inflight, ksel, 1)
+                g.total_shuf_inflight -= int(sel.shape[0])
+                b2 = g.cfg.barriers[2]
+                if b2 == "P":
+                    continue
+                # _shuffle_final at the trigger: all map work drained in
+                # this segment's past — the trigger must not precede the
+                # last map completion (or push arrival), else the scalar
+                # check failed at its final chance and the gate stays
+                # shut until new work re-triggers it
+                final = (g.total_map_unfinished == 0
+                         and g.total_push_inflight == 0
+                         and not g.dep_pending)
+                if b2 == "L":
+                    openk = (final
+                             & (g.shuf_inflight[ksel] == 0)
+                             & (sarrk[gi, ksel] >= g.map_end)
+                             & (sarrk[gi, ksel] >= g.push_end))
+                    sready[sel] = sarrk[gi, ksel]
+                    sgated[sel] = ~openk
+                    flushk = [int(k) for k in np.unique(ksel[openk])]
+                    trigk = {k: float(sarrk[gi, k]) for k in flushk}
+                elif (final and g.total_shuf_inflight == 0
+                        and float(sarr_any[gi]) >= g.map_end
+                        and float(sarr_any[gi]) >= g.push_end):  # G
+                    trig = float(sarr_any[gi])
+                    sready[sel] = trig
+                    flushk = list(range(nR))
+                    trigk = {k: trig for k in flushk}
+                else:  # G, not final yet
+                    sgated[sel] = True
+                    continue
+                for k in flushk:
+                    if not g.red_gated[k]:
+                        continue
+                    trig = trigk[k]
+                    for sc in g.red_gated[k]:
+                        flushr.setdefault(k, []).append(
+                            (trig, GTIE + gctr, sc.size, gi, sc, sc.src))
+                        gctr += 1
+                    g.red_gated[k].clear()
+
+            # gated shuffle arrivals park at the barrier in stream order
+            for idx in np.flatnonzero(sgated):
+                g = runs[int(sjob[idx])]
+                sc = sobj[idx]
+                if sc is None:
+                    sc = _Chunk(next(self._cid), float(samt[idx]),
+                                int(ssrc[idx]))
+                g.red_gated[int(skv[idx])].append(sc)
+
+        # ---- pass 8: reducer serves → reduce completion stream -----------
+        red_p: Tuple[list, ...] = ([], [], [], [], [], [])
+        if red_b:
+            cols = list(zip(*red_b))
+            red_p[0].append(np.asarray(cols[0], dtype=np.float64))
+            red_p[1].append(np.asarray(cols[1], dtype=np.int64))
+            red_p[2].append(np.asarray(cols[2], dtype=np.float64))
+            red_p[3].append(np.asarray(cols[3], dtype=np.int64))
+            red_p[4].append(np.asarray(cols[4], dtype=np.int64))
+            red_p[5].append(np.asarray(cols[5], dtype=np.int64))
+        rvisit = set(flushr)
+        rvisit.update(k for k in freed_rk if self.reducers[k].queue)
+        if n_sarr:
+            rvisit.update(int(k) for k in np.unique(skv[~sgated]))
+        for k in sorted(rvisit):
+            if n_sarr:
+                sel = np.flatnonzero(~sgated & (skv == k))
+                e_ready, e_tie, e_sz = sready[sel], seqr[sel], samt[sel]
+                e_jb, e_obj, e_src = sjob[sel], sobj[sel], ssrc[sel]
+            else:
+                e_ready, e_tie, e_sz = EMPTYF, EMPTYI, EMPTYF
+                e_jb, e_obj, e_src = EMPTYI, EMPTYO, EMPTYI
+            fl = flushr.get(k)
+            if fl:
+                fc = list(zip(*fl))
+                fo = np.empty(len(fl), dtype=object)
+                fo[:] = fc[4]
+                e_ready = np.concatenate(
+                    (np.asarray(fc[0], dtype=np.float64), e_ready))
+                e_tie = np.concatenate(
+                    (np.asarray(fc[1], dtype=np.int64), e_tie))
+                e_sz = np.concatenate(
+                    (np.asarray(fc[2], dtype=np.float64), e_sz))
+                e_jb = np.concatenate(
+                    (np.asarray(fc[3], dtype=np.int64), e_jb))
+                e_obj = np.concatenate((fo, e_obj))
+                e_src = np.concatenate(
+                    (np.asarray(fc[5], dtype=np.int64), e_src))
+            serve_node(self.reducers[k], e_ready, e_tie, e_sz, e_jb,
+                       e_obj, e_src, slow_r, "r", k, "reduce_done",
+                       red_p)
+
+        # ---- pass 9: reduce ledger ---------------------------------------
+        n_red = sum(a.shape[0] for a in red_p[0])
+        if n_red:
+            rt = _cat(red_p[0])
+            rtie = _cat(red_p[1], np.int64)
+            ramt = _cat(red_p[2])
+            rjob = _cat(red_p[3], np.int64)
+            rsrc = _cat(red_p[4], np.int64)
+            rkv = _cat(red_p[5], np.int64)
+            o = np.lexsort((rtie, rt))
+            rt, ramt, rjob = rt[o], ramt[o], rjob[o]
+            rsrc, rkv = rsrc[o], rkv[o]
+            if float(rt[-1]) > t_max:
+                t_max = float(rt[-1])
+            jsort, off = self._vec_by_job(rjob, nJ)
+            for g in runs:
+                gi = g.idx
+                sel = jsort[off[gi]:off[gi + 1]]
+                if not sel.shape[0]:
+                    continue
+                m = float(rt[sel[-1]])
+                if m > g.reduce_end:
+                    g.reduce_end = m
+                g.reduced_mb = self._vec_fold(g.reduced_mb, ramt[sel])
+                kv = rkv[sel]
+                np.subtract.at(g.reduce_outstanding, kv, 1)
+                for k in np.unique(kv):
+                    ks = sel[kv == k]
+                    g.delivered_out[k] = self._vec_fold(
+                        float(g.delivered_out[k]), ramt[ks])
+                bykey = rsrc[sel] * nR + kv
+                for key in np.unique(bykey):
+                    ks = sel[bykey == key]
+                    src_, k_ = divmod(int(key), nR)
+                    g.reduced_by[src_, k_] = self._vec_fold(
+                        float(g.reduced_by[src_, k_]), ramt[ks])
+
+        self.now = max(self.now, t_max)
+        if self._audit:
+            self._audit_step("vec_drain")
+
 
 # ---------------------------------------------------------------------------
 # entry points
 # ---------------------------------------------------------------------------
-
 _JobEntry = Union[
     Tuple[Platform, ExecutionPlan],
     Tuple[Platform, ExecutionPlan, Optional[SimConfig]],

@@ -230,6 +230,23 @@ class TestOnlineConfig:
         with pytest.raises(ValueError, match="solver_cost_s"):
             OnlineConfig(solver_cost_s=-1.0)
 
+    def test_candidate_pricing_validation(self):
+        assert OnlineConfig().candidate_pricing == "model"
+        ok = OnlineConfig(shared=True, candidate_pricing="fluid")
+        assert ok.candidate_pricing == "fluid"
+        with pytest.raises(ValueError, match="candidate_pricing"):
+            OnlineConfig(shared=True, candidate_pricing="des")
+        # fluid pricing scores the whole co-replanned stack: solo mode
+        # has no stack to score
+        with pytest.raises(ValueError, match="shared=True"):
+            OnlineConfig(candidate_pricing="fluid")
+
+    def test_reactive_fluid_registered(self):
+        assert "reactive_fluid" in available_online_policies()
+        cfg = get_online_config("reactive_fluid")
+        assert cfg.shared and cfg.incremental
+        assert cfg.candidate_pricing == "fluid"
+
 
 class TestSwapCharge:
     def test_identity_swap_costs_solver_only(self):
@@ -302,6 +319,72 @@ class TestInfiniteHysteresisIsStatic:
         # the declined candidates are on the record, with their charges
         assert all(d.charge > 0 for d in report.rejected)
         assert report.plans[0] is plan1 and report.plans[1] is plan2
+
+
+# ---------------------------------------------------------------------------
+# the fluid-priced replan gate
+# ---------------------------------------------------------------------------
+
+
+class TestFluidPricedGate:
+    """`candidate_pricing="fluid"`: the replan gate scores incumbent and
+    candidate stacks with the same float64 fluid rollout and adopts only
+    on a strict fluid improvement — never priced worse than keeping the
+    incumbents, under the pricing in force."""
+
+    @pytest.fixture(scope="class")
+    def report(self):
+        sub = pair_substrate(**{
+            "shuffle[m0->r0]": CapacityTrace.step(500.0, 2.0, 40.0),
+            "shuffle[m1->r0]": CapacityTrace.step(500.0, 2.0, 40.0),
+        })
+        v1 = sub.view(np.array([3000.0, 3000.0]), 1.0, name="steady")
+        v2 = sub.view(np.array([1500.0, 1500.0]), 1.0, name="late")
+        cfg = SimConfig(barriers=BARRIERS_GGL, chunk_mb=128.0)
+        sched = GeoSchedule(
+            [GeoJob(v1).with_plan(uniform_plan(v1), BARRIERS_GGL)]
+        ).with_plans()
+        return sched.run_online(
+            policy="reactive_fluid",
+            arrivals=[Arrival(
+                GeoJob(v2).with_plan(uniform_plan(v2), BARRIERS_GGL),
+                13.7,
+            )],
+            cfg=cfg, n_restarts=2, steps=40,
+        )
+
+    def test_never_fluid_priced_worse(self, report):
+        """THE regression: every adopted stack is strictly better under
+        the fluid rollout than keeping the incumbents; rejected
+        candidates leave the modeled spans untouched."""
+        by_time = {}
+        for d in report.decisions:
+            if d.action in ("swap", "reject", "keep"):
+                by_time.setdefault(d.time, []).append(d)
+        swaps = 0
+        for t, group in by_time.items():
+            adopted = [d for d in group if d.action == "swap"]
+            if adopted:
+                # all-or-nothing stack adoption, priced as a stack
+                swaps += 1
+                assert max(d.modeled_after for d in group) \
+                    < max(d.modeled_before for d in group), t
+            for d in group:
+                if d.action in ("reject", "keep"):
+                    assert d.modeled_after == d.modeled_before, t
+        assert swaps >= 1, "scenario exercised no fluid-priced swap"
+
+    def test_fluid_gate_steers_better_than_frozen(self, report):
+        assert report.makespan_online < report.makespan_static
+
+    def test_decisions_priced_by_the_rollout(self, report):
+        """The drift-aware property shows up in the record: the pricing
+        at the pre-drift arrival already anticipates the t=40 capacity
+        collapse, so the modeled spans dwarf the closed-form residual
+        (which would price ~tens of seconds on the healthy fabric)."""
+        arrival = [d for d in report.decisions
+                   if d.event == "arrival" and d.action != "inject"]
+        assert arrival and all(d.modeled_before > 100.0 for d in arrival)
 
 
 # ---------------------------------------------------------------------------

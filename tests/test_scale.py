@@ -10,9 +10,14 @@ import numpy as np
 import pytest
 
 from repro.analysis.audit import patch_tiebreak
-from repro.core.fluid import FluidSim
+from repro.core.fluid import FluidSim, fluid_score_residual
 from repro.core.plan import uniform_plan
-from repro.core.platform import FailureEvent, planetlab_platform
+from repro.core.platform import (
+    CapacityTrace,
+    FailureEvent,
+    Substrate,
+    planetlab_platform,
+)
 from repro.core.simulate import SimConfig, open_schedule, simulate_schedule
 from repro.core.topology import scale_job_mix, scale_tier_substrate
 
@@ -100,6 +105,66 @@ class TestVectorizedIdentity:
             assert _result_key(permuted) == ref, f"tie-break seed {seed}"
 
 
+class TestSteeredVectorizedIdentity:
+    """Steered engines (``run_until`` / ``snapshot`` / ``swap_plan`` /
+    ``inject``) drain each segment through the batched scans and must stay
+    byte-identical to the scalar steered loop, including under permuted
+    same-timestamp tie-breaks."""
+
+    @pytest.fixture(scope="class")
+    def entries(self):
+        sub = _small_tier()
+        return sub, scale_job_mix(
+            sub, n_jobs=6, seed=11, arrival_spread_s=40.0,
+            base_cfg=SimConfig(chunk_mb=32.0, audit=True),
+        )
+
+    def _steer(self, sub, entries, mode, rng=None):
+        jobs = [(p, pl, dataclasses.replace(c, mode=mode))
+                for p, pl, c in entries]
+        held = jobs.pop()
+        eng = open_schedule(jobs, substrate=sub)
+        if rng is not None:
+            patch_tiebreak(eng, rng)
+        eng.run_until(20.0)
+        eng.snapshot()
+        eng.swap_plan(0, uniform_plan(jobs[0][0]))
+        eng.run_until(60.0, inclusive=True)
+        eng.inject([held])
+        eng.run_until(90.0)
+        return eng.run()
+
+    def test_steered_byte_identical(self, entries):
+        sub, jobs = entries
+        vec = self._steer(sub, jobs, mode="event_vec")
+        assert vec.violations == []
+        ref = _result_key(self._steer(sub, jobs, mode="event"))
+        assert _result_key(vec) == ref
+        for seed in range(5):
+            permuted = self._steer(
+                sub, jobs, mode="event",
+                rng=np.random.default_rng(seed),
+            )
+            assert _result_key(permuted) == ref, f"tie-break seed {seed}"
+
+    def test_mixed_segments_byte_identical(self, entries):
+        """A vec-eligible engine steered across many tiny horizons (each
+        segment re-deciding scalar-vs-vec) still lands on the scalar
+        result byte-for-byte."""
+        sub, jobs = entries
+        jobs = [(p, pl, dataclasses.replace(c, mode="event_vec"))
+                for p, pl, c in jobs]
+        eng = open_schedule(jobs, substrate=sub)
+        for t in np.linspace(5.0, 120.0, 24):
+            eng.run_until(float(t))
+        fine = eng.run()
+        ref = open_schedule(
+            [(p, pl, dataclasses.replace(c, mode="event"))
+             for p, pl, c in jobs],
+            substrate=sub).run()
+        assert _result_key(fine) == _result_key(ref)
+
+
 class TestFluidAccuracy:
     """SimConfig(mode="fluid") reproduces the DES schedule makespan to
     within the documented tolerance, with the conservation auditor green
@@ -156,6 +221,121 @@ class TestFluidAccuracy:
         assert a.violations == []
         assert a.makespan == b.makespan
         assert _result_key(a) == _result_key(b)
+
+
+def traced_substrate(platform):
+    """The platform's substrate with drift traces on every tier: push and
+    shuffle links, a mapper and a reducer all step mid-run, so a parity
+    run crosses several rate-change events in every phase."""
+    return Substrate.of(platform).with_traces({
+        "push[s0->m1]": CapacityTrace.step(
+            float(platform.B_sm[0, 1]), float(platform.B_sm[0, 1]) * 0.25,
+            40.0),
+        "push[s3->m2]": CapacityTrace(
+            times=(0.0, 25.0, 120.0),
+            values=(float(platform.B_sm[3, 2]),
+                    float(platform.B_sm[3, 2]) * 0.3,
+                    float(platform.B_sm[3, 2]) * 2.0)),
+        "map[m0]": CapacityTrace.step(
+            float(platform.C_m[0]), float(platform.C_m[0]) * 0.5, 80.0),
+        "shuffle[m1->r0]": CapacityTrace.step(
+            float(platform.B_mr[1, 0]), float(platform.B_mr[1, 0]) * 0.3,
+            150.0),
+        "reduce[r2]": CapacityTrace.step(
+            float(platform.C_r[2]), float(platform.C_r[2]) * 0.4, 200.0),
+    })
+
+
+class TestFluidTraces:
+    """Fluid mode folds CapacityTrace drift into its event horizon: the
+    ≤2% makespan contract vs the DES holds with rate steps in play, the
+    conservation audit stays green across them, and the steered drain is
+    bit-identical to the unsteered one even when run_until boundaries
+    straddle drift times."""
+
+    @pytest.fixture(scope="class")
+    def traced(self):
+        p = planetlab_platform(4, alpha=1.3, seed=5)
+        sub = traced_substrate(p)
+        return sub, sub.view(p.D, p.alpha), uniform_plan(p)
+
+    @pytest.mark.parametrize(
+        "barriers",
+        ["".join(t) for t in itertools.product("GLP", repeat=3)],
+    )
+    def test_traced_parity_all_27_triples(self, traced, barriers):
+        sub, view, plan = traced
+        des = simulate_schedule([(view, plan, SimConfig(
+            barriers=barriers, chunk_mb=4.0, mode="event_vec",
+            audit=True))], substrate=sub)
+        fluid = simulate_schedule([(view, plan, SimConfig(
+            barriers=barriers, mode="fluid", audit=True))], substrate=sub)
+        assert des.violations == [] and fluid.violations == []
+        rel = abs(fluid.makespan - des.makespan) / des.makespan
+        assert rel <= FLUID_REL_TOL, f"{barriers}: rel error {rel:.4f}"
+
+    def test_traces_change_the_fluid_answer(self, traced):
+        """The drift actually bites: the traced fluid makespan differs
+        from the untraced one (guards against a silently ignored trace)."""
+        sub, view, plan = traced
+        cfg = SimConfig(mode="fluid", audit=True)
+        traced_res = simulate_schedule([(view, plan, cfg)], substrate=sub)
+        p = planetlab_platform(4, alpha=1.3, seed=5)
+        plain = simulate_schedule([(p, plan, cfg)])
+        assert traced_res.makespan != pytest.approx(plain.makespan,
+                                                    rel=1e-6)
+
+    def test_steered_traced_drain_matches_unsteered(self, traced):
+        """run_until boundaries straddling drift steps (before, between
+        and after the trace times) leave the fluid answer unchanged to
+        1e-9 (the fluid steering contract — integration-interval splits
+        only perturb resource stats at the float-addition ulp level)."""
+        sub, view, plan = traced
+        cfg = SimConfig(mode="fluid", audit=True)
+        plain = simulate_schedule([(view, plan, cfg)], substrate=sub)
+        eng = open_schedule([(view, plan, cfg)], substrate=sub)
+        for t in (10.0, 40.0, 60.0, 130.0, 210.0):
+            eng.run_until(t)
+            assert eng.snapshot().time == pytest.approx(t)
+        steered = eng.run()
+        assert steered.violations == []
+        assert steered.makespan == pytest.approx(plain.makespan, rel=1e-9)
+        for sj, pj in zip(steered.jobs, plain.jobs):
+            for f in ("push_end", "map_end", "shuffle_end", "reduce_end"):
+                assert getattr(sj, f) == pytest.approx(getattr(pj, f),
+                                                       rel=1e-9, abs=1e-9)
+
+    def test_traced_contended_mix(self):
+        """A multi-job mix over a drifting scale-tier substrate keeps the
+        schedule-makespan contract."""
+        sub = _small_tier()
+        name_m = "map[m0]"
+        name_l = None
+        # degrade the busiest push link the mix actually uses
+        for name in sub.resources():
+            if name.startswith("push["):
+                name_l = name
+                break
+        traces = {
+            name_m: CapacityTrace.step(float(sub.C_m[0]),
+                                       float(sub.C_m[0]) * 0.4, 30.0),
+            name_l: CapacityTrace.step(float(sub.B_sm.max()),
+                                       float(sub.B_sm.max()) * 0.5, 20.0),
+        }
+        traced = sub.with_traces({k: v for k, v in traces.items() if k})
+        entries = scale_job_mix(traced, n_jobs=6, seed=11,
+                                arrival_spread_s=40.0,
+                                base_cfg=SimConfig(chunk_mb=32.0,
+                                                   audit=True))
+        des = simulate_schedule(
+            [(p, pl, dataclasses.replace(c, mode="event_vec"))
+             for p, pl, c in entries], substrate=traced)
+        fluid = simulate_schedule(
+            [(p, pl, dataclasses.replace(c, mode="fluid"))
+             for p, pl, c in entries], substrate=traced)
+        assert des.violations == [] and fluid.violations == []
+        rel = abs(fluid.makespan - des.makespan) / des.makespan
+        assert rel <= FLUID_REL_TOL
 
 
 class TestFluidRefusals:
@@ -238,6 +418,96 @@ class TestFluidSteering:
         res = eng.run()
         assert res.violations == []
         assert res.makespan > 0
+
+
+class TestFluidScoreResidual:
+    """`fluid_score_residual` — the `candidate_pricing="fluid"` gate's
+    scorer — prices a residual stack with the same dynamics the fluid
+    engine executes, so it must agree with the engine exactly."""
+
+    @pytest.fixture(scope="class")
+    def pair(self):
+        sub = _small_tier()
+        entries = scale_job_mix(sub, n_jobs=3, seed=3,
+                                base_cfg=SimConfig(mode="fluid"))
+        return sub, entries
+
+    @pytest.mark.parametrize("barriers", ["GGG", "PPP", "LGP", "GLL"])
+    def test_fresh_progress_reproduces_full_run(self, pair, barriers):
+        """Zero-progress pricing == the full fluid run, per job, exactly
+        (a fresh job is the special case of an untouched residual)."""
+        from repro.core.makespan import JobProgress
+
+        sub, entries = pair
+        jobs = [(p, pl, dataclasses.replace(c, barriers=barriers,
+                                            start_time=0.0))
+                for p, pl, c in entries]
+        full = FluidSim(sub, jobs).run()
+        spans = fluid_score_residual(
+            sub,
+            [(p, pl, c, JobProgress.fresh(p, job=n))
+             for n, (p, pl, c) in enumerate(jobs)],
+        )
+        np.testing.assert_allclose(
+            spans, [j.reduce_end for j in full.jobs], rtol=1e-9)
+
+    def test_midflight_pricing_matches_engine_remainder(self, pair):
+        """Pricing the incumbent stack at a snapshot reproduces the
+        engine's actual remaining time — the fluid analogue of the
+        model path's fresh-snapshot identity."""
+        sub, entries = pair
+        jobs = [(p, pl, dataclasses.replace(c, start_time=0.0))
+                for p, pl, c in entries]
+        eng = open_schedule(jobs, substrate=sub)
+        eng.run_until(15.0)
+        snap = eng.snapshot()
+        spans = fluid_score_residual(
+            sub,
+            [(p, pl, c, jp) for (p, pl, c), jp in zip(jobs, snap.jobs)],
+            now=15.0,
+        )
+        res = eng.run()
+        np.testing.assert_allclose(
+            spans, [max(j.reduce_end - 15.0, 0.0) for j in res.jobs],
+            rtol=1e-9, atol=1e-9)
+
+    def test_pricing_is_drift_aware(self):
+        """Unlike the closed-form model (which prices against the
+        capacities in force at the decision), the fluid rollout folds the
+        *future* trace steps into its horizon."""
+        p = planetlab_platform(4, alpha=1.3, seed=5)
+        from repro.core.makespan import JobProgress
+
+        plan = uniform_plan(p)
+        cfg = SimConfig(mode="fluid")
+        entry = [(p, plan, cfg, JobProgress.fresh(p))]
+        plain = fluid_score_residual(Substrate.of(p), entry)
+        traced = fluid_score_residual(traced_substrate(p), entry)
+        assert traced[0] != pytest.approx(plain[0], rel=1e-6)
+
+    def test_event_cfg_jobs_are_sanitized(self):
+        """Pricing strips chunk-granular dynamics instead of refusing:
+        an event-mode job with failures/speculation still prices."""
+        from repro.core.makespan import JobProgress
+
+        p = planetlab_platform(2, alpha=1.0, seed=0)
+        cfg = SimConfig(mode="event", speculation=True, chunk_mb=64.0,
+                        failures=(FailureEvent.mapper_kill(0, 10.0),))
+        spans = fluid_score_residual(
+            Substrate.of(p),
+            [(p, uniform_plan(p), cfg, JobProgress.fresh(p))])
+        assert spans[0] > 0.0
+
+    def test_done_job_prices_zero(self, pair):
+        from repro.core.makespan import JobProgress
+
+        sub, entries = pair
+        p, pl, c = entries[0]
+        done = dataclasses.replace(
+            JobProgress.fresh(p),
+            resid_push=np.zeros(sub.nS), done=True)
+        spans = fluid_score_residual(sub, [(p, pl, c, done)])
+        assert spans[0] == 0.0
 
 
 class TestHotspots:

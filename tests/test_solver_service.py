@@ -227,6 +227,50 @@ class TestIncrementalReplan:
         d = _delta(before)
         assert d["compiles"] == 0, d
 
+    def test_shared_incremental_budget_divides_by_stack_size(self):
+        """replan_schedule's incremental polish pays ONE anneal budget for
+        the whole stack: the per-job step budget divided by the
+        power-of-two-quantized live-job count, floored at 8."""
+        from repro.core.optimize import (
+            _incremental_budget,
+            _shared_incremental_budget,
+        )
+
+        n, s = _incremental_budget(8, 200)
+        assert (n, s) == (4, 25)
+        assert _shared_incremental_budget(8, 200, 1) == (4, 25)
+        assert _shared_incremental_budget(8, 200, 2) == (4, 12)
+        # quantized divisor: 3 and 4 jobs land on the same static budget
+        assert _shared_incremental_budget(8, 200, 3) \
+            == _shared_incremental_budget(8, 200, 4) == (4, 8)
+        # the floor: the stack can grow without the budget vanishing
+        assert _shared_incremental_budget(8, 200, 100) == (4, 8)
+        assert _shared_incremental_budget(8, 1600, 2) == (4, 100)
+
+    def test_shared_incremental_schedule_warm_cache_and_not_worse(self):
+        """Counter-verified (the satellite acceptance): a repeat
+        incremental co-replan at the same stack size is a pure warm hit —
+        zero new compiles — and the shared budget keeps the float64
+        never-modeled-worse selection."""
+        from repro.core.makespan import CostModel as _CM
+        from repro.core.optimize import replan_schedule
+
+        view = _small_platform("svc_sched_budget")
+        sub = view.substrate
+        sib = sub.view(np.array([4000.0, 4000.0]), 1.0, name="svc_bud_b")
+        plans = [uniform_plan(view), uniform_plan(sib)]
+        fresh = [JobProgress.fresh(view, 0), JobProgress.fresh(sib, 1)]
+        opts = dict(barriers=BARRIERS_GGL, n_restarts=4, steps=1600)
+        res = replan_schedule(sub, plans, fresh, seed=1, incremental=True,
+                              **opts)
+        assert res.makespan <= max(res.before) + 1e-9
+        before = _snap()
+        res2 = replan_schedule(sub, plans, fresh, seed=2,
+                               incremental=True, **opts)
+        d = _delta(before)
+        assert d["compiles"] == 0, d
+        assert res2.makespan <= max(res2.before) + 1e-9
+
     def test_incremental_starts_from_incumbent_basin(self):
         """A near-optimal incumbent survives the low-temperature polish:
         the result is the incumbent or something modeled at least as
